@@ -1,0 +1,7 @@
+"""Re-export: the HLO analyzer lives in repro.launch.hlo_analysis."""
+from repro.launch.hlo_analysis import (  # noqa: F401
+    Stats,
+    analysis_dict,
+    analyze,
+    parse_module,
+)

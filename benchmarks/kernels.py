@@ -1,0 +1,48 @@
+"""Kernel micro-benchmarks: backend comparison on PPAC-shaped workloads."""
+import time
+
+import jax
+import numpy as np
+
+from repro.core.formats import pack_bits
+from repro.kernels.binary_mvp.kernel import binary_matmul_packed
+from repro.kernels.binary_mvp.ops import hamming_similarity
+from repro.kernels.binary_mvp.ref import binary_matmul_packed_ref
+from repro.kernels.bitserial_mvp.ops import ppac_matmul
+
+
+def _t(fn, reps=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    for b, m, n in [(32, 256, 256), (128, 1024, 1024)]:
+        xp = pack_bits(rng.integers(0, 2, (b, n)))
+        ap = pack_bits(rng.integers(0, 2, (m, n)))
+        ops = 2 * b * m * n
+        t_ref = _t(lambda: binary_matmul_packed_ref(xp, ap, op="xor"))
+        t_mxu = _t(lambda: hamming_similarity(xp, ap, n=n, backend="mxu"))
+        rows.append((f"kern_binary_ref_{b}x{m}x{n}", t_ref,
+                     f"gops={ops / t_ref / 1e3:.1f}"))
+        rows.append((f"kern_binary_mxu_{b}x{m}x{n}", t_mxu,
+                     f"gops={ops / t_mxu / 1e3:.1f}"))
+        if n <= 256:  # interpret-mode Pallas is slow; keep it small
+            t_pal = _t(lambda: binary_matmul_packed(xp, ap, op="xor",
+                                                    interpret=True), reps=2)
+            rows.append((f"kern_binary_pallas_interp_{b}x{m}x{n}", t_pal,
+                         "interpret=True (CPU correctness mode)"))
+    for k, l in [(4, 4), (8, 8)]:
+        xi = rng.integers(-(2**(l - 1)), 2**(l - 1), (32, 512))
+        ai = rng.integers(-(2**(k - 1)), 2**(k - 1), (512, 512))
+        t_mxu = _t(lambda: ppac_matmul(xi, ai, k_bits=k, l_bits=l,
+                                       backend="mxu"))
+        rows.append((f"kern_bitserial_mxu_k{k}l{l}", t_mxu,
+                     f"cycles_equiv={k * l}"))
+    return rows

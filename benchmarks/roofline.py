@@ -1,0 +1,65 @@
+"""Roofline table: aggregates results/dryrun/*.json into the §Roofline CSV.
+
+Each dry-run cell already carries the three terms (compute/memory/
+collective seconds per step, per chip) computed from the partitioned HLO
+by repro.launch.hlo_analysis. This module formats the table and emits a
+markdown version for EXPERIMENTS.md."""
+import glob
+import json
+import os
+
+COLS = ["arch", "shape", "pods", "chips", "dominant", "compute_ms",
+        "memory_ms", "collective_ms", "mem_GiB_chip", "useful_flop_ratio",
+        "roofline_fraction"]
+
+
+def load_cells(outdir="results/dryrun", tag=""):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("tag", "") != tag:
+            continue
+        cells.append(d)
+    return cells
+
+
+def row(d):
+    r = d["roofline"]
+    return [d["arch"], d["shape"], 2 if d["multi_pod"] else 1, d["chips"],
+            r["dominant"].replace("_s", ""),
+            round(r["compute_s"] * 1e3, 3), round(r["memory_s"] * 1e3, 3),
+            round(r["collective_s"] * 1e3, 3),
+            round(d["memory"]["total_per_chip"] / 2**30, 2),
+            round(r["useful_flop_ratio"], 3),
+            round(r["roofline_fraction"], 4)]
+
+
+def run():
+    cells = load_cells()
+    rows = []
+    for d in cells:
+        r = d["roofline"]
+        rows.append((f"roofline_{d['arch']}_{d['shape']}_"
+                     f"{'pod2' if d['multi_pod'] else 'pod1'}",
+                     max(r["compute_s"], r["memory_s"],
+                         r["collective_s"]) * 1e6,
+                     f"dominant={r['dominant']};frac="
+                     f"{r['roofline_fraction']:.4f}"))
+    return rows
+
+
+def markdown_table(outdir="results/dryrun", tag="", pods=None):
+    cells = load_cells(outdir, tag)
+    if pods is not None:
+        cells = [c for c in cells if (2 if c["multi_pod"] else 1) == pods]
+    cells.sort(key=lambda d: (d["arch"], d["shape"], d["multi_pod"]))
+    lines = ["| " + " | ".join(COLS) + " |",
+             "|" + "---|" * len(COLS)]
+    for d in cells:
+        lines.append("| " + " | ".join(str(x) for x in row(d)) + " |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

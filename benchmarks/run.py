@@ -1,0 +1,24 @@
+"""Benchmark harness — one module per paper table. Prints
+``name,us_per_call,derived`` CSV. Table functions assert our analytical
+reproductions match the paper's published numbers before printing."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import kernels, roofline, table2, table3, table4
+
+    print("name,us_per_call,derived")
+    for mod in (table2, table3, table4, kernels, roofline):
+        try:
+            rows = mod.run()
+        except Exception as e:  # pragma: no cover
+            print(f"{mod.__name__},ERROR,{e!r}", file=sys.stderr)
+            raise
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""GF(2) MVPs for cryptography + coding (paper §III-D) and PLA mode (§III-E).
+
+1. AES S-box affine transform: the finishing step of SubBytes is a GF(2)
+   matrix-vector product y = A·x ⊕ c — bit-true LSB arithmetic that
+   mixed-signal PIM cannot guarantee (the paper's §III-D argument).
+2. LDPC parity check: syndrome s = H·c over GF(2); a codeword is valid iff
+   s = 0.
+3. PLA: a 2-level Boolean function evaluated via min-term rows + bank OR.
+
+Run: PYTHONPATH=src python examples/gf2_crypto.py
+"""
+import numpy as np
+
+from repro.core.formats import pack_bits
+from repro.kernels import gf2_matmul, pla_eval
+
+rng = np.random.default_rng(2)
+
+# --- 1. AES S-box affine map --------------------------------------------------
+# y_i = x_i ^ x_{(i+4)%8} ^ x_{(i+5)%8} ^ x_{(i+6)%8} ^ x_{(i+7)%8} ^ c_i
+A_aes = np.zeros((8, 8), np.uint8)
+for i in range(8):
+    for j in (0, 4, 5, 6, 7):
+        A_aes[i, (i + j) % 8] = 1
+c_aes = np.array([1, 1, 0, 0, 0, 1, 1, 0], np.uint8)  # 0x63 bits (LSB first)
+
+xs = rng.integers(0, 2, (16, 8)).astype(np.uint8)     # 16 input bytes
+y = np.asarray(gf2_matmul(pack_bits(xs), pack_bits(A_aes), n=8)) ^ c_aes[None, :]
+ref = (xs @ A_aes.T % 2) ^ c_aes[None, :]
+assert np.array_equal(y, ref)
+print("AES affine transform over GF(2): bit-true for all 16 bytes")
+
+# --- 2. LDPC parity check ------------------------------------------------------
+n, k = 96, 48
+# sparse parity matrix H = [P | Hi] with Hi unit-lower-triangular
+# (always invertible over GF(2))
+Hp = (rng.random((n - k, k)) < 0.08).astype(np.uint8)
+Hi = np.tril((rng.random((n - k, n - k)) < 0.1), -1).astype(np.uint8) \
+    | np.eye(n - k, dtype=np.uint8)
+H = np.concatenate([Hp, Hi], axis=1)
+
+
+def gf2_inv(M):
+    M = M.copy() % 2
+    nn = M.shape[0]
+    I = np.eye(nn, dtype=np.uint8)
+    A = np.concatenate([M, I], 1)
+    for col in range(nn):
+        piv = next(r for r in range(col, nn) if A[r, col])
+        A[[col, piv]] = A[[piv, col]]
+        for r in range(nn):
+            if r != col and A[r, col]:
+                A[r] ^= A[col]
+    return A[:, nn:]
+
+
+Hi_inv = gf2_inv(Hi)
+P = (Hi_inv @ Hp) % 2               # parity bits = P @ message
+msgs = rng.integers(0, 2, (8, k)).astype(np.uint8)
+codewords = np.concatenate([msgs, (msgs @ P.T) % 2], axis=1)
+
+syndromes = np.asarray(gf2_matmul(pack_bits(codewords), pack_bits(H), n=n))
+assert not syndromes.any(), "valid codewords must have zero syndrome"
+bad = codewords.copy()
+bad[:, 3] ^= 1                      # single bit error
+syn_bad = np.asarray(gf2_matmul(pack_bits(bad), pack_bits(H), n=n))
+assert syn_bad.any(axis=1).all(), "errors must be detected"
+print(f"LDPC parity check via GF(2) MVP: 8/8 valid accepted, "
+      f"8/8 corrupted detected")
+
+# --- 3. PLA: full-adder sum & carry as two banks -------------------------------
+# variables: [a, b, cin, ~a, ~b, ~cin]; bank of 16 rows per function
+def minterm(bits):  # bits: (a,b,cin) pattern that makes the row fire
+    row = np.zeros(6, np.uint8)
+    for i, v in enumerate(bits):
+        row[i if v else i + 3] = 1
+    return row
+
+
+rows = np.zeros((32, 6), np.uint8)
+nvars = np.full(32, 7, np.int32)
+sum_terms = [(0, 0, 1), (0, 1, 0), (1, 0, 0), (1, 1, 1)]     # odd parity
+carry_terms = [(1, 1, 0), (1, 0, 1), (0, 1, 1), (1, 1, 1)]
+for i, t in enumerate(sum_terms):
+    rows[i] = minterm(t)
+    nvars[i] = 3
+for i, t in enumerate(carry_terms):
+    rows[16 + i] = minterm(t)
+    nvars[16 + i] = 3
+
+for a in (0, 1):
+    for b in (0, 1):
+        for cin in (0, 1):
+            x = np.array([[a, b, cin, 1 - a, 1 - b, 1 - cin]], np.uint8)
+            out = np.asarray(pla_eval(pack_bits(x), pack_bits(rows), nvars,
+                                      n=6, rows_per_bank=16))[0]
+            assert out[0] == (a + b + cin) % 2
+            assert out[1] == (a + b + cin) // 2
+print("PLA full adder (2 banks: sum, carry): all 8 input rows exact")
+print("OK")

@@ -1,0 +1,50 @@
+"""LSH approximate-nearest-neighbor via PPAC similarity-match CAM (§III-A).
+
+Random-hyperplane LSH maps float vectors to binary codes; Hamming
+similarity between codes approximates cosine similarity. PPAC computes all
+M similarities per query in one emulated cycle (one kernel call batched
+over queries here), and the programmable threshold delta turns it into a
+similarity-match CAM.
+
+Run: PYTHONPATH=src python examples/lsh_lookup.py
+"""
+import numpy as np
+
+from repro.core.formats import pack_bits
+from repro.kernels import hamming_similarity
+
+rng = np.random.default_rng(1)
+D, BITS, M, Q = 64, 256, 2048, 32
+
+# database + queries: clustered vectors so neighbors exist
+centers = rng.standard_normal((32, D))
+db = (centers[rng.integers(0, 32, M)] + 0.3 * rng.standard_normal((M, D)))
+queries_idx = rng.integers(0, M, Q)
+queries = db[queries_idx] + 0.15 * rng.standard_normal((Q, D))
+
+# random-hyperplane LSH
+planes = rng.standard_normal((D, BITS))
+db_codes = (db @ planes > 0).astype(np.uint8)
+q_codes = (queries @ planes > 0).astype(np.uint8)
+
+# PPAC: all M Hamming similarities per query
+hs = np.asarray(hamming_similarity(pack_bits(q_codes), pack_bits(db_codes),
+                                   n=BITS))
+pred = hs.argmax(1)
+
+# ground truth by cosine similarity
+db_n = db / np.linalg.norm(db, axis=1, keepdims=True)
+q_n = queries / np.linalg.norm(queries, axis=1, keepdims=True)
+true = (q_n @ db_n.T).argmax(1)
+
+recall1 = float((pred == true).mean())
+# similarity-match CAM: candidate set via threshold delta
+delta = int(BITS * 0.75)
+cand_sizes = (hs >= delta).sum(1)
+hit = float(np.mean([true[i] in np.flatnonzero(hs[i] >= delta)
+                     for i in range(Q)]))
+print(f"recall@1 (PPAC LSH vs exact cosine): {recall1:.2f}")
+print(f"similarity-match CAM delta={delta}: mean candidates "
+      f"{cand_sizes.mean():.1f}/{M}, true-neighbor hit rate {hit:.2f}")
+assert recall1 >= 0.9, "LSH via Hamming similarity should recover neighbors"
+print("OK")

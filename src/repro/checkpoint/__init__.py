@@ -1,0 +1,1 @@
+from .ckpt import all_steps, latest_step, restore, save  # noqa: F401

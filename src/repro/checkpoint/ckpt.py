@@ -1,0 +1,112 @@
+"""Fault-tolerant, mesh-elastic checkpointing.
+
+Design (production constraints, scaled down to one host):
+  * atomic: write to ``step_XXXX.tmp/`` then rename — a crash mid-write
+    never corrupts the latest checkpoint;
+  * self-describing: a JSON manifest stores the tree structure, shapes,
+    dtypes, step and data-iterator state;
+  * mesh-elastic: arrays are saved unsharded-logical (gathered); restore
+    accepts any target mesh/sharding — ``restore(..., shardings=...)``
+    device_puts each leaf with the *new* mesh's NamedSharding, so a job
+    can restart on a different pod count (elastic scaling);
+  * bounded retention: ``keep`` most recent checkpoints are retained.
+
+On a real multi-host pod this writes per-host shard files; the single-host
+container writes one file per leaf group (npz).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, state, *, extra: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    """Atomically save `state` (pytree) at `step`."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = _flatten_with_paths(state)
+    arrays = {k: np.asarray(v) for k, v in leaves.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                 for k, a in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+
+    # retention
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+    return final
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template, *, shardings=None):
+    """Restore into the structure of `template`. If `shardings` (matching
+    pytree of jax.sharding.Sharding) is given, leaves are placed with the
+    *target* sharding — this is the elastic-re-mesh path."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    leaves_t, treedef = jax.tree_util.tree_flatten(template)
+    keys = list(_flatten_with_paths(template).keys())
+    assert len(keys) == len(leaves_t)
+    new_leaves = []
+    flat_sh = (jax.tree_util.tree_flatten(shardings)[0]
+               if shardings is not None else [None] * len(keys))
+    for key, tleaf, sh in zip(keys, leaves_t, flat_sh):
+        arr = data[key]
+        want = tuple(getattr(tleaf, "shape", arr.shape))
+        assert tuple(arr.shape) == want, (key, arr.shape, want)
+        if sh is not None:
+            new_leaves.append(jax.device_put(arr, sh))
+        else:
+            new_leaves.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(new_leaves), manifest["extra"]

@@ -1,0 +1,14 @@
+"""Arch configs: the ten assigned architectures + the paper's PPAC arrays."""
+from .base import (  # noqa: F401
+    ARCH_IDS,
+    SHAPES,
+    HybridConfig,
+    InputShape,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    PPACModeConfig,
+    SSMConfig,
+    cells,
+    load_arch,
+)

@@ -1,0 +1,209 @@
+"""Config system: model/arch configs, input shapes, and run options.
+
+Every assigned architecture provides a ``ModelConfig`` (full size, used only
+by the AOT dry-run) plus a ``smoke()`` reduction of the same family for CPU
+tests. Shapes are the assignment's four (seq_len, global_batch) cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0
+    first_dense_layers: int = 0
+    d_ff_dense: int = 0            # FFN width of the leading dense layers
+    capacity_factor: float = 1.25
+    group_size: int = 512          # GShard dispatch group size (tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0           # 0 = no q compression
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk_size: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style: SSM backbone + a single shared attention+MLP block
+    applied every ``shared_every`` layers (weights shared across uses)."""
+    shared_every: int = 6
+    shared_d_ff: int = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class PPACModeConfig:
+    """Paper-technique integration: run projections through the PPAC engine."""
+    enabled: bool = False
+    weight_bits: int = 4           # K (paper row-ALU supports up to 4)
+    act_bits: int = 4              # L
+    weight_format: str = "int"
+    act_format: str = "int"
+    backend: str = "mxu"           # 'pallas' | 'mxu' | 'ref'
+    min_features: int = 512        # only quantize projections at least this big
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    rope_theta: float = 1e4
+    qkv_bias: bool = False
+    sliding_window: int = 0        # 0 = full attention
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    frontend: str = "none"         # none | audio | vision
+    frontend_tokens: int = 0       # patch/frame positions taken out of seq
+    ppac: PPACModeConfig = PPACModeConfig()
+    dtype: str = "bfloat16"
+    # attention chunking (memory-efficient scan attention)
+    q_chunk: int = 512
+    kv_dtype: str = "bfloat16"     # KV-cache store: bfloat16 | int8
+    attn_blocking: str = "scan"    # scan | triangle (skip masked-out KV)
+    scores_dtype: str = "float32"  # attention probability boundary dtype
+    remat: str = "full"            # full | dots | none
+    sub_quadratic: bool = False    # eligible for long_500k
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, L = self.d_model, self.n_layers
+        n = self.vocab * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            s = self.ssm
+            d_in = s.expand * d
+            conv_dim = d_in + 2 * s.n_groups * s.d_state
+            nheads = d_in // s.head_dim
+            per = (d * (2 * d_in + 2 * s.n_groups * s.d_state + nheads)
+                   + conv_dim * s.d_conv + d_in * d + 2 * nheads + d_in)
+            return n + L * per
+        att = d * (self.n_heads * self.hd) + 2 * d * (self.n_kv_heads * self.hd) \
+            + (self.n_heads * self.hd) * d
+        if self.mla:
+            m = self.mla
+            att = (d * m.kv_lora_rank
+                   + m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                   + d * self.n_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                   + d * m.qk_rope_head_dim
+                   + self.n_heads * m.v_head_dim * d)
+        if self.moe:
+            mo = self.moe
+            ffn_moe = 3 * d * mo.d_ff_expert * (mo.num_experts + mo.num_shared) \
+                + d * mo.num_experts
+            ffn_dense = 3 * d * (mo.d_ff_dense or self.d_ff)
+            nl_moe = L - mo.first_dense_layers
+            return n + nl_moe * (att + ffn_moe) + mo.first_dense_layers * (att + ffn_dense)
+        ffn = 3 * d * self.d_ff
+        per = att + ffn
+        if self.family == "hybrid":
+            s = self.ssm
+            d_in = s.expand * d
+            conv_dim = d_in + 2 * s.n_groups * s.d_state
+            nheads = d_in // s.head_dim
+            ssm_per = (d * (2 * d_in + 2 * s.n_groups * s.d_state + nheads)
+                       + conv_dim * s.d_conv + d_in * d + 2 * nheads + d_in)
+            shared = att + 3 * d * self.hybrid.shared_d_ff
+            return n + L * ssm_per + shared
+        return n + L * per
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        d, L, mo = self.d_model, self.n_layers, self.moe
+        att = d * (self.n_heads * self.hd) + 2 * d * (self.n_kv_heads * self.hd) \
+            + (self.n_heads * self.hd) * d
+        if self.mla:
+            m = self.mla
+            att = (d * m.kv_lora_rank
+                   + m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                   + d * self.n_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                   + d * m.qk_rope_head_dim
+                   + self.n_heads * m.v_head_dim * d)
+        ffn_act = 3 * d * mo.d_ff_expert * (mo.top_k + mo.num_shared)
+        n = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return n + L * (att + ffn_act)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "zamba2_1p2b",
+    "musicgen_medium",
+    "h2o_danube3_4b",
+    "stablelm_12b",
+    "qwen2_72b",
+    "smollm_360m",
+    "deepseek_v2_lite_16b",
+    "kimi_k2_1t_a32b",
+    "llava_next_34b",
+    "mamba2_370m",
+]
+
+
+def load_arch(arch_id: str):
+    """Returns the config module for an arch id (full() and smoke())."""
+    arch_id = arch_id.replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells, minus assignment-mandated skips."""
+    out = []
+    for a in ARCH_IDS:
+        cfg = load_arch(a).full()
+        for s in SHAPES.values():
+            skip = s.name == "long_500k" and not cfg.sub_quadratic
+            if include_skipped or not skip:
+                out.append((a, s.name, skip))
+    return out

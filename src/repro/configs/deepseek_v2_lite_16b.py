@@ -1,0 +1,35 @@
+"""deepseek-v2-lite-16b — MoE with multi-head latent attention (MLA).
+
+27L d_model=2048 16H d_ff_expert=1408 vocab=102400, MLA kv_lora=512,
+MoE 64 routed top-6 + 2 shared, first layer dense (d_ff 10944)
+[arXiv:2405.04434; hf]. Full attention -> long_500k skipped.
+"""
+from .base import MLAConfig, MoEConfig, ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b", family="moe",
+        n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=10944, vocab=102400,
+        mla=MLAConfig(kv_lora_rank=512, q_lora_rank=0,
+                      qk_nope_head_dim=128, qk_rope_head_dim=64,
+                      v_head_dim=128),
+        moe=MoEConfig(num_experts=64, top_k=6, d_ff_expert=1408,
+                      num_shared=2, first_dense_layers=1, d_ff_dense=10944,
+                      capacity_factor=1.25, group_size=512),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="dsv2lite-smoke", family="moe",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=160, vocab=256,
+        mla=MLAConfig(kv_lora_rank=32, qk_nope_head_dim=16,
+                      qk_rope_head_dim=8, v_head_dim=16),
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64,
+                      num_shared=1, first_dense_layers=1, d_ff_dense=160,
+                      capacity_factor=2.0, group_size=64),
+        q_chunk=16,
+    )

@@ -1,0 +1,25 @@
+"""h2o-danube-3-4b — dense llama/mistral mix with sliding-window attention.
+
+24L d_model=3840 32H (GQA kv=8) d_ff=10240 vocab=32000
+[arXiv:2401.16818; unverified]. SWA (window 4096) -> sub-quadratic ->
+runs long_500k with a rolling KV cache.
+"""
+from .base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="h2o-danube-3-4b", family="dense",
+        n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8,
+        d_ff=10240, vocab=32000, sliding_window=4096,
+        sub_quadratic=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="danube-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=128, sliding_window=32,
+        q_chunk=16, sub_quadratic=True,
+    )

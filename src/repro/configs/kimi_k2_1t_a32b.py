@@ -1,0 +1,31 @@
+"""kimi-k2-1t-a32b — trillion-parameter MoE (paper-table config).
+
+61L d_model=7168 64H (GQA kv=8, per the assignment line — the production
+K2 uses MLA; we follow the assignment) d_ff_expert=2048 vocab=163840,
+MoE 384 routed top-8 + 1 shared, first layer dense
+[arXiv:2501.kimi2; unverified]. Full attention -> long_500k skipped.
+"""
+from .base import MoEConfig, ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b", family="moe",
+        n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+        d_ff=18432, vocab=163840, head_dim=112,
+        moe=MoEConfig(num_experts=384, top_k=8, d_ff_expert=2048,
+                      num_shared=1, first_dense_layers=1, d_ff_dense=18432,
+                      capacity_factor=1.25, group_size=512),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-smoke", family="moe",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=192, vocab=256, head_dim=16,
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32,
+                      num_shared=1, first_dense_layers=1, d_ff_dense=192,
+                      capacity_factor=2.0, group_size=64),
+        q_chunk=16,
+    )

@@ -1,0 +1,27 @@
+"""llava-next-34b — VLM backbone (anyres tiling) over a dense decoder.
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000
+[hf:llava-hf/llava-v1.6; unverified]. Vision tower is a stub per the
+assignment: input_specs provides precomputed patch embeddings for
+5 anyres tiles x 576 patches = 2880 patch positions, prepended to the
+text tokens. Full attention -> long_500k skipped.
+"""
+from .base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b", family="vlm",
+        n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+        d_ff=20480, vocab=64000, head_dim=128,
+        frontend="vision", frontend_tokens=2880,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llava-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=128, frontend="vision", frontend_tokens=8,
+        q_chunk=16,
+    )

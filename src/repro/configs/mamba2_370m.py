@@ -1,0 +1,28 @@
+"""mamba2-370m — attention-free SSM (state-space duality).
+
+48L d_model=1024 (attn-free) vocab=50280 ssm_state=128
+[arXiv:2405.21060; unverified]. O(1)-state decode -> runs long_500k.
+"""
+from .base import ModelConfig, SSMConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-370m", family="ssm",
+        n_layers=48, d_model=1024, n_heads=1, n_kv_heads=1,
+        d_ff=0, vocab=50280, head_dim=64,
+        ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64,
+                      n_groups=1, chunk_size=256),
+        sub_quadratic=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-smoke", family="ssm",
+        n_layers=3, d_model=64, n_heads=1, n_kv_heads=1,
+        d_ff=0, vocab=128, head_dim=16,
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16,
+                      n_groups=1, chunk_size=8),
+        sub_quadratic=True,
+    )

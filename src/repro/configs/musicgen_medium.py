@@ -1,0 +1,25 @@
+"""musicgen-medium — decoder-only transformer over EnCodec tokens.
+
+48L d_model=1536 24H (kv=24) d_ff=6144 vocab=2048 [arXiv:2306.05284; hf].
+Audio frontend is a stub: input_specs provides precomputed frame embeddings.
+Pure full attention -> long_500k skipped per assignment.
+"""
+from .base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium", family="audio",
+        n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24,
+        d_ff=6144, vocab=2048, frontend="audio",
+        sub_quadratic=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-smoke", family="audio",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=64, frontend="audio",
+        q_chunk=16,
+    )

@@ -1,0 +1,23 @@
+"""The paper's own PPAC array configurations (Table II) as named configs.
+
+These drive the emulator/kernels in benchmarks and examples — the PPAC
+analogue of an "architecture config" for the accelerator itself.
+"""
+from ..core.ppac import PPACConfig
+
+# Table II: four implemented arrays (M x N, banks of 16 rows, V=16 subrows)
+PPAC_16x16 = PPACConfig(m=16, n=16, rows_per_bank=16, subrow_bits=16)
+PPAC_16x256 = PPACConfig(m=16, n=256, rows_per_bank=16, subrow_bits=16)
+PPAC_256x16 = PPACConfig(m=256, n=16, rows_per_bank=16, subrow_bits=16)
+PPAC_256x256 = PPACConfig(m=256, n=256, rows_per_bank=16, subrow_bits=16)
+
+ARRAYS = {
+    "16x16": PPAC_16x16,
+    "16x256": PPAC_16x256,
+    "256x16": PPAC_256x16,
+    "256x256": PPAC_256x256,
+}
+
+# paper clock frequencies (GHz) per array — Table II
+CLOCKS_GHZ = {"16x16": 1.116, "16x256": 0.979, "256x16": 0.824,
+              "256x256": 0.703}

@@ -1,0 +1,25 @@
+"""smollm-360m — small llama-arch dense transformer.
+
+32L d_model=960 15H (GQA kv=5) d_ff=2560 vocab=49152
+[hf:HuggingFaceTB/SmolLM-360M; hf]. 15 heads is not divisible by the
+16-way model axis — GSPMD pads the sharded head dim (noted in DESIGN.md).
+Full attention -> long_500k skipped.
+"""
+from .base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-360m", family="dense",
+        n_layers=32, d_model=960, n_heads=15, n_kv_heads=5,
+        d_ff=2560, vocab=49152, head_dim=64, tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-smoke", family="dense",
+        n_layers=2, d_model=60, n_heads=3, n_kv_heads=1,
+        d_ff=128, vocab=128, head_dim=20, tie_embeddings=True,
+        q_chunk=16,
+    )

@@ -1,0 +1,22 @@
+"""stablelm-12b — dense transformer.
+
+40L d_model=5120 32H (GQA kv=8) d_ff=13824 vocab=100352
+[hf:stabilityai/stablelm-2-12b family; hf]. Full attention -> long_500k skipped.
+"""
+from .base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-12b", family="dense",
+        n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+        d_ff=13824, vocab=100352,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=160, vocab=256, q_chunk=16,
+    )

@@ -1,0 +1,30 @@
+"""zamba2-1.2b — hybrid Mamba2 backbone + shared attention blocks.
+
+38L d_model=2048 32H (MHA kv=32) d_ff=8192 vocab=32000 ssm_state=64
+[arXiv:2411.15242; hf]. Sub-quadratic (SSM backbone) -> runs long_500k.
+"""
+from .base import HybridConfig, ModelConfig, SSMConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b", family="hybrid",
+        n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32,
+        d_ff=8192, vocab=32000,
+        ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64,
+                      n_groups=1, chunk_size=256),
+        hybrid=HybridConfig(shared_every=6, shared_d_ff=8192),
+        sub_quadratic=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-smoke", family="hybrid",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=128,
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16,
+                      n_groups=1, chunk_size=8),
+        hybrid=HybridConfig(shared_every=2, shared_d_ff=128),
+        q_chunk=16, sub_quadratic=True,
+    )

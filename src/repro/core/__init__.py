@@ -1,0 +1,33 @@
+"""PPAC core: number formats, cycle-exact array emulator, quantizers, cost model."""
+from .cost_model import (  # noqa: F401
+    TABLE_II,
+    TABLE_III,
+    TPURoofline,
+    compare_vs_compute_cache,
+    energy_per_op_fj,
+    mode_throughput_gmvps,
+    ops_per_cycle,
+    peak_throughput_tops,
+)
+from .formats import (  # noqa: F401
+    NumberFormat,
+    fmt,
+    from_bitplanes,
+    pack_bits,
+    pack_planes,
+    packed_width,
+    plane_weights,
+    popcount,
+    to_bitplanes,
+    unpack_bits,
+    value_range,
+)
+from .ppac import (  # noqa: F401
+    PPACArray,
+    PPACConfig,
+    cycles_compute_cache_inner_product,
+    cycles_multibit_mvp,
+    hamming_similarity_ref,
+    multibit_mvp_ref,
+)
+from .quant import binarize_pm1, dequantize, fake_quant, quantize  # noqa: F401

@@ -1,0 +1,117 @@
+"""PPAC engine: the paper's technique as a first-class projection substrate.
+
+A ``PPACLinear`` projection can run in three regimes:
+
+  * ``float``  — plain bf16 matmul (baseline path).
+  * ``qat``    — training-time fake quantization into the PPAC number
+                 formats (Table I) with straight-through gradients; the
+                 network learns weights executable on the PPAC engine.
+  * ``serve``  — weights are *stored* quantized (the PPAC premise: the
+                 matrix A is resident in low precision while vectors
+                 stream, §IV-A) and the matmul is exact integer arithmetic.
+
+Serving weight containers (memory-roofline lever, see EXPERIMENTS.md §Perf):
+
+  bf16     : [in, out] bf16                       (baseline)
+  int8     : [in, out] int8 + scale               (K<=8)
+  packed4  : [in, out/2] uint8, two nibbles       (K<=4; unpacked via shifts)
+  packed1  : [out, in/32] uint32 bitplanes        (K=1; XNOR-popcount kernel)
+
+All integer paths are bit-true (int32 accumulation) — the property the paper
+holds over mixed-signal PIM (§III-D).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.binary_mvp.ops import inner_product_pm1
+from .formats import pack_bits
+from .quant import binarize_pm1, fake_quant, quantize
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantContainer:
+    """Resident quantized weight: arrays are pytree children, ``kind`` is
+    static aux data (so jit specializes on the container format)."""
+
+    def __init__(self, kind: str, wq, scale):
+        self.kind = kind
+        self.wq = wq
+        self.scale = scale
+
+    def tree_flatten(self):
+        return (self.wq, self.scale), self.kind
+
+    @classmethod
+    def tree_unflatten(cls, kind, children):
+        return cls(kind, *children)
+
+    def __repr__(self):
+        return f"QuantContainer({self.kind}, wq={getattr(self.wq, 'shape', None)})"
+
+
+def qat_dense(x, w, *, weight_bits: int, act_bits: int,
+              weight_format: str = "int", act_format: str = "int"):
+    """Fake-quantized matmul with STE gradients (training path)."""
+    if weight_bits == 1:
+        wq, ws = binarize_pm1(w.astype(jnp.float32), axis=0)
+        wq = wq * ws
+    else:
+        wq = fake_quant(w.astype(jnp.float32), weight_bits, weight_format, axis=0)
+    xq = fake_quant(x.astype(jnp.float32), act_bits, act_format, axis=-1)
+    return jnp.einsum("...i,io->...o", xq, wq).astype(x.dtype)
+
+
+def pack_weight_for_serving(w, *, weight_bits: int,
+                            weight_format: str = "int") -> QuantContainer:
+    """Offline conversion of a float [in, out] weight to a resident
+    quantized container (run once at model load, like writing the PPAC
+    latch array)."""
+    w = w.astype(jnp.float32)
+    if weight_bits == 1:
+        q, s = binarize_pm1(w, axis=0)              # q in {±1}, s [1, out]
+        bits = ((q + 1) / 2).astype(jnp.uint8)      # logical levels
+        packed = pack_bits(bits.T)                  # [out, in/32] u32
+        return QuantContainer("packed1", packed, s[0])
+    q, s = quantize(w, weight_bits, weight_format, axis=0)  # s [1, out]
+    if weight_bits <= 4:
+        qu = (q + 8).astype(jnp.uint8)              # int4 biased to [0,15]
+        lo, hi = qu[0::2, :], qu[1::2, :]           # pack along `in` dim
+        packed = (lo | (hi << 4)).astype(jnp.uint8)  # [in/2, out]
+        return QuantContainer("packed4", packed, s[0])
+    return QuantContainer("int8", q.astype(jnp.int8), s[0])
+
+
+def serve_dense(x, container: QuantContainer, *, act_bits: int,
+                act_format: str = "int", backend: str = "mxu"):
+    """Exact-integer projection against a resident quantized weight."""
+    kind = container.kind
+    scale = container.scale
+    lead = x.shape[:-1]
+    xf = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
+
+    if kind == "packed1":
+        xq, xs = binarize_pm1(xf, axis=-1)          # {±1} activations
+        xbits = ((xq + 1) / 2).astype(jnp.uint8)
+        xp = pack_bits(xbits)
+        ip = inner_product_pm1(xp, container.wq, n=xf.shape[-1],
+                               backend=backend)      # [B, out] int32
+        y = ip.astype(jnp.float32) * xs * scale[None, :]
+        return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
+
+    xq, xs = quantize(xf, act_bits, act_format, axis=-1)
+    xi = xq.astype(jnp.int8)
+    if kind == "packed4":
+        packed = container.wq
+        lo = (packed & 0xF).astype(jnp.int8) - 8     # [in/2, out]
+        hi = (packed >> 4).astype(jnp.int8) - 8
+        wq = jnp.stack([lo, hi], axis=1).reshape(-1, packed.shape[-1])
+    else:
+        wq = container.wq
+    acc = jax.lax.dot_general(xi, wq, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * xs * scale[None, :]
+    return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)

@@ -1,0 +1,169 @@
+"""Number formats and bitplane codecs for PPAC-style bit-serial arithmetic.
+
+The paper (Table I) defines three L-bit number formats, all built from a
+logical LO/HI level per bit-plane:
+
+  uint   : LO=0,  HI=1, unsigned          value = sum_l 2^(l-1) b_l
+  int    : LO=0,  HI=1, signed (2's-comp) value = -2^(L-1) b_L + sum_{l<L} 2^(l-1) b_l
+  oddint : LO=-1, HI=1, signed odd        value = sum_l 2^(l-1) (2 b_l - 1)
+
+where b_l in {0,1} is the logical level of plane l (l=1 is the LSB).
+
+This module provides exact encode/decode between integer arrays and
+bitplane stacks, plus uint32 lane packing used by the Pallas kernels.
+Everything is pure jnp and shape-polymorphic.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class NumberFormat(enum.Enum):
+    UINT = "uint"
+    INT = "int"
+    ODDINT = "oddint"
+
+    @property
+    def signed(self) -> bool:
+        return self is not NumberFormat.UINT
+
+
+def fmt(name) -> NumberFormat:
+    """Coerce a string or NumberFormat to NumberFormat."""
+    if isinstance(name, NumberFormat):
+        return name
+    return NumberFormat(str(name).lower())
+
+
+def value_range(f: NumberFormat, bits: int) -> Tuple[int, int]:
+    """(min, max) representable value — Table I of the paper."""
+    f = fmt(f)
+    if f is NumberFormat.UINT:
+        return 0, 2**bits - 1
+    if f is NumberFormat.INT:
+        return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    # oddint: sum_l 2^(l-1) * (+-1) -> odd values in [-(2^L-1), 2^L-1]
+    return -(2**bits) + 1, 2**bits - 1
+
+
+def representable(f: NumberFormat, bits: int, x) -> jnp.ndarray:
+    """Boolean mask of representable values (oddint only holds odd numbers)."""
+    f = fmt(f)
+    lo, hi = value_range(f, bits)
+    ok = (x >= lo) & (x <= hi)
+    if f is NumberFormat.ODDINT:
+        ok = ok & (jnp.abs(x) % 2 == 1)
+    return ok
+
+
+def to_bitplanes(x, bits: int, f: NumberFormat = NumberFormat.INT) -> jnp.ndarray:
+    """Decompose integer array ``x`` into logical bitplanes.
+
+    Returns uint8 array of shape ``(bits,) + x.shape`` with plane 0 = LSB.
+    Planes hold the *logical levels* (0/1), which for oddint means
+    level 1 encodes +1 and level 0 encodes -1 in that plane.
+    """
+    f = fmt(f)
+    x = jnp.asarray(x, jnp.int32)
+    if f is NumberFormat.ODDINT:
+        # x = sum_l 2^(l-1)(2 b_l - 1) = 2*uintval(b) - (2^L - 1)
+        # => uintval(b) = (x + 2^L - 1) / 2
+        u = (x + (2**bits - 1)) // 2
+    elif f is NumberFormat.INT:
+        u = jnp.where(x < 0, x + 2**bits, x)  # 2's complement bits
+    else:
+        u = x
+    planes = [(u >> l) & 1 for l in range(bits)]
+    return jnp.stack(planes).astype(jnp.uint8)
+
+
+def from_bitplanes(planes, f: NumberFormat = NumberFormat.INT) -> jnp.ndarray:
+    """Inverse of :func:`to_bitplanes`. planes: (bits, ...) logical levels."""
+    f = fmt(f)
+    planes = jnp.asarray(planes, jnp.int32)
+    bits = planes.shape[0]
+    weights = np.asarray([2**l for l in range(bits)], np.int64)
+    if f is NumberFormat.INT:
+        weights = weights.copy()
+        weights[-1] = -weights[-1]  # MSB plane is negated (2's complement)
+    weights = jnp.asarray(weights, jnp.int32)
+    if f is NumberFormat.ODDINT:
+        vals = 2 * planes - 1  # level -> {-1,+1}
+    else:
+        vals = planes
+    return jnp.tensordot(weights, vals, axes=([0], [0])).astype(jnp.int32)
+
+
+def plane_weights(f: NumberFormat, bits: int) -> np.ndarray:
+    """Signed contribution weight of each logical plane (LSB first).
+
+    For uint/oddint: +2^l. For int: MSB plane weight is -2^(L-1).
+    (The oddint level->value affine shift is handled separately via the
+    constant offset ``sum_l 2^l`` — see ppac.py.)
+    """
+    f = fmt(f)
+    w = np.asarray([2**l for l in range(bits)], np.int64)
+    if f is NumberFormat.INT:
+        w = w.copy()
+        w[-1] = -w[-1]
+    return w
+
+
+# ---------------------------------------------------------------------------
+# uint32 lane packing (TPU adaptation of the bit-cell array: N bit-cells per
+# row become ceil(N/32) uint32 lanes).
+# ---------------------------------------------------------------------------
+
+LANE_BITS = 32
+
+
+def packed_width(n: int) -> int:
+    return (n + LANE_BITS - 1) // LANE_BITS
+
+
+def pack_bits(bits_arr) -> jnp.ndarray:
+    """Pack a (..., N) array of {0,1} into (..., ceil(N/32)) uint32.
+
+    Bit n of the word goes to lane n//32, position n%32 (little-endian),
+    so lane ``w`` holds bits [32w, 32w+32). Zero-padded at the tail; callers
+    must make padding contribute 0 (AND) or use popcount offsets (XNOR) —
+    the kernels handle this via the ``valid_bits`` argument.
+    """
+    bits_arr = jnp.asarray(bits_arr, jnp.uint32)
+    n = bits_arr.shape[-1]
+    w = packed_width(n)
+    pad = w * LANE_BITS - n
+    if pad:
+        bits_arr = jnp.pad(bits_arr, [(0, 0)] * (bits_arr.ndim - 1) + [(0, pad)])
+    shaped = bits_arr.reshape(bits_arr.shape[:-1] + (w, LANE_BITS))
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    return jnp.sum(shaped << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(packed, n: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits` — returns (..., n) uint8 in {0,1}."""
+    packed = jnp.asarray(packed, jnp.uint32)
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    bits_arr = (packed[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits_arr.reshape(packed.shape[:-1] + (packed.shape[-1] * LANE_BITS,))
+    return flat[..., :n].astype(jnp.uint8)
+
+
+def pack_planes(x, bits: int, f: NumberFormat) -> jnp.ndarray:
+    """Encode integers -> logical bitplanes -> packed lanes.
+
+    x: (..., N) integers. Returns (bits, ..., ceil(N/32)) uint32.
+    """
+    planes = to_bitplanes(x, bits, f)  # (bits, ..., N)
+    return pack_bits(planes)
+
+
+def popcount(x) -> jnp.ndarray:
+    """Population count of uint32 lanes (vectorized)."""
+    import jax.lax as lax
+
+    return lax.population_count(jnp.asarray(x, jnp.uint32)).astype(jnp.int32)

@@ -1,0 +1,289 @@
+"""Cycle-exact functional emulator of the PPAC array (paper §II–III).
+
+This is the *paper-faithful baseline*: a functional model of an M×N PPAC
+array with B banks and B_s subrows per row, supporting all five operation
+modes with exact cycle accounting. It is the oracle against which the
+Pallas kernels and the MXU lowering are validated, and the engine behind
+the Table II/III/IV benchmark reproductions.
+
+Conventions
+-----------
+* The stored matrix ``A`` is kept as logical levels (uint8 {0,1}) of shape
+  (M, N) — one bit per bit-cell, exactly like the latch array.
+* ``s`` selects the bit-cell operator per column: 0 = XNOR, 1 = AND.
+* The row ALU implements (Fig. 2c):
+
+      r_m   = popcount over the row's bit-cell outputs        (pipelined)
+      t_m   = (popX2 ? 2 r_m : r_m) + (nOZ ? acc1_m : 0) - (cEn ? c : 0)
+      acc1' = weV ? (vAcc ? 2*acc1 + sgn_v * t : sgn_v * t) : acc1
+      acc2' = weM ? (mAcc ? 2*acc2 + sgn_m * u : sgn_m * u) : acc2
+      y_m   = u_m - delta_m      with u = acc2 path output
+
+  We model the mode-level semantics of §III exactly (eqs. (1)–(5), Table I)
+  rather than gate-level signal timing; cycle counts follow §III and §IV
+  (one MVP per cycle for 1-bit ops with a 2-cycle pipeline latency; K*L
+  cycles for K-bit-matrix × L-bit-vector MVPs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import (
+    NumberFormat,
+    fmt,
+    from_bitplanes,
+    to_bitplanes,
+)
+
+XNOR = 0
+AND = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PPACConfig:
+    """Array geometry — mirrors the paper's parametrization (§IV-A)."""
+
+    m: int = 256          # words (rows)
+    n: int = 256          # bits per word (columns)
+    rows_per_bank: int = 16
+    subrow_bits: int = 16  # V bit-cells per subrow
+    max_k: int = 4         # max matrix bits (row ALU datapath, §IV-A)
+    max_l: int = 4         # max vector bits
+
+    @property
+    def banks(self) -> int:
+        return max(1, -(-self.m // self.rows_per_bank))
+
+    @property
+    def subrows(self) -> int:
+        return max(1, -(-self.n // self.subrow_bits))
+
+    def validate(self):
+        assert self.m > 0 and self.n > 0
+        assert self.rows_per_bank > 0 and self.subrow_bits > 0
+
+
+@dataclasses.dataclass
+class CycleCounter:
+    """Tracks emulated PPAC clock cycles (pipeline latency 2, throughput 1)."""
+
+    cycles: int = 0
+    pipeline_latency: int = 2
+
+    def tick(self, n: int = 1):
+        self.cycles += n
+
+
+class PPACArray:
+    """Functional PPAC array. All mode methods return bit-true results and
+    advance the cycle counter by the paper's cycle cost."""
+
+    def __init__(self, config: PPACConfig = PPACConfig()):
+        config.validate()
+        self.config = config
+        self.a = jnp.zeros((config.m, config.n), jnp.uint8)   # latch array
+        self.s = jnp.zeros((config.n,), jnp.uint8)            # XNOR/AND per col
+        self.acc1 = jnp.zeros((config.m,), jnp.int32)         # vector accumulator
+        self.acc2 = jnp.zeros((config.m,), jnp.int32)         # matrix accumulator
+        self.delta = jnp.zeros((config.m,), jnp.int32)        # per-row threshold
+        self.c = 0                                            # shared offset
+        self.counter = CycleCounter()
+
+    # -- configuration-time writes (not counted as compute cycles; the paper
+    #    excludes matrix-load power/time from its measurements, §IV-A) -------
+    def write(self, a_bits, row0: int = 0):
+        a_bits = jnp.asarray(a_bits, jnp.uint8)
+        m, n = a_bits.shape
+        assert row0 + m <= self.config.m and n <= self.config.n
+        self.a = self.a.at[row0 : row0 + m, :n].set(a_bits)
+
+    def set_column_ops(self, s):
+        self.s = jnp.asarray(s, jnp.uint8)
+
+    def set_thresholds(self, delta):
+        self.delta = jnp.broadcast_to(jnp.asarray(delta, jnp.int32), (self.config.m,))
+
+    # -- the bit-cell array + subrow/row popcount ---------------------------
+    def _row_popcount(self, x_bits) -> jnp.ndarray:
+        """r_m = popcount of per-column XNOR/AND against broadcast x."""
+        x = jnp.asarray(x_bits, jnp.uint8)[None, :]  # broadcast over rows
+        xnor_out = 1 - (self.a ^ x)   # XNOR: 1 where equal
+        and_out = self.a & x
+        cell = jnp.where(self.s[None, :] == AND, and_out, xnor_out)
+        # subrow partition: local popcounts then row ALU sums them. Integer
+        # addition is associative so we sum directly; the partition only
+        # affects wiring, not values (§II-B).
+        return jnp.sum(cell.astype(jnp.int32), axis=1)
+
+    # -- operation modes -----------------------------------------------------
+    def hamming_similarity(self, x_bits) -> jnp.ndarray:
+        """Mode III-A: y_m = h̄(a_m, x). One cycle (pipelined)."""
+        self.set_column_ops(jnp.zeros((self.config.n,), jnp.uint8))
+        self.counter.tick(1)
+        return self._row_popcount(x_bits)
+
+    def cam_match(self, x_bits, delta: Optional[int] = None) -> jnp.ndarray:
+        """CAM: match iff h̄ >= delta (delta=N -> complete match).
+
+        Returns boolean matches; implemented as MSB of y_m = r_m - delta,
+        exactly as §III-A (match iff y_m >= 0).
+        """
+        n = self.config.n
+        d = n if delta is None else delta
+        self.set_thresholds(d)
+        r = self.hamming_similarity(x_bits)
+        y = r - self.delta
+        return y >= 0
+
+    def mvp_1bit(self, x_bits, fmt_a="pm1", fmt_x="pm1") -> jnp.ndarray:
+        """Mode III-B: 1-bit MVP with {±1} ('pm1') / {0,1} ('01') formats.
+
+        One cycle per MVP; the mixed formats need a one-time extra cycle
+        when A changes (h̄(a,1) or h̄(a,0) precompute) — modeled in
+        ``setup_cycles``.
+        """
+        n = self.config.n
+        x = jnp.asarray(x_bits, jnp.uint8)
+        if fmt_a == "pm1" and fmt_x == "pm1":
+            # eq (1): <a,x> = 2 h̄ - N   (XNOR, popX2, cEn, c=N)
+            r = self.hamming_similarity(x)
+            return 2 * r - n
+        if fmt_a == "01" and fmt_x == "01":
+            # AND: r_m directly
+            self.set_column_ops(jnp.ones((self.config.n,), jnp.uint8))
+            self.counter.tick(1)
+            return self._row_popcount(x)
+        if fmt_a == "pm1" and fmt_x == "01":
+            # eq (2): <a,x> = h̄(a, x̂) + h̄(a, 1) - N
+            h1 = self.hamming_similarity(jnp.ones((n,), jnp.uint8))  # setup
+            hx = self.hamming_similarity(x)
+            return hx + h1 - n
+        if fmt_a == "01" and fmt_x == "pm1":
+            # eq (3): <a,x> = 2<a, x~> + h̄(a, 0) - N
+            h0 = self.hamming_similarity(jnp.zeros((n,), jnp.uint8))  # setup
+            self.set_column_ops(jnp.ones((self.config.n,), jnp.uint8))
+            self.counter.tick(1)
+            r = self._row_popcount(x)
+            return 2 * r + h0 - n
+        raise ValueError(f"unsupported format pair {fmt_a},{fmt_x}")
+
+    def mvp_multibit_vector(self, x, l_bits: int, fmt_x: NumberFormat,
+                            fmt_a: str = "pm1") -> jnp.ndarray:
+        """Mode III-C1: 1-bit matrix × L-bit vector, bit-serially, L cycles.
+
+        MSB-first accumulation: acc = 2*acc + A x_l  (vAcc), with the MSB
+        partial product negated for signed (int) vectors (vAccX-1).
+        """
+        fmt_x = fmt(fmt_x)
+        planes = to_bitplanes(x, l_bits, fmt_x)  # (L, N) logical levels
+        acc = jnp.zeros((self.config.m,), jnp.int32)
+        for step, l in enumerate(reversed(range(l_bits))):  # MSB first
+            if fmt_x is NumberFormat.ODDINT:
+                # levels already encode ±1 directly through the pm1 path
+                partial = self.mvp_1bit(planes[l], fmt_a=fmt_a, fmt_x="pm1")
+            else:
+                partial = self.mvp_1bit(planes[l], fmt_a=fmt_a, fmt_x="01")
+            sgn = -1 if (fmt_x is NumberFormat.INT and step == 0) else 1
+            acc = 2 * acc + sgn * partial
+        self.acc1 = acc
+        return acc
+
+    def mvp_multibit(self, a_int, x_int, k_bits: int, l_bits: int,
+                     fmt_a: NumberFormat = NumberFormat.INT,
+                     fmt_x: NumberFormat = NumberFormat.INT) -> jnp.ndarray:
+        """Mode III-C2: K-bit matrix × L-bit vector over K*L cycles.
+
+        The K bitplanes of A live in different column groups (N/K entries
+        per row); we emulate by loading plane A_k and running the L-cycle
+        vector loop, accumulating acc2 = 2*acc2 + A_k x (mAcc), with the
+        matrix-MSB partial negated for int (mAccX-1).
+        """
+        fmt_a, fmt_x = fmt(fmt_a), fmt(fmt_x)
+        a_planes = to_bitplanes(a_int, k_bits, fmt_a)  # (K, M, N/K entries)
+        acc2 = jnp.zeros((self.config.m,), jnp.int32)
+        oddint_a = fmt_a is NumberFormat.ODDINT
+        for step, k in enumerate(reversed(range(k_bits))):  # MSB-plane first
+            self.write(a_planes[k])
+            fmt_a_1bit = "pm1" if oddint_a else "01"
+            partial = self.mvp_multibit_vector(x_int, l_bits, fmt_x, fmt_a=fmt_a_1bit)
+            sgn = -1 if (fmt_a is NumberFormat.INT and step == 0) else 1
+            acc2 = 2 * acc2 + sgn * partial
+        self.acc2 = acc2
+        return acc2
+
+    def gf2_mvp(self, x_bits) -> jnp.ndarray:
+        """Mode III-D: GF(2) MVP — AND products, LSB of the integer sum."""
+        self.set_column_ops(jnp.ones((self.config.n,), jnp.uint8))
+        self.counter.tick(1)
+        r = self._row_popcount(x_bits)
+        return (r & 1).astype(jnp.uint8)
+
+    def pla(self, x_bits, num_vars_per_row) -> jnp.ndarray:
+        """Mode III-E: each row a min-term; per-bank OR of min-terms.
+
+        num_vars_per_row: δ_m = number of variables in row m's min-term.
+        Returns (banks,) uint8 Boolean outputs p_b > 0.
+        """
+        self.set_column_ops(jnp.ones((self.config.n,), jnp.uint8))
+        self.set_thresholds(jnp.asarray(num_vars_per_row, jnp.int32))
+        self.counter.tick(1)
+        r = self._row_popcount(x_bits)
+        y = r - self.delta  # 0 iff all vars present
+        minterm = (y >= 0).astype(jnp.int32)  # complement of MSB
+        banks = minterm.reshape(self.config.banks, self.config.rows_per_bank)
+        p = jnp.sum(banks, axis=1)
+        return (p > 0).astype(jnp.uint8)
+
+    def pla_max_terms(self, x_bits, programmed_rows_per_bank) -> jnp.ndarray:
+        """§III-E variant: δ_m=1 makes each row a max-term (OR); the bank
+        output is 1 iff p_b equals the number of programmed max-terms
+        (product of max-terms / CNF)."""
+        self.set_column_ops(jnp.ones((self.config.n,), jnp.uint8))
+        self.set_thresholds(1)
+        self.counter.tick(1)
+        r = self._row_popcount(x_bits)
+        maxterm = (r - self.delta >= 0).astype(jnp.int32)
+        banks = maxterm.reshape(self.config.banks, self.config.rows_per_bank)
+        p = jnp.sum(banks, axis=1)
+        want = jnp.asarray(programmed_rows_per_bank, jnp.int32)
+        return (p == want).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Pure-functional conveniences (no array state) used across the framework.
+# ---------------------------------------------------------------------------
+
+def hamming_similarity_ref(a_bits, x_bits) -> jnp.ndarray:
+    """h̄ for a (M,N) bit matrix against (..., N) inputs -> (..., M)."""
+    a = jnp.asarray(a_bits, jnp.int32)
+    x = jnp.asarray(x_bits, jnp.int32)
+    # h̄ = number of equal bits = sum over n of XNOR(a, x)
+    match = 1 - jnp.bitwise_xor(x[..., None, :], a)  # (..., M, N)
+    return jnp.sum(match, axis=-1)
+
+
+def multibit_mvp_ref(a_int, x_int,
+                     fmt_a: NumberFormat = NumberFormat.INT,
+                     fmt_x: NumberFormat = NumberFormat.INT) -> jnp.ndarray:
+    """Ground-truth integer MVP y = A x (independent of PPAC), int32."""
+    a = jnp.asarray(a_int, jnp.int32)
+    x = jnp.asarray(x_int, jnp.int32)
+    return a @ x
+
+
+def cycles_multibit_mvp(k_bits: int, l_bits: int) -> int:
+    """Paper cycle count for a K-bit-matrix × L-bit-vector MVP (§III-C)."""
+    return k_bits * l_bits
+
+
+def cycles_compute_cache_inner_product(l_bits: int, n_dim: int) -> int:
+    """Cycle count of the compute-cache/Neural-cache approach [3,4] quoted in
+    §IV-B: elementwise L-bit multiply costs L^2 + 5L - 2; the reduction of an
+    N-vector with 2L-bit entries costs >= 2L * log2(N) cycles."""
+    mult = l_bits * l_bits + 5 * l_bits - 2
+    red = 2 * l_bits * int(np.ceil(np.log2(n_dim)))
+    return mult + red

@@ -1,0 +1,96 @@
+"""Quantizers + straight-through estimators for PPAC-mode layers.
+
+PPAC consumes integer operands in uint/int/oddint formats (Table I). Training
+networks that *execute* on such an engine is the BNN/QAT use case the paper
+cites (§III-B, [17]). These quantizers produce (q, scale) pairs where q is an
+exact integer in the target format and scale is the per-channel dequant
+factor; gradients flow via straight-through estimators (STE).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .formats import NumberFormat, fmt, value_range
+
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+@jax.custom_vjp
+def _ste_sign(x):
+    return jnp.where(x >= 0, 1.0, -1.0)
+
+
+def _ste_sign_fwd(x):
+    return _ste_sign(x), x
+
+
+def _ste_sign_bwd(x, g):
+    # clipped STE (Hubara et al.): pass gradient where |x| <= 1
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+_ste_sign.defvjp(_ste_sign_fwd, _ste_sign_bwd)
+
+
+def binarize_pm1(x, axis: int = -1):
+    """Binarize to {±1} with per-channel scale = mean|x| (XNOR-Net style).
+
+    Returns (q, scale): q float in {±1} (STE-differentiable), scale along
+    ``axis``-complement so that q*scale ≈ x.
+    """
+    scale = jnp.mean(jnp.abs(x), axis=axis, keepdims=True)
+    q = _ste_sign(x)
+    return q, scale
+
+
+def quantize(x, bits: int, f: NumberFormat = NumberFormat.INT, axis=-1):
+    """Symmetric/affine quantization into the exact PPAC format range.
+
+    uint  : affine  q = round(x/s),           s = max(x)/ (2^L - 1), x>=0 assumed via relu
+    int   : symmetric q = clip(round(x/s)),   s = max|x| / (2^(L-1) - 1)
+    oddint: q = 2*round((x/s - 1)/2) + 1 clipped to odd range (s = max|x|/(2^L-1))
+
+    Returns (q_float, scale) with q holding exact integers castable to int32.
+    """
+    f = fmt(f)
+    lo, hi = value_range(f, bits)
+    eps = 1e-8
+    if f is NumberFormat.UINT:
+        xp = jax.nn.relu(x)
+        s = jnp.max(xp, axis=axis, keepdims=True) / hi + eps
+        q = jnp.clip(_ste_round(xp / s), lo, hi)
+    elif f is NumberFormat.INT:
+        s = jnp.max(jnp.abs(x), axis=axis, keepdims=True) / hi + eps
+        q = jnp.clip(_ste_round(x / s), lo, hi)
+    else:  # oddint: nearest odd integer
+        s = jnp.max(jnp.abs(x), axis=axis, keepdims=True) / hi + eps
+        q = 2.0 * _ste_round((x / s - 1.0) / 2.0) + 1.0
+        q = jnp.clip(q, lo, hi)
+    return q, s
+
+
+def dequantize(q, scale):
+    return q * scale
+
+
+def fake_quant(x, bits: int, f: NumberFormat = NumberFormat.INT, axis=-1):
+    """QAT fake-quant: dequantize(quantize(x)) with STE gradients."""
+    q, s = quantize(x, bits, f, axis)
+    return q * s

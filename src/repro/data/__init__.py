@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, DataIterator, batch_for_step, make_model_batch  # noqa: F401

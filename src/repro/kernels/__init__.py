@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the PPAC operation modes.
+
+binary_mvp    — packed 1-bit XNOR/AND popcount matmul (modes III-A/B/D/E)
+bitserial_mvp — fused multi-bitplane MVP (mode III-C, all Table-I formats)
+"""
+from .binary_mvp.ops import (  # noqa: F401
+    and_dot,
+    cam_match,
+    gf2_matmul,
+    hamming_similarity,
+    inner_product_pm1,
+    pla_eval,
+)
+from .bitserial_mvp.ops import ppac_cycles, ppac_matmul  # noqa: F401

@@ -1,0 +1,10 @@
+from .kernel import binary_matmul_packed  # noqa: F401
+from .ops import (  # noqa: F401
+    and_dot,
+    cam_match,
+    gf2_matmul,
+    hamming_similarity,
+    inner_product_pm1,
+    pla_eval,
+)
+from .ref import binary_matmul_bits_ref, binary_matmul_packed_ref  # noqa: F401

@@ -1,0 +1,90 @@
+"""Public jit'd wrappers for the PPAC 1-bit operation modes on TPU.
+
+All functions accept *packed* uint32 operands ([B, W] inputs against the
+resident [M, W] matrix) plus the true bit width ``n`` and derive the paper's
+mode semantics from the raw popcount sum S (see kernel.py). ``backend``
+selects the Pallas kernel ('pallas'), the jnp oracle ('ref'), or an MXU
+lowering on unpacked int8 bits ('mxu' — beyond-paper path, see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.formats import unpack_bits
+from .kernel import binary_matmul_packed
+from .ref import binary_matmul_packed_ref
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _raw_sum(x_packed, a_packed, op: str, backend: str, n: int):
+    if backend == "pallas":
+        return binary_matmul_packed(x_packed, a_packed, op=op,
+                                    interpret=_auto_interpret())
+    if backend == "ref":
+        return binary_matmul_packed_ref(x_packed, a_packed, op=op)
+    if backend == "mxu":
+        # Unpack to int8 and use the MXU: and-dot = x·a ; xor-sum =
+        # rowsum(x) + rowsum(a) - 2 x·a. Bit-true (int32 accumulate).
+        xb = unpack_bits(x_packed, n).astype(jnp.int8)
+        ab = unpack_bits(a_packed, n).astype(jnp.int8)
+        dot = jax.lax.dot_general(
+            xb, ab, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        if op == "and":
+            return dot
+        rx = jnp.sum(xb.astype(jnp.int32), axis=1)[:, None]
+        ra = jnp.sum(ab.astype(jnp.int32), axis=1)[None, :]
+        return rx + ra - 2 * dot
+    raise ValueError(f"unknown backend {backend}")
+
+
+@functools.partial(jax.jit, static_argnames=("n", "backend"))
+def hamming_similarity(x_packed, a_packed, *, n: int, backend: str = "pallas"):
+    """h̄[b,m] = n - popcount(x^a) — paper mode III-A."""
+    s = _raw_sum(x_packed, a_packed, "xor", backend, n)
+    return n - s
+
+
+@functools.partial(jax.jit, static_argnames=("n", "delta", "backend"))
+def cam_match(x_packed, a_packed, *, n: int, delta=None, backend: str = "pallas"):
+    """Boolean (dis)similarity match: h̄ >= delta; delta=None -> complete match."""
+    d = n if delta is None else delta
+    return hamming_similarity(x_packed, a_packed, n=n, backend=backend) >= d
+
+
+@functools.partial(jax.jit, static_argnames=("n", "backend"))
+def inner_product_pm1(x_packed, a_packed, *, n: int, backend: str = "pallas"):
+    """<a,x> with {±1} entries: 2 h̄ - N (eq. 1) — mode III-B1."""
+    return 2 * hamming_similarity(x_packed, a_packed, n=n, backend=backend) - n
+
+
+@functools.partial(jax.jit, static_argnames=("n", "backend"))
+def and_dot(x_packed, a_packed, *, n: int, backend: str = "pallas"):
+    """<a,x> with {0,1} entries — mode III-B2."""
+    return _raw_sum(x_packed, a_packed, "and", backend, n)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "backend"))
+def gf2_matmul(x_packed, a_packed, *, n: int, backend: str = "pallas"):
+    """GF(2) MVP: LSB of the and-dot integer sum — mode III-D."""
+    return (and_dot(x_packed, a_packed, n=n, backend=backend) & 1).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "backend", "rows_per_bank"))
+def pla_eval(x_packed, a_packed, num_vars_per_row, *, n: int,
+             rows_per_bank: int = 16, backend: str = "pallas"):
+    """PLA mode III-E: rows are min-terms, banks OR them.
+
+    x_packed [B, W], a_packed [M, W], num_vars_per_row [M] -> [B, M/rpb] uint8.
+    """
+    r = and_dot(x_packed, a_packed, n=n, backend=backend)  # [B, M]
+    minterm = (r - num_vars_per_row[None, :]) >= 0
+    b, m = r.shape
+    banks = minterm.reshape(b, m // rows_per_bank, rows_per_bank)
+    return (jnp.sum(banks, axis=-1) > 0).astype(jnp.uint8)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the packed binary matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def binary_matmul_packed_ref(x_packed, a_packed, *, op: str = "xor"):
+    """S[b,m] = sum_w popcount(op(x[b,w], a[m,w])) — reference, O(B*M*W)."""
+    x = jnp.asarray(x_packed, jnp.uint32)[:, None, :]   # [B,1,W]
+    a = jnp.asarray(a_packed, jnp.uint32)[None, :, :]   # [1,M,W]
+    bits = jnp.bitwise_xor(x, a) if op == "xor" else jnp.bitwise_and(x, a)
+    return jnp.sum(lax.population_count(bits).astype(jnp.int32), axis=-1)
+
+
+def binary_matmul_bits_ref(x_bits, a_bits, *, op: str = "xor"):
+    """Same, on unpacked {0,1} arrays: x [B,N], a [M,N] -> [B,M] int32."""
+    x = jnp.asarray(x_bits, jnp.int32)[:, None, :]
+    a = jnp.asarray(a_bits, jnp.int32)[None, :, :]
+    bits = (x ^ a) if op == "xor" else (x & a)
+    return jnp.sum(bits, axis=-1)

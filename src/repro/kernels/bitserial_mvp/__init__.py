@@ -1,0 +1,3 @@
+from .kernel import bitserial_matmul_packed  # noqa: F401
+from .ops import build_planes_and_weights, ppac_cycles, ppac_matmul  # noqa: F401
+from .ref import bitserial_matmul_packed_ref, integer_matmul_ref  # noqa: F401

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: fused multi-bitplane (bit-serial) MVP — paper §III-C.
+
+PPAC computes a K-bit-matrix × L-bit-vector MVP over K*L clock cycles of
+1-bit AND/XNOR popcounts with shift-add accumulation in the two row-ALU
+accumulators. On TPU we fuse the whole K×L schedule into one kernel: the
+accumulator lives in VMEM across the lane-tile grid dimension, and each
+"cycle" processes a [tb × tm × tw] tile instead of one word:
+
+    y[b, m] = sum_{k<K1} sum_{l<L1} W[k, l] * sum_w popcount(a[k,m,w] & x[l,b,w])
+
+The plane-pair weight matrix W encodes the entire number-format algebra
+(Table I + eqs. (2)/(3) offsets): signed (int) MSB planes get negative
+weights, and oddint's affine offset is folded in by appending a constant
+"mask" plane (the all-valid-bits vector) — the exact generalization of the
+paper's h̄(a, 1)/h̄(a, 0) offset trick. See ops.py for the construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _bitserial_kernel(x_ref, a_ref, w_ref, o_ref, *, k1: int, l1: int,
+                      row_chunk: int):
+    """x_ref [l1, tb, tw] u32; a_ref [k1, tm, tw] u32; w_ref [k1, l1] i32;
+    o_ref [tb, tm] i32 (accumulated over the lane grid dim)."""
+    _, tb, tw = x_ref.shape
+    tm = a_ref.shape[1]
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    n_chunks = tm // row_chunk
+    acc = jnp.zeros((tb, tm), jnp.int32)
+    for k in range(k1):          # static unroll: K1*L1 <= ~36 "cycles"
+        a_k = a_ref[k]           # [tm, tw]
+        for l in range(l1):
+            x_l = x_ref[l]       # [tb, tw]
+            w_kl = w_ref[k, l]
+
+            def body(i, s):
+                a_c = lax.dynamic_slice_in_dim(a_k, i * row_chunk, row_chunk, 0)
+                bits = jnp.bitwise_and(x_l[:, None, :], a_c[None, :, :])
+                pc = lax.population_count(bits).astype(jnp.int32)
+                part = jnp.sum(pc, axis=-1)  # [tb, chunk]
+                return lax.dynamic_update_slice_in_dim(s, part, i * row_chunk, 1)
+
+            s_kl = lax.fori_loop(0, n_chunks, body,
+                                 jnp.zeros((tb, tm), jnp.int32))
+            acc = acc + w_kl * s_kl
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_b", "block_m", "block_w", "row_chunk", "interpret"),
+)
+def bitserial_matmul_packed(
+    x_planes,
+    a_planes,
+    weights,
+    *,
+    block_b: int = 64,
+    block_m: int = 128,
+    block_w: int = 32,
+    row_chunk: int = 8,
+    interpret: bool = False,
+):
+    """y[b,m] = sum_{k,l} W[k,l] * sum_w popcount(a[k,m,w] & x[l,b,w]).
+
+    x_planes: [L1, B, W] uint32; a_planes: [K1, M, W] uint32;
+    weights: [K1, L1] int32. Returns [B, M] int32. Padding lanes must be 0
+    in every plane (AND with 0 contributes nothing).
+    """
+    l1, b, w = x_planes.shape
+    k1, m, w2 = a_planes.shape
+    assert w == w2 and weights.shape == (k1, l1)
+
+    bb = min(block_b, _round_up(b, 8))
+    bm = min(block_m, _round_up(m, 8))
+    bw = min(block_w, _round_up(w, 128))
+    rc = min(row_chunk, bm)
+    while bm % rc:
+        rc -= 1
+
+    bp, mp, wp = _round_up(b, bb), _round_up(m, bm), _round_up(w, bw)
+    x_p = jnp.pad(x_planes.astype(jnp.uint32),
+                  ((0, 0), (0, bp - b), (0, wp - w)))
+    a_p = jnp.pad(a_planes.astype(jnp.uint32),
+                  ((0, 0), (0, mp - m), (0, wp - w)))
+
+    grid = (bp // bb, mp // bm, wp // bw)
+    out = pl.pallas_call(
+        functools.partial(_bitserial_kernel, k1=k1, l1=l1, row_chunk=rc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l1, bb, bw), lambda i, j, k: (0, i, k)),
+            pl.BlockSpec((k1, bm, bw), lambda i, j, k: (0, j, k)),
+            pl.BlockSpec((k1, l1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, mp), jnp.int32),
+        interpret=interpret,
+    )(x_p, a_p, weights.astype(jnp.int32))
+    return out[:b, :m]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

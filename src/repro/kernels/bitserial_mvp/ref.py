@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for the fused bit-serial MVP kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def bitserial_matmul_packed_ref(x_planes, a_planes, weights):
+    """Same contract as bitserial_matmul_packed, O(K1*L1*B*M*W) jnp."""
+    x = jnp.asarray(x_planes, jnp.uint32)  # [L1,B,W]
+    a = jnp.asarray(a_planes, jnp.uint32)  # [K1,M,W]
+    w = jnp.asarray(weights, jnp.int32)    # [K1,L1]
+    bits = jnp.bitwise_and(x[None, :, :, None, :], a[:, None, None, :, :])
+    pc = lax.population_count(bits).astype(jnp.int32)  # [K1,L1,B,M,W]
+    s = jnp.sum(pc, axis=-1)                           # [K1,L1,B,M]
+    return jnp.einsum("kl,klbm->bm", w, s).astype(jnp.int32)
+
+
+def integer_matmul_ref(x_int, a_int):
+    """Ground-truth y[b,m] = <a_m, x_b> on integer operands."""
+    return jnp.asarray(x_int, jnp.int32) @ jnp.asarray(a_int, jnp.int32).T

@@ -1,0 +1,2 @@
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time.
+from .mesh import make_production_mesh, make_test_mesh  # noqa: F401

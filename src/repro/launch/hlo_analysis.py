@@ -1,0 +1,438 @@
+"""HLO-text analyzer: FLOPs / HBM-traffic / collective bytes with correct
+while-loop (lax.scan) trip-count multiplication.
+
+Why not ``compiled.cost_analysis()``: XLA's entry-level cost analysis counts
+while bodies ONCE (verified empirically: a 10-step scanned matmul reports
+the FLOPs of a single matmul), which would understate every scanned-layer
+model by ~n_layers. This parser walks the post-optimization, per-partition
+HLO module, accumulates per-computation stats, and multiplies through the
+call graph using the ``known_trip_count`` backend configs XLA attaches to
+scan-derived whiles.
+
+Accounting model (documented in EXPERIMENTS.md §Roofline):
+  * flops: dots = 2*prod(result)*prod(contracted lhs dims); convolutions =
+    2*prod(result)*(kernel elems per output); elementwise/fusion interior
+    ops = 1 flop per output element (minor next to dots).
+  * traffic (HBM-byte proxy): for each materializing op, result bytes
+    (write) + operand bytes (reads). Aliasing ops (tuple/gte/bitcast/
+    parameter/constant) move nothing themselves.
+  * collectives: per-device result bytes, scaled by ring factors
+    (all-reduce 2(n-1)/n, gather/scatter/all-to-all (n-1)/n, permute 1)
+    with n = replica-group size. Shapes in a partitioned module are
+    already per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+
+
+def _split_op_line(line: str):
+    """'%n = TYPE opcode(args...), attrs' -> (name, type_s, opcode, args,
+    attrs). Handles tuple types with embedded /*index=k*/ comments (which
+    contain '=' and spaces) via paren matching."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.groups()
+    if rest.startswith("("):
+        depth, end = 0, -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        type_s, tail = rest[: end + 1], rest[end + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_s, tail = rest[:sp], rest[sp:]
+    m2 = re.match(r"\s*([\w\-]+)\(", tail)
+    if not m2:
+        return None
+    opcode = m2.group(1)
+    body = tail[m2.end():]
+    depth, end = 1, len(body)
+    for i, ch in enumerate(body):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    args, attrs = body[:end], body[end + 1:]
+    return name, type_s, opcode, args, attrs
+
+
+def _parse_type(s: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """'f32[128,64]{1,0}' or '(f32[..], s32[..])' -> [(dtype, shape), ...]"""
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        shape = tuple(int(x) for x in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(types) -> int:
+    return sum(DTYPE_BYTES[dt] * max(1, math.prod(sh)) for dt, sh in types)
+
+
+def _nelems(types) -> int:
+    return sum(max(1, math.prod(sh)) for _, sh in types)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    types: list           # [(dtype, shape)]
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, list]
+    ops: List[Op]
+    is_entry: bool = False
+
+
+ALIAS_OPS = {"tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+             "partition-id", "replica-id", "after-all", "custom-call"}
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-reduce-start", "all-gather-start",
+               "collective-permute-start", "ragged-all-to-all"}
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and line.endswith("{"):
+                params = {}
+                header = m.group(2)
+                marks = [(pm.start(), pm.group(1))
+                         for pm in re.finditer(r"([\w.\-]+):", header)]
+                for idx, (pos, nm) in enumerate(marks):
+                    end = marks[idx + 1][0] if idx + 1 < len(marks) \
+                        else len(header)
+                    params[nm] = _parse_type(header[pos:end])
+                cur = Computation(m.group(1), params, [],
+                                  is_entry=line.startswith("ENTRY"))
+                comps[cur.name] = cur
+            continue
+        if line == "}" or line.startswith("}"):
+            cur = None
+            continue
+        parsed = _split_op_line(line)
+        if not parsed:
+            continue
+        name, type_s, opcode, args, _attrs = parsed
+        operands = re.findall(r"%([\w.\-]+)", args)
+        cur.ops.append(Op(name, _parse_type(type_s), opcode, operands, line))
+    return comps
+
+
+def _dot_flops(op: Op, symtab) -> float:
+    res_elems = _nelems(op.types)
+    lhs = symtab.get(op.operands[0]) if op.operands else None
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contracted = 1
+    if lhs and m and m.group(1):
+        dims = [int(x) for x in m.group(1).split(",")]
+        shape = lhs[0][1]
+        for d in dims:
+            if d < len(shape):
+                contracted *= shape[d]
+    return 2.0 * res_elems * contracted
+
+
+def _conv_flops(op: Op, symtab) -> float:
+    res_elems = _nelems(op.types)
+    rhs = symtab.get(op.operands[1]) if len(op.operands) > 1 else None
+    if not rhs:
+        return 2.0 * res_elems
+    kshape = rhs[0][1]
+    kelems = max(1, math.prod(kshape))
+    out_feat = op.types[0][1][-1] if op.types and op.types[0][1] else 1
+    return 2.0 * res_elems * max(1, kelems // max(1, out_feat))
+
+
+
+
+def _fusion_traffic(op: Op, symtab) -> float:
+    """Boundary traffic of a fusion, with in-place-update awareness.
+
+    A fused dynamic_update_slice aliases the big buffer (XLA updates in
+    place); charging operand+result would bill the whole KV cache twice
+    per layer per step. Detect via the op_name metadata and charge only
+    the update (smallest tensor operand); fused dynamic_slice is charged
+    by its result (the slice), not the sliced operand.
+    """
+    mname = re.search(r'op_name="([^"]+)"', op.line)
+    name = mname.group(1) if mname else ""
+    if name.endswith("dynamic_update_slice"):
+        sizes = [b for b in (_nbytes(symtab.get(o, [])) for o in op.operands)
+                 if b > 4]
+        return 2.0 * min(sizes) if sizes else _nbytes(op.types)
+    if name.endswith("dynamic_slice"):
+        return 2.0 * _nbytes(op.types)
+    t = _nbytes(op.types)
+    for o in op.operands:
+        t += _nbytes(symtab.get(o, []))
+    return t
+
+def _op_traffic(op: Op, symtab) -> float:
+    """HBM-traffic contribution of one op (TPU-target accounting).
+
+    * slicing ops touch only the slice; updates alias the remainder;
+    * `convert` is excluded: the CPU backend legalizes every bf16 dot by
+      inserting f32 converts around it (889 converts in a 32-layer
+      module, ~4.4 TiB phantom traffic); on the TPU target the MXU
+      consumes bf16 directly and materialized converts fuse into their
+      producers. Documented in EXPERIMENTS.md §Roofline methodology.
+    """
+    oc = op.opcode
+    if oc == "convert":
+        return 0.0
+    if oc in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * _nbytes(op.types)  # read slice + write result
+    if oc in ("dynamic-update-slice", "scatter"):
+        upd = op.operands[1] if len(op.operands) > 1 else None
+        return 2.0 * _nbytes(symtab.get(upd, op.types))
+    t = _nbytes(op.types)
+    for o in op.operands:
+        t += _nbytes(symtab.get(o, []))
+    return t
+
+@dataclasses.dataclass
+class Stats:
+    flops: float = 0.0
+    traffic: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Stats", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic += other.traffic * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+_RING = {"all-reduce": lambda n: 2.0 * (n - 1) / n,
+         "all-reduce-start": lambda n: 2.0 * (n - 1) / n,
+         "all-gather": lambda n: (n - 1) / n,
+         "all-gather-start": lambda n: (n - 1) / n,
+         "reduce-scatter": lambda n: (n - 1) / n,
+         "all-to-all": lambda n: (n - 1) / n,
+         "ragged-all-to-all": lambda n: (n - 1) / n,
+         "collective-permute": lambda n: 1.0,
+         "collective-permute-start": lambda n: 1.0}
+
+
+def analyze(text: str) -> Stats:
+    comps = parse_module(text)
+    entry = next(c for c in comps.values() if c.is_entry)
+    memo: Dict[str, Stats] = {}
+
+    def comp_stats(comp: Computation) -> Stats:
+        if comp.name in memo:
+            return memo[comp.name]
+        st = Stats()
+        symtab = dict(comp.params)
+        for op in comp.ops:
+            symtab[op.name] = op.types
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in ALIAS_OPS:
+                # custom-call may still move data; count result bytes
+                if oc == "custom-call":
+                    st.traffic += _nbytes(op.types)
+                continue
+            if oc in COLLECTIVES:
+                n = _group_size(op.line)
+                factor = _RING.get(oc, lambda n: 1.0)(n)
+                # XLA-CPU promotes bf16 reductions to f32 (to_apply=
+                # %add..._promoted) because the CPU lacks bf16 arithmetic;
+                # TPU reduces in bf16 — count the unpromoted width.
+                if re.search(r"to_apply=%[\w.\-]*promoted", op.line) \
+                        and op.types and op.types[0][0] == "f32":
+                    factor *= 0.5
+                b = _nbytes(op.types) * factor
+                key = oc.replace("-start", "")
+                st.coll_bytes[key] = st.coll_bytes.get(key, 0.0) + b
+                st.traffic += _nbytes(op.types)
+                continue
+            if oc in ("all-reduce-done", "all-gather-done",
+                      "collective-permute-done"):
+                continue
+            if oc == "while":
+                trip = 1
+                m = re.search(r'known_trip_count[":{\s]+n["\s:]+(\d+)', op.line)
+                if m:
+                    trip = int(m.group(1))
+                mc = re.search(r"condition=%([\w.\-]+), body=%([\w.\-]+)",
+                               op.line)
+                if mc:
+                    st.add(comp_stats(comps[mc.group(1)]), trip)
+                    st.add(comp_stats(comps[mc.group(2)]), trip)
+                continue
+            if oc in ("call", "fusion"):
+                mcall = re.search(r"(?:calls|to_apply)=%([\w.\-]+)", op.line)
+                inner = Stats()
+                if mcall and mcall.group(1) in comps:
+                    inner = comp_stats(comps[mcall.group(1)])
+                # fusion interior flops count; interior traffic does NOT
+                # (stays in registers/VMEM) — boundary bytes below.
+                st.flops += inner.flops
+                for k, v in inner.coll_bytes.items():
+                    st.coll_bytes[k] = st.coll_bytes.get(k, 0.0) + v
+                st.traffic += _fusion_traffic(op, symtab)
+                continue
+            if oc == "conditional":
+                for mm in re.finditer(r"(?:true_computation|false_computation|"
+                                      r"branch_computations)=\{?%([\w.\-]+)",
+                                      op.line):
+                    st.add(comp_stats(comps[mm.group(1)]), 1.0)
+                continue
+            # ordinary op
+            if oc == "dot":
+                st.flops += _dot_flops(op, symtab)
+            elif oc == "convolution":
+                st.flops += _conv_flops(op, symtab)
+            elif oc in ("copy", "copy-start", "copy-done", "reshape",
+                        "transpose", "broadcast", "slice", "dynamic-slice",
+                        "dynamic-update-slice", "concatenate", "pad", "iota",
+                        "gather", "scatter", "reverse", "reduce-window"):
+                pass  # data movement only (no flops)
+            else:
+                st.flops += _nelems(op.types)  # 1 flop / output element
+            st.traffic += _op_traffic(op, symtab)
+        memo[comp.name] = st
+        return st
+
+    # Only accumulate from ENTRY through the call graph (fusion computations
+    # reached via calls are not double counted because we never iterate them
+    # at top level).
+    return comp_stats(entry)
+
+
+def breakdown(text: str, top: int = 25):
+    """Per-op-name cost attribution (flops/traffic, trip-multiplied).
+
+    Groups by the jax op_name metadata so 'while/body/.../dot_general'
+    sites aggregate across layers — the profile view used for §Perf
+    hypothesis forming."""
+    comps = parse_module(text)
+    entry = next(c for c in comps.values() if c.is_entry)
+    agg: Dict[str, list] = {}
+
+    def visit(comp: Computation, mult: float, flops_only: bool = False):
+        symtab = dict(comp.params)
+        for op in comp.ops:
+            symtab[op.name] = op.types
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                trip = 1
+                m = re.search(r'known_trip_count[":{\s]+n["\s:]+(\d+)', op.line)
+                if m:
+                    trip = int(m.group(1))
+                mc = re.search(r"condition=%([\w.\-]+), body=%([\w.\-]+)",
+                               op.line)
+                if mc:
+                    visit(comps[mc.group(1)], mult * trip, flops_only)
+                    visit(comps[mc.group(2)], mult * trip, flops_only)
+                continue
+            if oc in ("call", "fusion"):
+                # fusion interiors contribute FLOPs; traffic is the
+                # fusion boundary (same accounting as analyze())
+                mcall = re.search(r"(?:calls|to_apply)=%([\w.\-]+)", op.line)
+                if mcall and mcall.group(1) in comps:
+                    visit(comps[mcall.group(1)], mult, True)
+                if not flops_only:
+                    traffic = _fusion_traffic(op, symtab)
+                    mname = re.search(r'op_name="([^"]+)"', op.line)
+                    key = (mname.group(1) if mname else oc)
+                    a = agg.setdefault(key, [0.0, 0.0, oc])
+                    a[1] += traffic * mult
+                continue
+            if oc in ALIAS_OPS:
+                continue
+            flops = 0.0
+            if oc == "dot":
+                flops = _dot_flops(op, symtab)
+            elif oc == "convolution":
+                flops = _conv_flops(op, symtab)
+            traffic = 0.0 if flops_only else _op_traffic(op, symtab)
+            if flops == 0.0 and traffic == 0.0:
+                continue
+            mname = re.search(r'op_name="([^"]+)"', op.line)
+            key = (mname.group(1) if mname else oc)
+            a = agg.setdefault(key, [0.0, 0.0, oc])
+            a[0] += flops * mult
+            a[1] += traffic * mult
+
+    visit(entry, 1.0)
+    rows = sorted(((v[0], v[1], v[2], k) for k, v in agg.items()),
+                  reverse=True)
+    return rows[:top]
+
+
+def analysis_dict(text: str) -> dict:
+    st = analyze(text)
+    return {"flops": st.flops, "traffic_bytes": st.traffic,
+            "collective_bytes": st.coll_bytes,
+            "collective_total": st.collective_total}
+
+
+if __name__ == "__main__":
+    import sys
+
+    with open(sys.argv[1]) as f:
+        print(json.dumps(analysis_dict(f.read()), indent=2))

@@ -1,0 +1,19 @@
+"""Production meshes. Import must never touch jax device state —
+everything is a function."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2, *, pod: int = 0):
+    """Small mesh for CPU tests (requires enough placeholder devices)."""
+    if pod:
+        return jax.make_mesh((pod, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,183 @@
+"""Input/arg specs for the dry-run: ShapeDtypeStruct stand-ins + shardings.
+
+Every (arch × shape) cell resolves to (step_fn, args, in_shardings) with
+no device allocation anywhere. Shape kinds:
+
+  train   -> train_step(state, batch)
+  prefill -> prefill_step(params, batch, cache)
+  decode  -> decode_step(params, tokens, cache)   (one new token, full cache)
+
+Batch sharding: batch dim over ('pod','data') when divisible; the
+long_500k cell (batch=1) instead shards the KV/SSM cache sequence dim
+over 'data' (sequence parallelism for the cache)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import InputShape, ModelConfig
+from ..models import lm
+from ..serve.step import make_decode_step, make_prefill_step
+from ..sharding.rules import (ShardingRules, default_rules, fit_spec,
+                              fitted_shardings, tree_shardings)
+from ..train.step import TrainConfig, abstract_state, make_train_step
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStructs for a training/prefill batch (with labels for train)."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        out["embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+        out["labels"] = sds((b, s), jnp.int32)
+    elif cfg.frontend == "vision":
+        p = cfg.frontend_tokens
+        out["patches"] = sds((b, p, cfg.d_model), jnp.bfloat16)
+        out["tokens"] = sds((b, s - p), jnp.int32)
+        out["labels"] = sds((b, s - p), jnp.int32)
+    else:
+        out["tokens"] = sds((b, s), jnp.int32)
+        out["labels"] = sds((b, s), jnp.int32)
+    if shape.kind != "train":
+        out.pop("labels")
+    return out
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_sharding(mesh: Mesh, batch, *, shard_batch: bool):
+    axes = data_axes(mesh)
+    spec_fn = (lambda x: P(axes, *([None] * (len(x.shape) - 1)))) \
+        if shard_batch else (lambda x: P())
+    return jax.tree.map(lambda x: NamedSharding(mesh, spec_fn(x)), batch)
+
+
+@dataclasses.dataclass
+class Cell:
+    """One dry-run cell, fully resolved."""
+    fn: Any
+    args: Tuple
+    in_shardings: Tuple
+    cfg: ModelConfig
+    shape: InputShape
+    rules: ShardingRules
+
+
+def build_cell(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+               tcfg: Optional[TrainConfig] = None,
+               rules: Optional[ShardingRules] = None,
+               serve_quant: bool = False) -> Cell:
+    tcfg = tcfg or TrainConfig()
+    b = shape.global_batch
+    dp = 1
+    for a in data_axes(mesh):
+        dp *= mesh.shape[a]
+    shard_batch = b % dp == 0 and b >= dp
+
+    if rules is None:
+        overrides = {}
+        if not shard_batch:
+            overrides["batch"] = None
+            overrides["kv_seq"] = "data"   # SP over the cache for batch=1
+        rules = default_rules(**overrides)
+    rules = rules.for_mesh(mesh)
+
+    if shape.kind == "train":
+        state_shapes, state_axes = abstract_state(cfg, tcfg)
+        batch = batch_specs(cfg, shape)
+        fn = make_train_step(cfg, tcfg, rules=rules, mesh=mesh)
+        in_sh = (fitted_shardings(mesh, rules, state_axes, state_shapes),
+                 batch_sharding(mesh, batch, shard_batch=shard_batch))
+        return Cell(fn, (state_shapes, batch), in_sh, cfg, shape, rules)
+
+    # serving cells: weights serve in bf16 (fp32 masters are a training
+    # artifact); serve_quant packs them further via the PPAC engine.
+    pshapes, paxes = lm.abstract_init(cfg)
+    pshapes = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+        if l.dtype == jnp.float32 else l, pshapes)
+    if serve_quant:
+        from ..serve.step import convert_params_for_serving
+        if not cfg.ppac.enabled:  # serve_quant implies the PPAC engine
+            cfg = dataclasses.replace(
+                cfg, ppac=dataclasses.replace(cfg.ppac, enabled=True))
+        pshapes = jax.eval_shape(
+            lambda p: convert_params_for_serving(p, cfg), pshapes)
+    psh = _param_shardings(mesh, rules, pshapes, paxes)
+
+    cache_shapes, cache_axes = _abstract_cache(cfg, b, shape.seq_len)
+    csh = fitted_shardings(mesh, rules, cache_axes, cache_shapes)
+
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, shape)
+        fn = make_prefill_step(cfg, rules=rules)
+        in_sh = (psh, batch_sharding(mesh, batch, shard_batch=shard_batch),
+                 csh)
+        return Cell(fn, (pshapes, batch, cache_shapes), in_sh, cfg, shape,
+                    rules)
+
+    # decode: one new token against a full cache
+    tokens = sds((b, 1), jnp.int32)
+    fn = make_decode_step(cfg, rules=rules)
+    tok_sh = batch_sharding(mesh, tokens, shard_batch=shard_batch)
+    in_sh = (psh, tok_sh, csh)
+    return Cell(fn, (pshapes, tokens, cache_shapes), in_sh, cfg, shape, rules)
+
+
+def _abstract_cache(cfg: ModelConfig, b: int, max_seq: int):
+    box = {}
+
+    def f():
+        c, ax = lm.init_cache(cfg, b, max_seq)
+        box["ax"] = ax
+        return c
+
+    shapes = jax.eval_shape(f)
+    return shapes, box["ax"]
+
+
+def _param_shardings(mesh, rules, pshapes, paxes):
+    """Shardings for (possibly quantized-container) param trees.
+
+    PPAC containers keep the original weight's logical axes: packed4 wq is
+    [in/2, out] (same axis order, divisibility re-checked by fit_spec);
+    packed1 wq is [out, in/32] (axes reversed); scales follow the out dim.
+    """
+    from ..core.engine import QuantContainer
+
+    def spec_or_rep(leaf_axes, leaf):
+        try:
+            spec = fit_spec(mesh, rules.spec(leaf_axes), tuple(leaf.shape))
+            return NamedSharding(mesh, spec)
+        except Exception:
+            return NamedSharding(mesh, P())
+
+    def one(ax, leaf):
+        if isinstance(leaf, QuantContainer):
+            ax = tuple(ax) if ax else (None, None)
+            # stacked (layers) containers carry a leading 'layers' axis
+            lead = ax[:-2] if len(ax) > 2 else ()
+            a_in, a_out = ax[-2], ax[-1]
+            if leaf.kind == "packed1":
+                wq_ax = lead + (a_out, None)
+            else:
+                wq_ax = lead + (a_in, a_out)
+            return QuantContainer(
+                leaf.kind,
+                spec_or_rep(wq_ax, leaf.wq),
+                spec_or_rep(lead + (a_out,), leaf.scale))
+        return spec_or_rep(ax, leaf)
+
+    is_ax = lambda x: x is None or (isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x))
+    return jax.tree.map(one, paxes, pshapes, is_leaf=is_ax)

@@ -1,0 +1,9 @@
+from . import attention, lm, mamba2, moe  # noqa: F401
+from .lm import (  # noqa: F401
+    abstract_init,
+    decode_step,
+    forward,
+    init,
+    init_cache,
+    prefill,
+)

@@ -1,0 +1,438 @@
+"""Attention variants: GQA (+QKV bias, sliding window), MLA (DeepSeek-style).
+
+Memory-efficient chunked attention: queries are processed in chunks via
+``lax.scan`` (peak activation = one [chunk × kv] score tile) with optional
+remat of the chunk body — required for the 32k prefill shapes on a real
+chip and for bounded compile-time memory on the dry-run.
+
+KV caches are plain pytrees: {"k": [B,T,Hkv,D], "v": [B,T,Hkv,Dv]} with a
+scalar write position. Sliding-window attention uses a rolling cache of
+size ``window`` for decode (bounds long-context memory). MLA caches the
+compressed (kv_lora + rope) stream and decodes via the absorbed-projection
+trick — the KV-memory win that makes it the natural PPAC companion for
+decode shapes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from ..sharding.rules import constrain
+from .layers import dense_apply, dense_init, rmsnorm_apply, rmsnorm_init, rope
+
+NEG_INF = -1e9
+
+
+def _attend_chunk(qc, k, v, q_pos, k_valid, *, window: int, scale: float,
+                  causal: bool, rules=None, scores_dtype=None):
+    """qc: [B,C,H,D]; k: [B,T,Hkv,D]; v: [B,T,Hkv,Dv]; q_pos: [C] int32.
+
+    Returns [B,C,H,Dv]. GQA keys/values are repeated to the full head
+    count and every head-indexed tensor is explicitly constrained to the
+    'model' axis: without the constraints GSPMD replicates the quadratic
+    score einsums whenever heads don't divide the axis (observed 16x
+    redundant compute on smollm — EXPERIMENTS.md §Perf iteration 1).
+    """
+    b, c, h, d = qc.shape
+    t, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)   # [B,T,H,D]
+        v = jnp.repeat(v, rep, axis=2)
+    if rules is not None:
+        qc = constrain(qc, rules, "batch", None, "act_heads", None)
+        k = constrain(k, rules, "batch", None, "act_heads", None)
+        v = constrain(v, rules, "batch", None, "act_heads", None)
+    return _attend_prepped(qc, k, v, q_pos, k_valid, window=window,
+                           scale=scale, causal=causal, rules=rules,
+                           scores_dtype=scores_dtype)
+
+
+def _attend_prepped(qc, k, v, q_pos, k_valid, *, window, scale, causal,
+                    rules=None, scores_dtype=None):
+    """Like _attend_chunk but assumes k/v are already head-expanded and
+    constrained (hoisted out of chunk loops so GSPMD gathers once, not
+    once per chunk — §Perf llava iteration 3b)."""
+    b, c, h, d = qc.shape
+    t = k.shape[1]
+    # fp32 ACCUMULATION without materializing fp32 copies of q/k/v
+    # (input .astype(f32) casts were ~half the HBM traffic — §Perf it.2)
+    scores = jnp.einsum("bchd,bthd->bhct", qc, k,
+                        preferred_element_type=jnp.float32) * scale
+    if rules is not None:
+        scores = constrain(scores, rules, "batch", "act_heads", None, None)
+    k_pos = jnp.arange(t)
+    mask = k_pos[None, :] < k_valid  # valid cache entries
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    scores = jnp.where(mask[None, None, :, :], scores, NEG_INF)
+    if scores_dtype is not None:
+        # bf16 probability boundary (softmax max-subtracts internally;
+        # bf16 keeps f32's exponent range) — halves the [C,T] HBM tensors
+        scores = scores.astype(scores_dtype)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhct,bthv->bchv", w.astype(qc.dtype), v,
+                     preferred_element_type=jnp.float32)
+    if rules is not None:
+        out = constrain(out, rules, "batch", None, "act_heads", None)
+    return out
+
+
+def chunked_attention(q, k, v, *, q_offset=0, k_valid=None, causal=True,
+                      window: int = 0, q_chunk: int = 512,
+                      scale: Optional[float] = None, remat: bool = True,
+                      rules=None, blocking: str = "scan",
+                      scores_dtype=None):
+    """q: [B,S,H,D] against k/v: [B,T,Hkv,D*] -> [B,S,H,Dv]."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    k_valid = t if k_valid is None else k_valid
+    k_valid = jnp.asarray(k_valid, jnp.int32)
+
+    if s <= q_chunk:
+        q_pos = q_offset + jnp.arange(s)
+        return _attend_chunk(q, k, v, q_pos, k_valid, window=window,
+                             scale=scale, causal=causal, rules=rules,
+                             scores_dtype=scores_dtype)
+
+    c = q_chunk
+    pad = (-s) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // c
+
+    if blocking == "triangle" and causal and t == s and not window:
+        # Unrolled triangular blocking: chunk i only attends to keys
+        # [0, (i+1)*c) — statically sliced, so the fully-masked half of
+        # the [C, T] score work (and its HBM traffic) never exists.
+        # K/V head expansion + sharding constraints are hoisted OUT of
+        # the loop (inside it, GSPMD re-gathers per chunk).
+        h_full = q.shape[2]
+        rep = h_full // k.shape[2]
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        if rules is not None:
+            k = constrain(k, rules, "batch", None, "act_heads", None)
+            v = constrain(v, rules, "batch", None, "act_heads", None)
+        outs = []
+
+        def chunk_fn(qc, ki, vi, q_pos):
+            if rules is not None:
+                qc = constrain(qc, rules, "batch", None, "act_heads", None)
+            return _attend_prepped(qc, ki, vi, q_pos, ki.shape[1],
+                                   window=0, scale=scale, causal=True,
+                                   rules=rules, scores_dtype=scores_dtype)
+
+        fn = jax.checkpoint(chunk_fn) if remat else chunk_fn
+        for i in range(nq):
+            hi = min((i + 1) * c, t)
+            qc = q[:, i * c:(i + 1) * c]
+            q_pos = q_offset + i * c + jnp.arange(c)
+            outs.append(fn(qc, k[:, :hi], v[:, :hi], q_pos))
+        out = jnp.concatenate(outs, axis=1)
+        return out[:, :s]
+
+    qs = q.reshape(b, nq, c, h, d).transpose(1, 0, 2, 3, 4)  # [nq,B,C,H,D]
+
+    def body(_, xs):
+        qc, idx = xs
+        q_pos = q_offset + idx * c + jnp.arange(c)
+        out = _attend_chunk(qc, k, v, q_pos, k_valid, window=window,
+                            scale=scale, causal=causal, rules=rules,
+                            scores_dtype=scores_dtype)
+        return None, out
+
+    fn = jax.checkpoint(body) if remat else body
+    _, ys = lax.scan(fn, None, (qs, jnp.arange(nq)))
+    out = ys.transpose(1, 0, 2, 3, 4).reshape(b, nq * c, h, v.shape[-1])
+    return out[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["wq"], a["wq"] = dense_init(ks[0], d, h * hd, ("embed", "heads"),
+                                  bias=cfg.qkv_bias)
+    p["wk"], a["wk"] = dense_init(ks[1], d, hkv * hd, ("embed", "kv_heads"),
+                                  bias=cfg.qkv_bias)
+    p["wv"], a["wv"] = dense_init(ks[2], d, hkv * hd, ("embed", "kv_heads"),
+                                  bias=cfg.qkv_bias)
+    p["wo"], a["wo"] = dense_init(ks[3], h * hd, d, ("heads", "embed"))
+    return p, a
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16):
+    t = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    shape = (batch, t, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_dtype == "int8":
+        # per-(token, head) max-scaled int8 store — 2x smaller cache, the
+        # decode memory-roofline lever paired with PPAC resident weights
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "ks": jnp.zeros(shape[:3] + (1,), jnp.bfloat16),
+                "vs": jnp.zeros(shape[:3] + (1,), jnp.bfloat16)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_cache_axes(cfg: ModelConfig):
+    ax = ("batch", "kv_seq", "kv_heads", None)
+    if cfg.kv_dtype == "int8":
+        return {"k": ax, "v": ax, "ks": ax, "vs": ax}
+    return {"k": ax, "v": ax}
+
+
+GQA_CACHE_AXES = {"k": ("batch", "kv_seq", "kv_heads", None),
+                  "v": ("batch", "kv_seq", "kv_heads", None)}
+
+
+def _q8_kv(x):
+    """x [B,S,Hkv,D] -> (int8 values, bf16 scales [B,S,Hkv,1])."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def _decode_attend_q8(q, cache, pos, *, scale, rules=None):
+    """Quantized-cache decode attention, GQA-grouped (NO key/value repeat:
+    repeating a seq-sharded cache forces GSPMD into involuntary full
+    rematerialization — replicate + repartition of the whole cache per
+    layer; XLA emits a warning and ~800 GiB of phantom copies).
+
+    The per-(t,g) scales factor out of both einsums, so no dequantized
+    [B,T,G,D] tensor is materialized:
+        scores = (q · ki) * ks ;  out = ((w*vs) · vi)
+    """
+    b, s, h, d = q.shape          # s == 1
+    ki, vi = cache["k"], cache["v"]
+    ks, vs = cache.get("ks"), cache.get("vs")
+    t, g = ki.shape[1], ki.shape[2]
+    rep = h // g
+    qg = q.reshape(b, s, g, rep, d)
+    scores = jnp.einsum("bsgrd,btgd->bgrst", qg, ki.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    if ks is not None:
+        scores = scores * ks[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+    mask = jnp.arange(t)[None, :] <= pos
+    scores = jnp.where(mask[None, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    wv = w.astype(q.dtype)
+    if vs is not None:
+        wv = wv * vs[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+    out = jnp.einsum("bgrst,btgv->bsgrv", wv, vi.astype(q.dtype),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, -1).astype(q.dtype)
+
+
+def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
+              mode: str = "float", rules=None):
+    """x: [B,S,d]. Train/prefill when cache is None or S>1 (writes cache at
+    offset 0); decode (S==1) updates the rolling/linear cache at ``pos``."""
+    dtype = jnp.dtype(cfg.dtype)
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = dense_apply(p["wq"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
+    k = dense_apply(p["wk"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
+    v = dense_apply(p["wv"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    q = rope(q, positions, theta=cfg.rope_theta)
+    k = rope(k, positions, theta=cfg.rope_theta)
+
+    sdt = (jnp.bfloat16 if cfg.scores_dtype == "bfloat16" else None)
+    new_cache = cache
+    if cache is None:
+        attn = chunked_attention(q, k, v, causal=True,
+                                 window=cfg.sliding_window,
+                                 q_chunk=cfg.q_chunk,
+                                 remat=cfg.remat != "none", rules=rules,
+                                 blocking=cfg.attn_blocking,
+                                 scores_dtype=sdt)
+    elif s > 1:  # prefill into cache
+        t = cache["k"].shape[1]
+        kw = k[:, -t:] if cfg.sliding_window else k
+        vw = v[:, -t:] if cfg.sliding_window else v
+        if "ks" in cache:
+            kq, ksc = _q8_kv(kw)
+            vq, vsc = _q8_kv(vw)
+            new_cache = {
+                "k": lax.dynamic_update_slice(cache["k"], kq, (0, 0, 0, 0)),
+                "v": lax.dynamic_update_slice(cache["v"], vq, (0, 0, 0, 0)),
+                "ks": lax.dynamic_update_slice(cache["ks"], ksc, (0, 0, 0, 0)),
+                "vs": lax.dynamic_update_slice(cache["vs"], vsc, (0, 0, 0, 0)),
+            }
+        else:
+            new_cache = {
+                "k": lax.dynamic_update_slice(cache["k"], kw.astype(cache["k"].dtype),
+                                              (0, 0, 0, 0)),
+                "v": lax.dynamic_update_slice(cache["v"], vw.astype(cache["v"].dtype),
+                                              (0, 0, 0, 0)),
+            }
+        attn = chunked_attention(q, k, v, causal=True,
+                                 window=cfg.sliding_window,
+                                 q_chunk=cfg.q_chunk,
+                                 remat=cfg.remat != "none", rules=rules,
+                                 blocking=cfg.attn_blocking,
+                                 scores_dtype=sdt)
+    elif "ks" in cache:  # decode against the quantized cache
+        kq, ksc = _q8_kv(k)
+        vq, vsc = _q8_kv(v)
+        new_cache = {
+            "k": lax.dynamic_update_slice(cache["k"], kq, (0, pos, 0, 0)),
+            "v": lax.dynamic_update_slice(cache["v"], vq, (0, pos, 0, 0)),
+            "ks": lax.dynamic_update_slice(cache["ks"], ksc, (0, pos, 0, 0)),
+            "vs": lax.dynamic_update_slice(cache["vs"], vsc, (0, pos, 0, 0)),
+        }
+        attn = _decode_attend_q8(q, new_cache, pos, scale=hd ** -0.5,
+                                 rules=rules)
+    else:  # decode
+        t = cache["k"].shape[1]
+        slot = (pos % t) if cfg.sliding_window else pos
+        ck = lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        if not cfg.sliding_window:
+            attn = _decode_attend_q8(q, new_cache, pos, scale=hd ** -0.5,
+                                     rules=rules)
+        elif cfg.sliding_window:
+            # rolling cache: entries are valid but unordered; causality is
+            # guaranteed by construction (all entries are within window).
+            kpos_valid = jnp.minimum(pos + 1, t)
+            attn = chunked_attention(q, ck.astype(dtype), cv.astype(dtype),
+                                     q_offset=pos, k_valid=kpos_valid,
+                                     causal=False, window=0,
+                                     scale=hd ** -0.5, remat=False,
+                                     rules=rules)
+        else:
+            attn = chunked_attention(q, ck.astype(dtype), cv.astype(dtype),
+                                     q_offset=pos, k_valid=pos + 1,
+                                     causal=False, scale=hd ** -0.5,
+                                     remat=False, rules=rules)
+    attn = attn.reshape(b, s, h * hd).astype(dtype)
+    y = dense_apply(p["wo"], attn, ppac=cfg.ppac, mode=mode, dtype=dtype)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V2-style multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["w_dkv"], a["w_dkv"] = dense_init(ks[0], d, m.kv_lora_rank,
+                                        ("embed", "kv_lora"))
+    p["norm_kv"], a["norm_kv"] = rmsnorm_init(m.kv_lora_rank, ("kv_lora",))
+    p["w_kr"], a["w_kr"] = dense_init(ks[1], d, m.qk_rope_head_dim,
+                                      ("embed", None))
+    p["w_q"], a["w_q"] = dense_init(
+        ks[2], d, h * (m.qk_nope_head_dim + m.qk_rope_head_dim),
+        ("embed", "heads"))
+    p["w_uk"], a["w_uk"] = dense_init(ks[3], m.kv_lora_rank,
+                                      h * m.qk_nope_head_dim,
+                                      ("kv_lora", "heads"))
+    p["w_uv"], a["w_uv"] = dense_init(ks[4], m.kv_lora_rank,
+                                      h * m.v_head_dim, ("kv_lora", "heads"))
+    p["wo"], a["wo"] = dense_init(ks[5], h * m.v_head_dim, d,
+                                  ("heads", "embed"))
+    return p, a
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {"kv_c": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), dtype)}
+
+
+MLA_CACHE_AXES = {"kv_c": ("batch", "kv_seq", None),
+                  "k_rope": ("batch", "kv_seq", None)}
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
+              mode: str = "float", rules=None):
+    m = cfg.mla
+    dtype = jnp.dtype(cfg.dtype)
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    scale = (dn + dr) ** -0.5
+
+    kv_c = dense_apply(p["w_dkv"], x, dtype=dtype)
+    kv_c = rmsnorm_apply(p["norm_kv"], kv_c, eps=cfg.norm_eps, dtype=dtype)
+    k_r = dense_apply(p["w_kr"], x, dtype=dtype).reshape(b, s, 1, dr)
+    k_r = rope(k_r, positions, theta=cfg.rope_theta).reshape(b, s, dr)
+
+    q = dense_apply(p["w_q"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
+    q = q.reshape(b, s, h, dn + dr)
+    q_n, q_r = q[..., :dn], q[..., dn:]
+    q_r = rope(q_r, positions, theta=cfg.rope_theta)
+
+    if cache is None or s > 1:
+        # Non-absorbed (train/prefill) path: materialize K/V.
+        k_n = dense_apply(p["w_uk"], kv_c, dtype=dtype).reshape(b, s, h, dn)
+        v = dense_apply(p["w_uv"], kv_c, dtype=dtype).reshape(b, s, h, dv)
+        k_full = jnp.concatenate(
+            [k_n, jnp.broadcast_to(k_r[:, :, None, :], (b, s, h, dr))], -1)
+        q_full = jnp.concatenate([q_n, q_r], -1)
+        attn = chunked_attention(q_full, k_full, v, causal=True,
+                                 q_chunk=cfg.q_chunk, scale=scale,
+                                 remat=cfg.remat != "none", rules=rules,
+                                 blocking=cfg.attn_blocking,
+                                 scores_dtype=(jnp.bfloat16
+                                               if cfg.scores_dtype == "bfloat16"
+                                               else None))
+        new_cache = cache
+        if cache is not None:
+            new_cache = {
+                "kv_c": lax.dynamic_update_slice(
+                    cache["kv_c"], kv_c.astype(cache["kv_c"].dtype), (0, 0, 0)),
+                "k_rope": lax.dynamic_update_slice(
+                    cache["k_rope"], k_r.astype(cache["k_rope"].dtype), (0, 0, 0)),
+            }
+    else:
+        # Absorbed decode: score against the compressed cache directly.
+        ck = lax.dynamic_update_slice(
+            cache["kv_c"], kv_c.astype(cache["kv_c"].dtype), (0, pos, 0))
+        cr = lax.dynamic_update_slice(
+            cache["k_rope"], k_r.astype(cache["k_rope"].dtype), (0, pos, 0))
+        new_cache = {"kv_c": ck, "k_rope": cr}
+        t = ck.shape[1]
+        w_uk = p["w_uk"]["w"].astype(dtype).reshape(m.kv_lora_rank, h, dn)
+        # absorb: q' = q_n @ w_uk^T  -> [B,1,H,lora]
+        q_abs = jnp.einsum("bshd,lhd->bshl", q_n, w_uk)
+        scores = (jnp.einsum("bshl,btl->bhst", q_abs, ck,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshd,btd->bhst", q_r, cr,
+                               preferred_element_type=jnp.float32)) * scale
+        k_pos = jnp.arange(t)
+        mask = k_pos[None, :] <= pos
+        scores = jnp.where(mask[None, None, :, :], scores, NEG_INF)
+        wts = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,btl->bshl", wts.astype(ck.dtype), ck,
+                         preferred_element_type=jnp.float32)
+        w_uv = p["w_uv"]["w"].astype(jnp.float32).reshape(m.kv_lora_rank, h, dv)
+        attn = jnp.einsum("bshl,lhv->bshv", ctx, w_uv)
+
+    attn = attn.reshape(b, s, h * dv).astype(dtype)
+    y = dense_apply(p["wo"], attn, ppac=cfg.ppac, mode=mode, dtype=dtype)
+    return y, new_cache

@@ -1,0 +1,461 @@
+"""Unified causal LM covering all ten assigned architectures.
+
+One parameterized model: token/frontend embeddings -> N blocks -> norm ->
+logits. Block flavor is dispatched on cfg.family:
+
+  dense/audio/vlm : [GQA|MLA] attention + SwiGLU MLP (pre-norm)
+  moe             : attention + (dense MLP for leading layers | MoE)
+  ssm             : Mamba2 (SSD) block
+  hybrid          : Mamba2 backbone + one *shared* attention+MLP block
+                    applied every cfg.hybrid.shared_every layers (Zamba2)
+
+Identical layers are stacked and executed with ``lax.scan`` (small HLO —
+essential for the 80-layer dry-runs); heterogeneous prefixes (MoE leading
+dense layers) and the hybrid's shared block are handled outside/inside the
+scan respectively. Remat policy per cfg.remat.
+
+Entry points:
+  init(cfg, key)                      -> (params, axes)
+  forward(params, cfg, batch)         -> (logits, aux)        train/eval
+  init_cache(cfg, batch, max_seq)     -> (cache, cache_axes)
+  prefill(params, cfg, batch, cache)  -> (logits, cache)
+  decode_step(params, cfg, tokens, pos, cache) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from ..sharding.rules import ShardingRules, constrain
+from . import attention as attn_mod
+from . import mamba2 as ssm_mod
+from . import moe as moe_mod
+from .layers import (
+    dense_apply,
+    dense_init,
+    embed_apply,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    unembed_apply,
+)
+
+def AUX0():
+    return {"lb_loss": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32)}
+
+
+def _is_axes(x):
+    return x is None or (isinstance(x, tuple)
+                         and all(a is None or isinstance(a, str) for a in x))
+
+
+def _stack_init(init_fn, key, n: int):
+    """Stack n i.i.d. block inits along a leading 'layers' axis.
+
+    Axes (static strings) are captured through a side channel so this
+    remains traceable under jax.eval_shape (abstract init for the dry-run).
+    """
+    keys = jax.random.split(key, n)
+    box = {}
+
+    def one(k):
+        p, a = init_fn(k)
+        box["a"] = a
+        return p
+
+    p = jax.vmap(one)(keys)
+    a = jax.tree.map(lambda ax: ("layers",) + tuple(ax) if ax else ("layers",),
+                     box["a"], is_leaf=_is_axes)
+    return p, a
+
+
+def abstract_init(cfg: ModelConfig, key=None):
+    """(param ShapeDtypeStructs, axes) without allocating anything."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    box = {}
+
+    def f(k):
+        p, a = init(cfg, k)
+        box["a"] = a
+        return p
+
+    shapes = jax.eval_shape(f, key)
+    return shapes, box["a"]
+
+
+# -- block definitions --------------------------------------------------------
+
+def _attn_init(key, cfg: ModelConfig):
+    return (attn_mod.mla_init(key, cfg) if cfg.mla
+            else attn_mod.gqa_init(key, cfg))
+
+
+def _attn_apply(p, x, cfg, **kw):
+    return (attn_mod.mla_apply(p, x, cfg, **kw) if cfg.mla
+            else attn_mod.gqa_apply(p, x, cfg, **kw))
+
+
+def _dense_block_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    k1, k2 = jax.random.split(key)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = rmsnorm_init(cfg.d_model)
+    p["attn"], a["attn"] = _attn_init(k1, cfg)
+    p["ln2"], a["ln2"] = rmsnorm_init(cfg.d_model)
+    p["mlp"], a["mlp"] = mlp_init(k2, cfg.d_model, d_ff or cfg.d_ff)
+    return p, a
+
+
+def _dense_block_apply(p, x, cfg, *, positions, cache=None, pos=None,
+                       mode="float", rules=None):
+    h = rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
+    att, new_cache = _attn_apply(p["attn"], h, cfg, positions=positions,
+                                 cache=cache, pos=pos, mode=mode, rules=rules)
+    x = x + att
+    x = constrain(x, rules, "batch", "seq", None) if rules else x
+    h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
+    x = x + mlp_apply(p["mlp"], h, cfg, mode=mode)
+    return x, new_cache, AUX0()
+
+
+def _moe_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = rmsnorm_init(cfg.d_model)
+    p["attn"], a["attn"] = _attn_init(k1, cfg)
+    p["ln2"], a["ln2"] = rmsnorm_init(cfg.d_model)
+    p["moe"], a["moe"] = moe_mod.moe_init(k2, cfg)
+    return p, a
+
+
+def _moe_block_apply(p, x, cfg, *, positions, cache=None, pos=None,
+                     mode="float", rules=None):
+    h = rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
+    att, new_cache = _attn_apply(p["attn"], h, cfg, positions=positions,
+                                 cache=cache, pos=pos, mode=mode, rules=rules)
+    x = x + att
+    x = constrain(x, rules, "batch", "seq", None) if rules else x
+    h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
+    y, aux = moe_mod.moe_apply(p["moe"], h, cfg, mode=mode)
+    return x + y, new_cache, aux
+
+
+def _ssm_block_init(key, cfg: ModelConfig):
+    p, a = {}, {}
+    p["ln"], a["ln"] = rmsnorm_init(cfg.d_model)
+    p["mamba"], a["mamba"] = ssm_mod.mamba2_init(key, cfg)
+    return p, a
+
+
+def _ssm_block_apply(p, x, cfg, *, positions=None, cache=None, pos=None,
+                     mode="float", rules=None):
+    h = rmsnorm_apply(p["ln"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
+    y, new_cache = ssm_mod.mamba2_apply(p["mamba"], h, cfg, cache=cache,
+                                        mode=mode)
+    return x + y, new_cache, AUX0()
+
+
+# -- model --------------------------------------------------------------------
+
+def _block_fns(cfg: ModelConfig):
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        return _ssm_block_init, _ssm_block_apply
+    if cfg.family == "moe":
+        return _moe_block_init, _moe_block_apply
+    return _dense_block_init, _dense_block_apply
+
+
+def init(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {}
+    a: Dict[str, Any] = {}
+    p["embed"], a["embed"] = embed_init(ks[0], cfg.vocab, cfg.d_model)
+    binit, _ = _block_fns(cfg)
+
+    n_scan = cfg.n_layers
+    if cfg.moe and cfg.moe.first_dense_layers:
+        nd = cfg.moe.first_dense_layers
+        p["dense_layers"], a["dense_layers"] = _stack_init(
+            lambda k: _dense_block_init(k, cfg, d_ff=cfg.moe.d_ff_dense
+                                        or cfg.d_ff), ks[1], nd)
+        n_scan = cfg.n_layers - nd
+    p["layers"], a["layers"] = _stack_init(
+        lambda k: binit(k, cfg), ks[2], n_scan)
+
+    if cfg.family == "hybrid":
+        hp, ha = _dense_block_init(ks[3], cfg, d_ff=cfg.hybrid.shared_d_ff)
+        p["shared"], a["shared"] = hp, ha
+
+    if cfg.frontend == "vision":
+        p["patch_proj"], a["patch_proj"] = dense_init(
+            ks[4], cfg.d_model, cfg.d_model, ("embed", None))
+
+    p["final_norm"], a["final_norm"] = rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["lm_head"], a["lm_head"] = dense_init(ks[5], cfg.d_model, cfg.vocab,
+                                                ("embed", "vocab"))
+    return p, a
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch, rules=None):
+    """Merge token/frontend inputs into [B,S,d] activations."""
+    dtype = jnp.dtype(cfg.dtype)
+    parts = []
+    if "embeds" in batch:  # audio frontend stub: precomputed frame embeddings
+        parts.append(batch["embeds"].astype(dtype))
+    if "patches" in batch:  # vision frontend stub: precomputed patch embeds
+        pe = batch["patches"].astype(dtype)
+        if "patch_proj" in params:
+            pe = dense_apply(params["patch_proj"], pe, dtype=dtype)
+        parts.append(pe)
+    if "tokens" in batch:
+        parts.append(embed_apply(params["embed"], batch["tokens"], dtype=dtype))
+    h = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if rules:
+        h = constrain(h, rules, "batch", "seq", None)
+    return h
+
+
+def _run_layers(params, cfg: ModelConfig, h, *, positions, caches=None,
+                pos=None, mode="float", rules=None, layer_offset=0):
+    """Scan (or unroll, for hybrid) the stacked blocks; returns
+    (h, new_caches, aux)."""
+    _, bapply = _block_fns(cfg)
+    aux = AUX0()
+
+    def body(carry, xs):
+        hh, ax = carry
+        if caches is None:
+            lp = xs
+            lc = None
+        else:
+            lp, lc = xs
+        hh, nc, a2 = bapply(lp, hh, cfg, positions=positions, cache=lc,
+                            pos=pos, mode=mode, rules=rules)
+        ax = {k: ax[k] + a2[k] for k in ax}
+        return (hh, ax), (nc if caches is not None else 0)
+
+    if cfg.remat == "dots":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+    elif cfg.remat != "none":
+        body_fn = jax.checkpoint(body)
+    else:
+        body_fn = body
+
+    if cfg.family == "hybrid":
+        # unrolled: interleave the shared attention block. Each block is
+        # individually rematerialized (the unrolled path bypasses the scan
+        # body checkpoint).
+        def shared_fn(sp, hh, sc):
+            return _dense_block_apply(sp, hh, cfg, positions=positions,
+                                      cache=sc, pos=pos, mode=mode,
+                                      rules=rules)
+
+        def block_fn(lp, hh, lc):
+            return bapply(lp, hh, cfg, positions=positions, cache=lc,
+                          pos=pos, mode=mode, rules=rules)
+
+        if cfg.remat != "none":
+            shared_fn = jax.checkpoint(shared_fn)
+            block_fn = jax.checkpoint(block_fn)
+
+        n = jax.tree.leaves(params["layers"])[0].shape[0]
+        new_caches = {"layers": [], "shared": []}
+        sh_i = 0
+        for i in range(n):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            lc = (jax.tree.map(lambda t: t[i], caches["layers"])
+                  if caches is not None else None)
+            if i % cfg.hybrid.shared_every == 0:
+                sc = (jax.tree.map(lambda t: t[sh_i], caches["shared"])
+                      if caches is not None else None)
+                h, nsc, a2 = shared_fn(params["shared"], h, sc)
+                aux = {k: aux[k] + a2[k] for k in aux}
+                if caches is not None:
+                    new_caches["shared"].append(nsc)
+                sh_i += 1
+            h, nc, a2 = block_fn(lp, h, lc)
+            aux = {k: aux[k] + a2[k] for k in aux}
+            if caches is not None:
+                new_caches["layers"].append(nc)
+        if caches is not None:
+            stack = lambda lst: jax.tree.map(lambda *t: jnp.stack(t), *lst)
+            return h, {"layers": stack(new_caches["layers"]),
+                       "shared": stack(new_caches["shared"])}, aux
+        return h, None, aux
+
+    xs = params["layers"] if caches is None else (params["layers"],
+                                                  caches["layers"])
+    (h, aux), ncs = lax.scan(body_fn, (h, aux), xs)
+    new_caches = None if caches is None else {"layers": ncs}
+    return h, new_caches, aux
+
+
+def forward(params, cfg: ModelConfig, batch, *, mode: str = "float",
+            rules: Optional[ShardingRules] = None):
+    """Training/eval forward: batch -> (logits [B,S,V] fp32, aux)."""
+    h = _embed_inputs(params, cfg, batch, rules)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    aux = AUX0()
+
+    if "dense_layers" in params:
+        for i in range(jax.tree.leaves(params["dense_layers"])[0].shape[0]):
+            lp = jax.tree.map(lambda t: t[i], params["dense_layers"])
+            h, _, a2 = _dense_block_apply(lp, h, cfg, positions=positions,
+                                          mode=mode, rules=rules)
+            aux = {k: aux[k] + a2[k] for k in aux}
+
+    h, _, a2 = _run_layers(params, cfg, h, positions=positions, mode=mode,
+                           rules=rules)
+    aux = {k: aux[k] + a2[k] for k in aux}
+    h = rmsnorm_apply(params["final_norm"], h, eps=cfg.norm_eps,
+                      dtype=jnp.dtype(cfg.dtype))
+    if cfg.tie_embeddings:
+        logits = unembed_apply(params["embed"], h, dtype=jnp.dtype(cfg.dtype))
+    else:
+        logits = dense_apply(params["lm_head"], h,
+                             dtype=jnp.dtype(cfg.dtype)).astype(jnp.float32)
+    if rules:
+        logits = constrain(logits, rules, "batch", None, "vocab")
+    return logits, aux
+
+
+# -- caches -------------------------------------------------------------------
+
+def _layer_cache_init(cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    if cfg.family in ("ssm", "hybrid"):
+        return (ssm_mod.mamba2_cache_init(cfg, batch, dtype),
+                ssm_mod.MAMBA2_CACHE_AXES)
+    if cfg.mla:
+        return (attn_mod.mla_cache_init(cfg, batch, max_seq, dtype),
+                attn_mod.MLA_CACHE_AXES)
+    return (attn_mod.gqa_cache_init(cfg, batch, max_seq, dtype),
+            attn_mod.gqa_cache_axes(cfg))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    """Returns (cache, cache_axes). Layer-stacked; hybrid adds shared-attn
+    caches (one per shared-block application)."""
+    single, axes1 = _layer_cache_init(cfg, batch, max_seq, dtype)
+    n_scan = cfg.n_layers
+    if cfg.moe and cfg.moe.first_dense_layers:
+        n_scan -= cfg.moe.first_dense_layers
+
+    def stack(t, n):
+        return jax.tree.map(lambda x: jnp.zeros((n,) + x.shape, x.dtype), t)
+
+    cache = {"layers": stack(single, n_scan)}
+    axes = {"layers": jax.tree.map(
+        lambda ax: ("layers",) + tuple(ax), axes1, is_leaf=_is_axes)}
+    if cfg.moe and cfg.moe.first_dense_layers:
+        dsingle = attn_mod.mla_cache_init(cfg, batch, max_seq, dtype) \
+            if cfg.mla else attn_mod.gqa_cache_init(cfg, batch, max_seq, dtype)
+        daxes = attn_mod.MLA_CACHE_AXES if cfg.mla \
+            else attn_mod.gqa_cache_axes(cfg)
+        cache["dense_layers"] = stack(dsingle, cfg.moe.first_dense_layers)
+        axes["dense_layers"] = jax.tree.map(
+            lambda ax: ("layers",) + tuple(ax), daxes, is_leaf=_is_axes)
+    if cfg.family == "hybrid":
+        n_shared = (cfg.n_layers + cfg.hybrid.shared_every - 1) \
+            // cfg.hybrid.shared_every
+        sh = attn_mod.gqa_cache_init(cfg, batch, max_seq, dtype)
+        cache["shared"] = stack(sh, n_shared)
+        axes["shared"] = jax.tree.map(
+            lambda ax: ("layers",) + tuple(ax), attn_mod.GQA_CACHE_AXES,
+            is_leaf=_is_axes)
+    cache["pos"] = jnp.zeros((), jnp.int32)
+    axes["pos"] = None
+    return cache, axes
+
+
+def _split_pos(cache):
+    c = {k: v for k, v in cache.items() if k != "pos"}
+    return c, cache["pos"]
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, *, mode: str = "float",
+            rules: Optional[ShardingRules] = None):
+    """Run the full prompt, filling caches. Returns (logits, cache)."""
+    caches, _ = _split_pos(cache)
+    h = _embed_inputs(params, cfg, batch, rules)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    aux = AUX0()
+    new = dict(cache)
+    if "dense_layers" in params:
+        ncs = []
+        for i in range(jax.tree.leaves(params["dense_layers"])[0].shape[0]):
+            lp = jax.tree.map(lambda t: t[i], params["dense_layers"])
+            lc = jax.tree.map(lambda t: t[i], caches["dense_layers"])
+            h, nc, _ = _dense_block_apply(lp, h, cfg, positions=positions,
+                                          cache=lc, mode=mode, rules=rules)
+            ncs.append(nc)
+        new["dense_layers"] = jax.tree.map(lambda *t: jnp.stack(t), *ncs)
+    h, ncaches, _ = _run_layers(params, cfg, h, positions=positions,
+                                caches={k: caches[k] for k in ("layers", "shared")
+                                        if k in caches},
+                                mode=mode, rules=rules)
+    new.update(ncaches)
+    h = rmsnorm_apply(params["final_norm"], h, eps=cfg.norm_eps,
+                      dtype=jnp.dtype(cfg.dtype))
+    h_last = h[:, -1:, :]
+    if cfg.tie_embeddings:
+        logits = unembed_apply(params["embed"], h_last,
+                               dtype=jnp.dtype(cfg.dtype))
+    else:
+        logits = dense_apply(params["lm_head"], h_last,
+                             dtype=jnp.dtype(cfg.dtype)).astype(jnp.float32)
+    new["pos"] = jnp.asarray(s, jnp.int32)
+    return logits, new
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, *,
+                mode: str = "float", rules: Optional[ShardingRules] = None):
+    """One decode step: tokens [B,1] -> (logits [B,1,V], cache)."""
+    caches, pos = _split_pos(cache)
+    h = embed_apply(params["embed"], tokens, dtype=jnp.dtype(cfg.dtype))
+    b = h.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    new = dict(cache)
+    if "dense_layers" in params:
+        ncs = []
+        for i in range(jax.tree.leaves(params["dense_layers"])[0].shape[0]):
+            lp = jax.tree.map(lambda t: t[i], params["dense_layers"])
+            lc = jax.tree.map(lambda t: t[i], caches["dense_layers"])
+            h, nc, _ = _moe_or_dense_decode(lp, h, cfg, positions, lc, pos,
+                                            mode, rules, dense=True)
+            ncs.append(nc)
+        new["dense_layers"] = jax.tree.map(lambda *t: jnp.stack(t), *ncs)
+    h, ncaches, _ = _run_layers(params, cfg, h, positions=positions,
+                                caches={k: caches[k] for k in ("layers", "shared")
+                                        if k in caches},
+                                pos=pos, mode=mode, rules=rules)
+    new.update(ncaches)
+    h = rmsnorm_apply(params["final_norm"], h, eps=cfg.norm_eps,
+                      dtype=jnp.dtype(cfg.dtype))
+    if cfg.tie_embeddings:
+        logits = unembed_apply(params["embed"], h, dtype=jnp.dtype(cfg.dtype))
+    else:
+        logits = dense_apply(params["lm_head"], h,
+                             dtype=jnp.dtype(cfg.dtype)).astype(jnp.float32)
+    new["pos"] = pos + 1
+    return logits, new
+
+
+def _moe_or_dense_decode(lp, h, cfg, positions, lc, pos, mode, rules, *,
+                         dense: bool):
+    if dense:
+        return _dense_block_apply(lp, h, cfg, positions=positions, cache=lc,
+                                  pos=pos, mode=mode, rules=rules)
+    return _moe_block_apply(lp, h, cfg, positions=positions, cache=lc,
+                            pos=pos, mode=mode, rules=rules)

@@ -1,0 +1,213 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train scan + O(1) decode.
+
+Implements the SSD algorithm of arXiv:2405.21060: within-chunk quadratic
+attention-like form + inter-chunk linear recurrence, in fp32 for the decay
+algebra. Decode carries (ssm_state [B,H,N,P], conv_state [B,dc-1,conv_dim])
+— constant memory per step, which is what qualifies SSM archs for the
+long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .layers import _normal, dense_apply, dense_init
+
+
+def mamba2_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, nh, conv_dim
+
+
+def mamba2_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + nh
+    p, a = {}, {}
+    p["in_proj"], a["in_proj"] = dense_init(ks[0], d, proj_out,
+                                            ("embed", "ssm_inner"))
+    p["conv_w"] = _normal(ks[1], (conv_dim, s.d_conv), stddev=0.1)
+    a["conv_w"] = ("ssm_inner", "conv")
+    p["conv_b"] = jnp.zeros((conv_dim,), jnp.float32)
+    a["conv_b"] = ("ssm_inner",)
+    p["A_log"] = jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32))
+    a["A_log"] = ("ssm_inner",)
+    p["dt_bias"] = jnp.zeros((nh,), jnp.float32)
+    a["dt_bias"] = ("ssm_inner",)
+    p["D"] = jnp.ones((nh,), jnp.float32)
+    a["D"] = ("ssm_inner",)
+    p["norm_scale"] = jnp.ones((d_in,), jnp.float32)
+    a["norm_scale"] = ("ssm_inner",)
+    p["out_proj"], a["out_proj"] = dense_init(ks[2], d_in, d,
+                                              ("ssm_inner", "embed"))
+    return p, a
+
+
+def mamba2_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nh, s.d_state, s.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+MAMBA2_CACHE_AXES = {"ssm": ("batch", "ssm_inner", None, None),
+                     "conv": ("batch", None, "ssm_inner")}
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv: xbc [B,S,C], w [C,dc], b [C]."""
+    dc = w.shape[-1]
+    x = jnp.pad(xbc, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = lax.conv_general_dilated(
+        x.astype(jnp.float32), w.T[:, None, :].astype(jnp.float32),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[0])
+    return out + b
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    s = cfg.ssm
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim:]
+    return z, xbc, dt
+
+
+def _split_xbc(cfg: ModelConfig, xbc):
+    s = cfg.ssm
+    d_in, nh, _ = mamba2_dims(cfg)
+    g, n = s.n_groups, s.d_state
+    x = xbc[..., :d_in]
+    bc = xbc[..., d_in:]
+    b_ssm = bc[..., :g * n].reshape(bc.shape[:-1] + (g, n))
+    c_ssm = bc[..., g * n:].reshape(bc.shape[:-1] + (g, n))
+    return x, b_ssm, c_ssm
+
+
+def ssd_chunked(x, dt, a_log, b_ssm, c_ssm, *, chunk: int):
+    """SSD scan. x [B,S,H,P], dt [B,S,H], b/c [B,S,G,N] -> y [B,S,H,P] fp32."""
+    bsz, s, h, p = x.shape
+    g, n = b_ssm.shape[2], b_ssm.shape[3]
+    rep = h // g
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+
+    a = -jnp.exp(a_log.astype(jnp.float32))            # [H], negative
+    da = dt * a                                        # [B,S,H]
+    xr = x * dt[..., None]                             # dt-scaled input
+    bh = jnp.repeat(b_ssm, rep, axis=2)                # [B,S,H,N]
+    ch = jnp.repeat(c_ssm, rep, axis=2)
+
+    def c_(t, extra=()):  # chunkify
+        return t.reshape((bsz, nc, q) + t.shape[2:])
+
+    da_c, xr_c, bh_c, ch_c = c_(da), c_(xr), c_(bh), c_(ch)
+    cs = jnp.cumsum(da_c, axis=2)                      # [B,nc,Q,H] inclusive
+
+    # within-chunk (diagonal blocks)
+    li = cs[:, :, :, None, :] - cs[:, :, None, :, :]   # [B,nc,Qi,Qj,H]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", ch_c, bh_c)
+    y_diag = jnp.einsum("bcijh,bcijh,bcjhp->bcihp", cb, decay, xr_c)
+
+    # chunk states and inter-chunk recurrence
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)         # [B,nc,Q,H]
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp", bh_c, decay_end, xr_c)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])             # [B,nc,H]
+
+    def scan_body(carry, xs):
+        st, dec = xs                                   # [B,H,N,P], [B,H]
+        prev = carry
+        new = prev * dec[..., None, None] + st
+        return new, prev
+
+    init = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, prev_states = lax.scan(
+        scan_body, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [B,nc,H,N,P]
+
+    y_off = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", ch_c, prev_states,
+                       jnp.exp(cs))
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y
+
+
+def mamba2_apply(p, x, cfg: ModelConfig, *, cache=None, mode: str = "float"):
+    """x: [B,S,d]. Returns (y, new_cache). cache=None -> train (no state);
+    S==1 with cache -> decode step; S>1 with cache -> prefill (state at end)."""
+    s_cfg = cfg.ssm
+    dtype = jnp.dtype(cfg.dtype)
+    bsz, s, d = x.shape
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+
+    zxbcdt = dense_apply(p["in_proj"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    if cache is not None and s == 1:
+        # ---- decode: O(1) state update ----
+        window = jnp.concatenate(
+            [cache["conv"].astype(jnp.float32), xbc.astype(jnp.float32)], 1)
+        conv_out = jnp.einsum("bwc,cw->bc", window,
+                              p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+        xbc_t = jax.nn.silu(conv_out)[:, None, :]
+        new_conv = window[:, 1:].astype(cache["conv"].dtype)
+        xi, b_ssm, c_ssm = _split_xbc(cfg, xbc_t)
+        xi = xi.reshape(bsz, 1, nh, s_cfg.head_dim).astype(jnp.float32)
+        rep = nh // s_cfg.n_groups
+        bh = jnp.repeat(b_ssm, rep, axis=2)[:, 0]      # [B,H,N]
+        ch = jnp.repeat(c_ssm, rep, axis=2)[:, 0]
+        a = -jnp.exp(p["A_log"].astype(jnp.float32))
+        dec = jnp.exp(dt[:, 0] * a)                    # [B,H]
+        upd = jnp.einsum("bhn,bhp->bhnp", bh, xi[:, 0] * dt[:, 0][..., None])
+        st = cache["ssm"] * dec[..., None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", ch, st) + p["D"][None, :, None] * xi[:, 0]
+        y = y.reshape(bsz, 1, d_in)
+        new_cache = {"ssm": st, "conv": new_conv}
+    else:
+        xbc_conv = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+        xi, b_ssm, c_ssm = _split_xbc(cfg, xbc_conv)
+        xi = xi.reshape(bsz, s, nh, s_cfg.head_dim).astype(jnp.float32)
+        y = ssd_chunked(xi, dt, p["A_log"], b_ssm.astype(jnp.float32),
+                        c_ssm.astype(jnp.float32), chunk=s_cfg.chunk_size)
+        y = y + p["D"][None, None, :, None] * xi
+        y = y.reshape(bsz, s, d_in)
+        new_cache = cache
+        if cache is not None:
+            # prefill: leave final state in cache (recompute last-step state)
+            # cheap approximation: rerun decode-style update is avoided; we
+            # recompute the full state via one extra chunk reduction.
+            a = -jnp.exp(p["A_log"].astype(jnp.float32))
+            da = dt * a
+            cs_total = jnp.cumsum(da, axis=1)
+            decay_end = jnp.exp(cs_total[:, -1:, :] - cs_total)
+            rep = nh // s_cfg.n_groups
+            bh = jnp.repeat(b_ssm, rep, axis=2).astype(jnp.float32)
+            st = jnp.einsum("bqhn,bqh,bqhp->bhnp", bh, decay_end,
+                            xi * dt[..., None])
+            new_conv = xbc[:, -(s_cfg.d_conv - 1):, :].astype(cache["conv"].dtype)
+            new_cache = {"ssm": st, "conv": new_conv}
+
+    # gated RMSNorm + out projection
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yn = (yf * lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"]).astype(dtype)
+    out = dense_apply(p["out_proj"], yn, ppac=cfg.ppac, mode=mode, dtype=dtype)
+    return out, new_cache

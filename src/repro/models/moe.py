@@ -1,0 +1,102 @@
+"""GShard-style Mixture-of-Experts with expert parallelism.
+
+Dispatch is capacity-based over small token groups (group_size tokens):
+with E experts and top-k routing, per-group capacity C = ceil(k*Sg*cf/E),
+so the dispatch one-hot is [G, Sg, E, C] with E*C ≈ k*Sg*cf independent of
+E — the standard trick that keeps dispatch ~O(k·cf) per token. The expert
+dimension is sharded on the 'model' mesh axis (EP); GSPMD materializes the
+all-to-alls from the dispatch/combine einsums. Shared experts (DeepSeek/
+Kimi style) run as a plain dense FFN on every token.
+
+Aux outputs: load-balance loss (Switch-style) and router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import _normal, dense_apply
+
+
+def moe_init(key, cfg: ModelConfig):
+    mo = cfg.moe
+    d, f, e = cfg.d_model, mo.d_ff_expert, mo.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": {"w": _normal(ks[0], (d, e), stddev=0.02)},
+        "wi": _normal(ks[1], (e, d, f)),
+        "wg": _normal(ks[2], (e, d, f)),
+        "wo": _normal(ks[3], (e, f, d)),
+    }
+    a = {
+        "router": {"w": ("embed", None)},
+        "wi": ("expert", "embed", "expert_mlp"),
+        "wg": ("expert", "embed", "expert_mlp"),
+        "wo": ("expert", "expert_mlp", "embed"),
+    }
+    if mo.num_shared:
+        from .layers import mlp_init
+        p["shared"], a["shared"] = mlp_init(ks[4], d, f * mo.num_shared)
+    return p, a
+
+
+def _capacity(group: int, top_k: int, e: int, cf: float) -> int:
+    return max(1, int(math.ceil(group * top_k * cf / e)))
+
+
+def moe_apply(p, x, cfg: ModelConfig, *, mode: str = "float"):
+    """x: [B,S,d] -> (y, aux) with aux = {'lb_loss', 'z_loss'}."""
+    mo = cfg.moe
+    dtype = jnp.dtype(cfg.dtype)
+    b, s, d = x.shape
+    e, k = mo.num_experts, mo.top_k
+    tokens = b * s
+    sg = min(mo.group_size, tokens)
+    while tokens % sg:
+        sg //= 2
+    g = tokens // sg
+    cap = _capacity(sg, k, e, mo.capacity_factor)
+
+    xg = x.reshape(g, sg, d)
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)          # [G,Sg,k]
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # position of each (token, choice) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)  # [G,Sg,k,E]
+    flat = onehot.reshape(g, sg * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                  # [G,Sg*k,E]
+    pos = jnp.sum(pos.reshape(g, sg, k, e) * onehot, -1)   # [G,Sg,k]
+    keep = pos < cap
+
+    # dispatch/combine tensors: [G,Sg,E,C]
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=dtype) * keep[..., None]
+    disp = jnp.einsum("gske,gskc->gsec", onehot.astype(dtype), pos_oh)
+    comb = jnp.einsum("gsk,gske,gskc->gsec", gate_vals.astype(dtype),
+                      onehot.astype(dtype), pos_oh)
+
+    exp_in = jnp.einsum("gsec,gsd->gecd", disp, xg.astype(dtype))
+    h = jnp.einsum("gecd,edf->gecf", exp_in, p["wi"].astype(dtype))
+    gate = jnp.einsum("gecd,edf->gecf", exp_in, p["wg"].astype(dtype))
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(dtype) * h
+    exp_out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dtype))
+    y = jnp.einsum("gsec,gecd->gsd", comb, exp_out)
+
+    if mo.num_shared:
+        from .layers import mlp_apply
+        y = y + mlp_apply(p["shared"], xg, cfg, mode=mode)
+
+    # Switch-style load-balance loss + router z-loss
+    frac_tokens = jnp.mean(onehot[:, :, 0, :].astype(jnp.float32), axis=1)
+    frac_probs = jnp.mean(probs, axis=1)
+    lb = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, -1))
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {"lb_loss": lb, "z_loss": z}
+    return y.reshape(b, s, d), aux

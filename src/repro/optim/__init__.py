@@ -1,0 +1,8 @@
+from .adamw import (  # noqa: F401
+    AdamWConfig,
+    cosine_schedule,
+    global_norm,
+    opt_init,
+    opt_state_axes,
+    opt_update,
+)

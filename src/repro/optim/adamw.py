@@ -1,0 +1,164 @@
+"""AdamW with optional quantized moments (low-memory optimizer state).
+
+No optax dependency — the optimizer is part of the substrate. With
+``quantized_state``: the first moment (mu) is stored int8 with per-block
+fp32 max-scales; the second moment (nu) is stored bf16. Why not int8 for
+nu: block max-scaling underflows small v elements to exactly 0, and
+mh/(sqrt(0)+eps) explodes — observed as immediate divergence in tests.
+bf16 keeps nu's full dynamic range at 0.4% relative error. Net state is
+~3.1 bytes/param vs 8 (2.6x), which is what lets the 1T-param MoE fit the
+per-chip HBM budget at 512 chips (EXPERIMENTS.md §Dry-run). Tests check a
+quantized-state run stays within tolerance of fp32 and converges.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantized_state: bool = False   # int8 moments
+    block: int = 256                # quantization block size
+
+
+# -- int8 block quantization ---------------------------------------------------
+
+def _q8(x, block: int, block_align: int = 512):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % (block * block_align)  # align block count for ZeRO
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    return flat[:_size(shape)].reshape(shape)
+
+
+def _size(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def _moment_init(p, cfg: AdamWConfig, kind: str = "mu"):
+    if cfg.quantized_state:
+        if kind == "mu":
+            q, s = _q8(jnp.zeros_like(p, jnp.float32), cfg.block)
+            return {"q": q, "s": s}
+        return jnp.zeros(p.shape, jnp.bfloat16)
+    return jnp.zeros_like(p, jnp.float32)
+
+
+def _moment_get(m, shape, cfg: AdamWConfig, kind: str = "mu"):
+    if cfg.quantized_state:
+        if kind == "mu":
+            return _dq8(m["q"], m["s"], shape)
+        return m.astype(jnp.float32)
+    return m
+
+
+def _moment_set(x, cfg: AdamWConfig, kind: str = "mu"):
+    if cfg.quantized_state:
+        if kind == "mu":
+            q, s = _q8(x, cfg.block)
+            return {"q": q, "s": s}
+        return x.astype(jnp.bfloat16)
+    return x
+
+
+# -- optimizer ----------------------------------------------------------------
+
+def opt_init(params, cfg: AdamWConfig):
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(lambda p: _moment_init(p, cfg, "mu"), params),
+        "nu": jax.tree.map(lambda p: _moment_init(p, cfg, "nu"), params),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def opt_update(params, grads, state, cfg: AdamWConfig,
+               lr_scale: jnp.ndarray = 1.0):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        m = _moment_get(mu, p.shape, cfg, "mu")
+        v = _moment_get(nu, p.shape, cfg, "nu")
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh, vh = m / b1c, v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, _moment_set(m, cfg, "mu"), _moment_set(v, cfg, "nu")
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"step": step, "mu": new_mu, "nu": new_nu}, metrics
+
+
+def opt_state_axes(param_axes, cfg: AdamWConfig, zero1_axis: Optional[str] = "data"):
+    """Sharding axes for optimizer state.
+
+    ZeRO-1: moments inherit the param spec *plus* the zero1 axis on the
+    first dimension not already sharded (applied via rule remap in the
+    launcher — here we just replicate param axes; the launcher's rules
+    table decides the extra sharding).
+    """
+    def mu_axes(ax):
+        if cfg.quantized_state:
+            # flattened block store: shard the block dim over every mesh
+            # axis (ZeRO for moments); block count is padded to 512-multiples
+            return {"q": ("qblocks", None), "s": ("qblocks", None)}
+        return ax
+
+    is_leaf = lambda x: x is None or (isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x))
+    return {
+        "step": None,
+        "mu": jax.tree.map(mu_axes, param_axes, is_leaf=is_leaf),
+        "nu": jax.tree.map(lambda ax: ax, param_axes, is_leaf=is_leaf),
+    }
+
+
+def cosine_schedule(step, *, warmup: int, total: int, floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, s / jnp.maximum(1, warmup))
+    prog = jnp.clip((s - warmup) / jnp.maximum(1, total - warmup), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

@@ -1,0 +1,6 @@
+from .step import (  # noqa: F401
+    convert_params_for_serving,
+    greedy_generate,
+    make_decode_step,
+    make_prefill_step,
+)

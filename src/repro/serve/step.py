@@ -1,0 +1,92 @@
+"""Serving steps: prefill / decode wrappers + PPAC weight conversion.
+
+``convert_params_for_serving`` is the PPAC load path: projection weights
+become resident quantized containers (int8 / packed4 / packed1), exactly
+the paper's weight-stationary premise — the decode memory-roofline lever
+measured in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core.engine import pack_weight_for_serving
+from ..models import lm
+from ..sharding.rules import ShardingRules
+
+
+def make_prefill_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None,
+                      mode: str = "float"):
+    def prefill_step(params, batch, cache):
+        return lm.prefill(params, cfg, batch, cache, mode=mode, rules=rules)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None,
+                     mode: str = "float"):
+    def decode_step(params, tokens, cache):
+        return lm.decode_step(params, cfg, tokens, cache, mode=mode,
+                              rules=rules)
+    return decode_step
+
+
+def greedy_generate(params, cfg: ModelConfig, batch, *, steps: int,
+                    max_seq: int, mode: str = "float"):
+    """Reference generation loop (prefill + greedy decode), jit per step."""
+    b = jax.tree.leaves(batch)[0].shape[0]
+    cache, _ = lm.init_cache(cfg, b, max_seq)
+    prefill = jax.jit(make_prefill_step(cfg, mode=mode))
+    decode = jax.jit(make_decode_step(cfg, mode=mode))
+    logits, cache = prefill(params, batch, cache)
+    out = []
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    for _ in range(steps):
+        out.append(tok)
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+# -- PPAC serving conversion ---------------------------------------------------
+
+_PPAC_ELIGIBLE = ("wq", "wk", "wv", "wo", "wi", "wg", "w_q", "w_uk", "w_uv",
+                  "in_proj", "out_proj")
+
+
+def convert_params_for_serving(params, cfg: ModelConfig):
+    """Replace large projection weights with resident PPAC containers.
+
+    Only 2-D weight leaves under eligible projection names are converted
+    (embeddings, norms, SSD internals stay float). Works on stacked
+    (scan) params by vmapping the packer over the layer axis.
+    """
+    ppac = cfg.ppac
+    if not ppac.enabled:
+        return params
+
+    pack = functools.partial(pack_weight_for_serving,
+                             weight_bits=ppac.weight_bits,
+                             weight_format=ppac.weight_format)
+
+    def convert(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if "w" not in names[-1:]:
+            return leaf
+        parent = names[-2] if len(names) > 1 else ""
+        if parent not in _PPAC_ELIGIBLE:
+            return leaf
+        if leaf.ndim == 2:
+            if min(leaf.shape) < ppac.min_features:
+                return leaf
+            return pack(leaf)
+        if leaf.ndim == 3:  # stacked over layers
+            if min(leaf.shape[1:]) < ppac.min_features:
+                return leaf
+            return jax.vmap(pack)(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(convert, params)

@@ -1,0 +1,8 @@
+from .rules import (  # noqa: F401
+    DEFAULT_RULES,
+    ShardingRules,
+    constrain,
+    default_rules,
+    tree_shardings,
+    tree_specs,
+)

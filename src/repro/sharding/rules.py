@@ -1,0 +1,145 @@
+"""Logical-axis sharding rules (MaxText-style) for the whole model zoo.
+
+Every parameter is annotated at init time with a tuple of *logical* axis
+names; a rules table maps logical axes to mesh axes. One table drives TP,
+EP, SP and DP for all ten architectures, and the perf hillclimb mutates the
+table instead of the model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Default rules: Megatron-style TP on 'model', DP over ('pod','data').
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    # weights
+    "embed": None,               # d_model dim of weights: replicated
+    "mlp": "model",              # FFN hidden
+    "heads": "model",            # attention heads (fused q dim)
+    "kv_heads": "model",         # KV heads (GQA; uneven sizes padded by GSPMD)
+    "head_dim": None,
+    "vocab": "model",            # embedding/output vocab dim
+    "expert": "model",           # MoE expert dim (EP)
+    "expert_mlp": None,
+    "kv_lora": None,             # MLA compression dim
+    "ssm_inner": "model",        # Mamba d_inner / heads
+    "ssm_state": None,
+    "conv": None,
+    "layers": None,              # stacked scan dim: always replicated
+    "qblocks": ("data", "model"),  # int8 optimizer moment blocks (ZeRO)
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,              # KV-cache seq dim (SP shards this for 500k)
+    "act_embed": None,
+    "act_heads": "model",
+    "groups": ("pod", "data"),   # MoE dispatch groups
+    "expert_cap": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    rules: Dict[str, MeshAxes]
+
+    def spec(self, logical_axes: Optional[Tuple[Optional[str], ...]]) -> PartitionSpec:
+        if logical_axes is None:
+            return PartitionSpec()
+        out = []
+        for ax in logical_axes:
+            r = self.rules.get(ax) if ax is not None else None
+            out.append(r)
+        return PartitionSpec(*out)
+
+    def with_overrides(self, **kv) -> "ShardingRules":
+        d = dict(self.rules)
+        d.update(kv)
+        return ShardingRules(d)
+
+    def for_mesh(self, mesh: Mesh) -> "ShardingRules":
+        """Drop mesh axes that don't exist in `mesh` (e.g. 'pod' on the
+        single-pod mesh) from every rule."""
+        names = set(mesh.axis_names)
+
+        def fit(v: MeshAxes) -> MeshAxes:
+            if v is None:
+                return None
+            if isinstance(v, str):
+                return v if v in names else None
+            kept = tuple(a for a in v if a in names)
+            return kept if kept else None
+
+        return ShardingRules({k: fit(v) for k, v in self.rules.items()})
+
+
+def default_rules(**overrides) -> ShardingRules:
+    return ShardingRules(dict(DEFAULT_RULES)).with_overrides(**overrides)
+
+
+def tree_specs(rules: ShardingRules, axes_tree):
+    """Map a tree of logical-axis tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: rules.spec(axes),
+        axes_tree,
+        is_leaf=lambda x: x is None or (isinstance(x, tuple)
+                                        and all(a is None or isinstance(a, str)
+                                                for a in x)),
+    )
+
+
+def tree_shardings(mesh: Mesh, rules: ShardingRules, axes_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_specs(rules, axes_tree),
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def fit_spec(mesh: Mesh, spec: PartitionSpec, shape) -> PartitionSpec:
+    """Drop sharded axes that do not divide the dimension evenly (explicit
+    pjit argument shardings require exact divisibility; GSPMD pads only
+    internal constraints). Also truncates specs longer than the rank."""
+    out = []
+    seen = set()
+    entries = tuple(spec)[: len(shape)]
+    for d, ax in enumerate(entries):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = tuple(a for a in ((ax,) if isinstance(ax, str) else tuple(ax))
+                     if a not in seen)  # a mesh axis may appear only once
+        if not axes:
+            out.append(None)
+            continue
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+        if shape[d] % prod == 0:
+            seen.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return PartitionSpec(*out)
+
+
+def fitted_shardings(mesh: Mesh, rules: ShardingRules, axes_tree, shapes_tree):
+    """NamedShardings with non-divisible axes dropped per-leaf."""
+    is_ax = lambda x: x is None or (isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x))
+
+    def one(ax, leaf):
+        spec = rules.spec(ax)
+        return NamedSharding(mesh, fit_spec(mesh, spec, tuple(leaf.shape)))
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_ax)
+
+
+def constrain(x, rules: ShardingRules, *logical_axes):
+    """with_sharding_constraint by logical axes (no-op outside mesh ctx)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.spec(logical_axes))
+    except Exception:
+        return x

@@ -1,0 +1,2 @@
+from .loss import next_token_xent, total_loss  # noqa: F401
+from .step import TrainConfig, abstract_state, init_state, make_train_step  # noqa: F401

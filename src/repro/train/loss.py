@@ -1,0 +1,38 @@
+"""Losses: masked next-token cross-entropy + router aux losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_xent(logits, labels, *, z_loss_coef: float = 0.0):
+    """logits [B,S,V] fp32, labels [B,S] int32 (-1 = ignore).
+
+    Standard causal LM loss: logits at position i predict labels[i]
+    (callers pre-shift). Returns (loss, metrics).
+    """
+    vocab = logits.shape[-1]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    metrics = {"xent": loss, "tokens": jnp.sum(mask)}
+    if z_loss_coef:
+        z = jnp.sum(jnp.square(lse) * mask) / denom
+        loss = loss + z_loss_coef * z
+        metrics["z_loss"] = z
+    return loss, metrics
+
+
+def total_loss(logits, labels, aux, *, lb_coef: float = 0.01,
+               z_router_coef: float = 1e-3, z_loss_coef: float = 1e-4):
+    loss, metrics = next_token_xent(logits, labels, z_loss_coef=z_loss_coef)
+    if aux is not None:
+        loss = loss + lb_coef * aux["lb_loss"] + z_router_coef * aux["z_loss"]
+        metrics["lb_loss"] = aux["lb_loss"]
+        metrics["router_z"] = aux["z_loss"]
+    metrics["loss"] = loss
+    return loss, metrics

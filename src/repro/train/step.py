@@ -1,0 +1,152 @@
+"""train_step builder: autodiff + optimizer + distributed-optimization tricks.
+
+Options (all exercised by tests and the dry-run variants):
+  * microbatching / gradient accumulation (lax.scan over microbatches)
+  * cross-pod gradient compression: per-pod gradients are psum'd across the
+    'pod' mesh axis in bf16 (half the inter-pod ICI bytes) via a
+    partial-manual shard_map — the in-graph form of compressed DP sync
+  * QAT mode: forward in PPAC fake-quant mode (paper technique in training)
+  * remat policy comes from the model config
+
+The returned function is pure: (state, batch) -> (state, metrics); the
+launcher jits it with in/out shardings from the logical-axis rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..models import lm
+from ..optim.adamw import AdamWConfig, cosine_schedule, opt_init, opt_update
+from ..sharding.rules import ShardingRules
+from .loss import total_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    qat: bool = False                     # PPAC fake-quant forward
+    cross_pod_grad_dtype: str = "float32"  # 'bfloat16' = compressed DP sync
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    lb_coef: float = 0.01
+    z_router_coef: float = 1e-3
+    z_loss_coef: float = 1e-4
+
+
+def init_state(cfg: ModelConfig, tcfg: TrainConfig, key):
+    params, axes = lm.init(cfg, key)
+    return {"params": params, "opt": opt_init(params, tcfg.opt)}, axes
+
+
+def abstract_state(cfg: ModelConfig, tcfg: TrainConfig):
+    """ShapeDtypeStructs + logical axes for the dry-run (no allocation)."""
+    from ..optim.adamw import opt_state_axes
+    pshapes, axes = lm.abstract_init(cfg)
+    state_shapes = jax.eval_shape(
+        lambda p: {"params": p, "opt": opt_init(p, tcfg.opt)}, pshapes)
+    state_axes = {"params": axes, "opt": opt_state_axes(axes, tcfg.opt)}
+    return state_shapes, state_axes
+
+
+def _loss_fn(params, batch, cfg: ModelConfig, tcfg: TrainConfig, rules):
+    mode = "qat" if tcfg.qat else "float"
+    fwd_batch = {k: v for k, v in batch.items() if k != "labels"}
+    logits, aux = lm.forward(params, cfg, fwd_batch, mode=mode, rules=rules)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # vlm: loss only on text positions
+        logits = logits[:, -labels.shape[1]:]
+    return total_loss(logits, labels, aux if cfg.moe else None,
+                      lb_coef=tcfg.lb_coef, z_router_coef=tcfg.z_router_coef,
+                      z_loss_coef=tcfg.z_loss_coef)
+
+
+def _grads(params, batch, cfg, tcfg, rules):
+    if tcfg.microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            _loss_fn, has_aux=True)(params, batch, cfg, tcfg, rules)
+        return loss, metrics, grads
+
+    n = tcfg.microbatches
+    mb = jax.tree.map(lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                      batch)
+
+    def body(acc, mbatch):
+        (loss, metrics), g = jax.value_and_grad(
+            _loss_fn, has_aux=True)(params, mbatch, cfg, tcfg, rules)
+        acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+        return acc, (loss, metrics)
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    gsum, (losses, metrics_all) = jax.lax.scan(body, zeros, mb)
+    grads = jax.tree.map(lambda g: g / n, gsum)
+    metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), metrics_all)
+    return jnp.mean(losses), metrics, grads
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    rules: Optional[ShardingRules] = None,
+                    mesh=None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tcfg.cross_pod_grad_dtype == "bfloat16" and mesh is not None \
+                and "pod" in mesh.axis_names:
+            loss, metrics, grads = _sharded_pod_grads(
+                params, batch, cfg, tcfg, rules, mesh)
+        else:
+            loss, metrics, grads = _grads(params, batch, cfg, tcfg, rules)
+        lr_scale = cosine_schedule(state["opt"]["step"],
+                                   warmup=tcfg.warmup_steps,
+                                   total=tcfg.total_steps)
+        new_params, new_opt, m2 = opt_update(params, grads, state["opt"],
+                                             tcfg.opt, lr_scale)
+        metrics = dict(metrics)
+        metrics.update(m2)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def _sharded_pod_grads(params, batch, cfg, tcfg, rules, mesh):
+    """Per-pod grads + compressed (bf16) cross-pod all-reduce.
+
+    shard_map is manual over 'pod' only; 'data'/'model' stay auto so the
+    in-pod parallelism is still GSPMD-driven.
+    """
+    npods = mesh.shape["pod"]
+
+    def per_pod(params, batch):
+        loss, metrics, grads = _grads(params, batch, cfg, tcfg, rules)
+        grads = jax.tree.map(
+            lambda g: jax.lax.psum(g.astype(jnp.bfloat16), "pod")
+            .astype(jnp.float32) / npods, grads)
+        loss = jax.lax.psum(loss, "pod") / npods
+        metrics = jax.tree.map(lambda m: jax.lax.psum(m, "pod") / npods,
+                               metrics)
+        return loss, metrics, grads
+
+    pspecs_in = (
+        jax.tree.map(lambda _: P(), params),
+        jax.tree.map(lambda _: P("pod"), batch),
+    )
+    pspecs_out = (P(), jax.tree.map(lambda _: P(), {"xent": 0, "tokens": 0}),
+                  jax.tree.map(lambda _: P(), params))
+    # out metric tree structure depends on cfg; build it generically:
+    shaped = jax.eval_shape(lambda p, b: _grads(p, b, cfg, tcfg, rules)[1],
+                            params, batch)
+    pspecs_out = (P(), jax.tree.map(lambda _: P(), shaped),
+                  jax.tree.map(lambda _: P(), params))
+    fn = jax.shard_map(per_pod, mesh=mesh, in_specs=pspecs_in,
+                       out_specs=pspecs_out, check_vma=False,
+                       axis_names={"pod"})
+    return fn(params, batch)

@@ -1,0 +1,61 @@
+"""Number formats + bitplane codecs (paper Table I)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import formats as F
+
+
+@pytest.mark.parametrize("fmt", ["uint", "int", "oddint"])
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 6, 8])
+def test_roundtrip(fmt, bits, rng):
+    lo, hi = F.value_range(fmt, bits)
+    step = 2 if fmt == "oddint" else 1
+    vals = np.arange(lo, hi + 1, step)
+    planes = F.to_bitplanes(vals, bits, fmt)
+    back = np.asarray(F.from_bitplanes(planes, fmt))
+    assert np.array_equal(back, vals)
+
+
+def test_table1_ranges():
+    # Table I of the paper, L=2 column
+    assert F.value_range("uint", 2) == (0, 3)
+    assert F.value_range("int", 2) == (-2, 1)
+    assert F.value_range("oddint", 2) == (-3, 3)
+
+
+def test_oddint_only_odd():
+    ok = np.asarray(F.representable("oddint", 3, np.arange(-7, 8)))
+    vals = np.arange(-7, 8)
+    assert np.array_equal(vals[ok], np.arange(-7, 8, 2))
+
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 64, 100, 256])
+def test_pack_unpack(n, rng):
+    bits = rng.integers(0, 2, size=(3, n))
+    packed = F.pack_bits(bits)
+    assert packed.shape == (3, F.packed_width(n))
+    assert np.array_equal(np.asarray(F.unpack_bits(packed, n)), bits)
+
+
+@given(st.integers(1, 8), st.integers(1, 80), st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_roundtrip_hypothesis(bits, n, seed):
+    rng = np.random.default_rng(seed)
+    for fmt in ("uint", "int", "oddint"):
+        lo, hi = F.value_range(fmt, bits)
+        step = 2 if fmt == "oddint" else 1
+        vals = rng.choice(np.arange(lo, hi + 1, step), size=n)
+        back = np.asarray(F.from_bitplanes(F.to_bitplanes(vals, bits, fmt),
+                                           fmt))
+        assert np.array_equal(back, vals)
+
+
+@given(st.integers(1, 200), st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_popcount_matches_numpy(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(n,))
+    packed = F.pack_bits(bits)
+    assert int(np.sum(np.asarray(F.popcount(packed)))) == int(bits.sum())

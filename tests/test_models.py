@@ -1,0 +1,139 @@
+"""Per-arch smoke tests (reduced configs): forward/train/decode shapes,
+no NaNs, and decode-vs-forward consistency (validates KV caches, SSD
+recurrence, MLA absorption, rolling SWA caches)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, load_arch
+from repro.models import lm
+
+
+def smoke_batch(cfg, b=2, s=32, rng=None):
+    rng = rng or np.random.default_rng(0)
+    batch = {}
+    if cfg.frontend == "audio":
+        batch["embeds"] = jnp.asarray(
+            rng.standard_normal((b, s, cfg.d_model)) * 0.02, jnp.float32)
+    elif cfg.frontend == "vision":
+        p = cfg.frontend_tokens
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((b, p, cfg.d_model)) * 0.02, jnp.float32)
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (b, s - p)), jnp.int32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_smoke(arch, rng):
+    cfg = load_arch(arch).smoke()
+    params, axes = lm.init(cfg, jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg, rng=rng)
+    logits, aux = lm.forward(params, cfg, batch)
+    assert logits.shape[-1] == cfg.vocab
+    assert logits.dtype == jnp.float32
+    assert np.isfinite(np.asarray(logits)).all()
+    # axes tree matches params tree structure
+    jax.tree.map(lambda p, a: None, params,
+                 jax.tree.map(lambda x: 0, axes,
+                              is_leaf=lambda x: x is None or isinstance(x, tuple)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch, rng):
+    """Prefill T tokens then decode k: logits must match the full forward
+    (fp32 smoke config -> tight tolerance). Exercises every cache type."""
+    cfg = dataclasses.replace(load_arch(arch).smoke(), dtype="float32")
+    if cfg.moe:
+        # capacity dropping is group-shape-dependent; disable drops so
+        # forward and prefill/decode see identical expert assignments
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    params, _ = lm.init(cfg, jax.random.PRNGKey(1))
+    b, s = 2, 24
+    t0, steps = 16, 4
+    batch = smoke_batch(cfg, b=b, s=s, rng=rng)
+
+    full_logits, _ = lm.forward(params, cfg, batch)
+
+    if cfg.frontend == "vision":
+        # decode continues the text stream after patches
+        pre = {"patches": batch["patches"],
+               "tokens": batch["tokens"][:, : t0 - cfg.frontend_tokens]}
+        toks = batch["tokens"]
+        off = cfg.frontend_tokens
+    elif cfg.frontend == "audio":
+        pre = {"embeds": batch["embeds"][:, :t0]}
+        toks = None
+        off = 0
+    else:
+        pre = {"tokens": batch["tokens"][:, :t0]}
+        toks = batch["tokens"]
+        off = 0
+
+    cache, _ = lm.init_cache(cfg, b, s, dtype=jnp.float32)
+    logits, cache = lm.prefill(params, cfg, pre, cache)
+    np.testing.assert_allclose(np.asarray(logits[:, -1]),
+                               np.asarray(full_logits[:, t0 - 1]),
+                               rtol=2e-3, atol=2e-3)
+    if cfg.frontend == "audio":
+        return  # continuing decode needs token embeds; covered elsewhere
+
+    for i in range(steps):
+        nxt = toks[:, t0 - off + i][:, None]
+        logits, cache = lm.decode_step(params, cfg, nxt, cache)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full_logits[:, t0 + i]),
+            rtol=5e-3, atol=5e-3, err_msg=f"{arch} step {i}")
+
+
+def test_swa_rolling_cache_beyond_window(rng):
+    """Decode past the sliding window with the rolling cache: logits must
+    match a forward whose attention is windowed the same way."""
+    cfg = dataclasses.replace(load_arch("h2o_danube3_4b").smoke(),
+                              dtype="float32", sliding_window=8)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(2))
+    b, s = 1, 32
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    full_logits, _ = lm.forward(params, cfg, {"tokens": tokens})
+
+    t0 = 4  # prefill shorter than the window, then roll far past it
+    cache, _ = lm.init_cache(cfg, b, s, dtype=jnp.float32)
+    logits, cache = lm.prefill(params, cfg, {"tokens": tokens[:, :t0]}, cache)
+    for i in range(t0, s - 1):
+        logits, cache = lm.decode_step(params, cfg, tokens[:, i][:, None],
+                                       cache)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full_logits[:, i]),
+            rtol=5e-3, atol=5e-3, err_msg=f"pos {i}")
+
+
+def test_mamba2_long_decode_state_is_constant_memory(rng):
+    cfg = dataclasses.replace(load_arch("mamba2_370m").smoke(),
+                              dtype="float32")
+    params, _ = lm.init(cfg, jax.random.PRNGKey(3))
+    cache, _ = lm.init_cache(cfg, 1, 8, dtype=jnp.float32)
+    sizes = {k: v.shape for k, v in jax.tree.leaves_with_path(cache)}
+    tok = jnp.ones((1, 1), jnp.int32)
+    logits, cache = lm.prefill(params, cfg, {"tokens": jnp.ones((1, 8), jnp.int32)}, cache)
+    for _ in range(5):
+        logits, cache = lm.decode_step(params, cfg, tok, cache)
+    # state shapes unchanged (no growth with sequence length)
+    sizes2 = {k: v.shape for k, v in jax.tree.leaves_with_path(cache)}
+    assert sizes == sizes2
+
+
+def test_param_counts_match_formula():
+    for arch in ARCH_IDS:
+        cfg = load_arch(arch).smoke()
+        params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        est = cfg.param_count()
+        # formula is approximate (biases, norms); within 20%
+        assert abs(actual - est) / actual < 0.2, (arch, actual, est)

@@ -1,0 +1,131 @@
+"""Sharding rules, spec fitting, and a real multi-device lowering (subprocess
+with 8 placeholder CPU devices so the main test process keeps 1 device)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import ShardingRules, default_rules, fit_spec
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self._shape = shape
+
+    @property
+    def shape(self):
+        return self._shape
+
+    @property
+    def axis_names(self):
+        return tuple(self._shape)
+
+
+def test_rules_spec():
+    r = default_rules()
+    assert r.spec(("embed", "mlp")) == P(None, "model")
+    assert r.spec(("batch", None, None)) == P(("pod", "data"), None, None)
+    assert r.spec(None) == P()
+
+
+def test_for_mesh_drops_missing_axes():
+    r = default_rules().for_mesh(FakeMesh({"data": 16, "model": 16}))
+    assert r.spec(("batch",)) == P("data")
+    assert r.spec(("expert",)) == P("model")
+
+
+def test_fit_spec_divisibility():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # 50280 % 16 != 0 -> dropped; 1024 % 16 == 0 -> kept
+    s = fit_spec(mesh, P("model", None), (50280, 1024))
+    assert s == P(None, None)
+    s = fit_spec(mesh, P("model", None), (1024, 50280))
+    assert s == P("model", None)
+    # tuple axes: ('pod' absent is caller's business) data*model = 256
+    s = fit_spec(mesh, P(("data", "model"),), (512,))
+    assert s == P(("data", "model"))
+    s = fit_spec(mesh, P(("data", "model"),), (100,))
+    assert s == P(None)
+
+
+def test_fit_spec_deduplicates_mesh_axes():
+    mesh = FakeMesh({"data": 4, "model": 4})
+    s = fit_spec(mesh, P("data", "data"), (8, 8))
+    assert s == P("data", None)
+
+
+def test_overrides():
+    r = default_rules(embed="data")
+    assert r.spec(("embed", "mlp")) == P("data", "model")
+
+
+SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.configs import load_arch
+    from repro.configs.base import InputShape
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.specs import build_cell
+    from repro.train.step import TrainConfig
+
+    cfg = load_arch("smollm_360m").smoke()
+    mesh = make_test_mesh(2, 2, pod=2)
+    shape = InputShape("t", 32, 8, "train")
+    with mesh:
+        cell = build_cell(cfg, shape, mesh, tcfg=TrainConfig())
+        compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings).lower(
+            *cell.args).compile()
+    txt = compiled.as_text()
+    assert any(k in txt for k in ("all-reduce", "all-gather")), "no collectives?"
+    print("MULTIDEV_OK", compiled.memory_analysis().temp_size_in_bytes)
+""")
+
+
+def test_multidevice_train_lowering():
+    res = subprocess.run([sys.executable, "-c", SUBPROC], capture_output=True,
+                         text=True, timeout=600,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"})
+    assert "MULTIDEV_OK" in res.stdout, res.stdout + res.stderr
+
+
+SUBPROC_COMPRESS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    from repro.configs import load_arch
+    from repro.configs.base import InputShape
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.specs import build_cell
+    from repro.train.step import TrainConfig
+
+    cfg = load_arch("smollm_360m").smoke()
+    mesh = make_test_mesh(2, 2, pod=2)
+    shape = InputShape("t", 32, 8, "train")
+    tcfg = TrainConfig(cross_pod_grad_dtype="bfloat16")
+    with mesh:
+        cell = build_cell(cfg, shape, mesh, tcfg=tcfg)
+        jaxpr = jax.make_jaxpr(cell.fn)(*cell.args)
+    txt = str(jaxpr)
+    # the cross-pod gradient psum must consume bf16 operands.
+    # NOTE: we validate at jaxpr level — XLA's *CPU* backend crashes with
+    # "Invalid binary instruction opcode copy" on any partial-manual
+    # shard_map psum (fp32 too; minimal repro in EXPERIMENTS.md §Perf),
+    # so the compiled check is TPU-only.
+    import re
+    assert "psum" in txt, "no psum in compressed train step"
+    assert re.search(r"convert_element_type.*bf16", txt) or "bf16" in txt
+    print("COMPRESS_OK")
+""")
+
+
+def test_cross_pod_grad_compression_traces_bf16_psum():
+    res = subprocess.run([sys.executable, "-c", SUBPROC_COMPRESS],
+                         capture_output=True, text=True, timeout=600,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"})
+    assert "COMPRESS_OK" in res.stdout, res.stdout + res.stderr

@@ -1,0 +1,136 @@
+"""Training substrate: loss decreases, optimizer variants, microbatching."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import load_arch
+from repro.data.pipeline import DataConfig, make_model_batch
+from repro.configs.base import InputShape
+from repro.optim.adamw import AdamWConfig, cosine_schedule, opt_init, opt_update
+from repro.train.loss import next_token_xent
+from repro.train.step import TrainConfig, init_state, make_train_step
+
+
+def tiny_setup(arch="smollm_360m", steps=1, **tkw):
+    cfg = load_arch(arch).smoke()
+    tcfg = TrainConfig(opt=AdamWConfig(lr=1e-2, **tkw.pop("opt_kw", {})),
+                       warmup_steps=2, total_steps=50, **tkw)
+    state, axes = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    shape = InputShape("t", 32, 4, "train")
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    return cfg, tcfg, state, step, dcfg, shape
+
+
+def run_steps(cfg, state, step, dcfg, shape, n):
+    losses = []
+    for i in range(n):
+        batch = {k: jnp.asarray(v)
+                 for k, v in make_model_batch(cfg, shape, dcfg, i).items()}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    return state, losses
+
+
+def test_loss_decreases():
+    cfg, tcfg, state, step, dcfg, shape = tiny_setup()
+    state, losses = run_steps(cfg, state, step, dcfg, shape, 20)
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]) - 0.3, losses
+
+
+def test_int8_optimizer_converges():
+    cfg, tcfg, state, step, dcfg, shape = tiny_setup(
+        opt_kw=dict(quantized_state=True))
+    state, losses = run_steps(cfg, state, step, dcfg, shape, 20)
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]) - 0.3, losses
+    # moments really are int8
+    q = jax.tree.leaves(state["opt"]["mu"])[0]
+    assert q.dtype == jnp.int8
+
+
+def test_int8_moments_track_fp32(rng):
+    p = {"w": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)}
+    cfg8 = AdamWConfig(quantized_state=True, grad_clip=0)
+    cfg32 = AdamWConfig(quantized_state=False, grad_clip=0)
+    s8, s32 = opt_init(p, cfg8), opt_init(p, cfg32)
+    p8, s8, _ = opt_update(p, g, s8, cfg8)
+    p32, s32, _ = opt_update(p, g, s32, cfg32)
+    np.testing.assert_allclose(np.asarray(p8["w"]), np.asarray(p32["w"]),
+                               rtol=0, atol=5e-4)
+
+
+def test_microbatching_matches_full_batch():
+    cfg = load_arch("smollm_360m").smoke()
+    t1 = TrainConfig(opt=AdamWConfig(lr=1e-2), microbatches=1)
+    t4 = TrainConfig(opt=AdamWConfig(lr=1e-2), microbatches=4)
+    s1, _ = init_state(cfg, t1, jax.random.PRNGKey(0))
+    s4, _ = init_state(cfg, t4, jax.random.PRNGKey(0))
+    step1 = jax.jit(make_train_step(cfg, t1))
+    step4 = jax.jit(make_train_step(cfg, t4))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=8)
+    shape = InputShape("t", 16, 8, "train")
+    batch = {k: jnp.asarray(v)
+             for k, v in make_model_batch(cfg, shape, dcfg, 0).items()}
+    s1n, m1 = step1(s1, batch)
+    s4n, m4 = step4(s4, batch)
+    w1 = jax.tree.leaves(s1n["params"])[0]
+    w4 = jax.tree.leaves(s4n["params"])[0]
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w4),
+                               rtol=0, atol=2e-5)
+
+
+def test_qat_training_runs():
+    cfg = load_arch("smollm_360m").smoke()
+    cfg = dataclasses.replace(
+        cfg, ppac=dataclasses.replace(cfg.ppac, enabled=True, min_features=1,
+                                      weight_bits=4, act_bits=4))
+    tcfg = TrainConfig(opt=AdamWConfig(lr=1e-2), qat=True,
+                       warmup_steps=2, total_steps=50)
+    state, _ = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    shape = InputShape("t", 32, 4, "train")
+    losses = []
+    for i in range(10):
+        batch = {k: jnp.asarray(v)
+                 for k, v in make_model_batch(cfg, shape, dcfg, i).items()}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-3:]) < np.mean(losses[:3])
+
+
+def test_moe_train_smoke():
+    cfg = load_arch("deepseek_v2_lite_16b").smoke()
+    tcfg = TrainConfig(opt=AdamWConfig(lr=5e-3))
+    state, _ = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    shape = InputShape("t", 32, 4, "train")
+    batch = {k: jnp.asarray(v)
+             for k, v in make_model_batch(cfg, shape, dcfg, 0).items()}
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert "lb_loss" in metrics
+
+
+def test_grad_clip_and_schedule():
+    s = jnp.asarray(0)
+    assert float(cosine_schedule(s, warmup=10, total=100)) == 0.0
+    s = jnp.asarray(10)
+    assert abs(float(cosine_schedule(s, warmup=10, total=100)) - 1.0) < 1e-6
+    s = jnp.asarray(100)
+    assert abs(float(cosine_schedule(s, warmup=10, total=100)) - 0.1) < 1e-6
+
+
+def test_masked_loss_ignores_labels():
+    logits = jnp.zeros((1, 4, 8), jnp.float32)
+    labels = jnp.asarray([[1, -1, 2, -1]], jnp.int32)
+    loss, m = next_token_xent(logits, labels)
+    assert float(m["tokens"]) == 2.0
+    assert abs(float(loss) - np.log(8)) < 1e-5
