@@ -1,0 +1,86 @@
+"""Associative-retrieval sweep: QPS + emulated PPAC cycles vs M, k, shards.
+
+Streams the database through the fused top-k path (mxu backend by default
+off-TPU: a lax.scan over row chunks that merges a running top-k), so the
+full [Q, M] score matrix is *never* materialized at any M.
+
+Rows: name,us_per_query,derived — derived carries QPS, emulated PPAC
+cycles/query, and the paper-clock latency estimate for the 256x256 array.
+
+Standalone (adds a sharded sweep on 4 simulated devices):
+    PYTHONPATH=src python -m benchmarks.retrieval
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+M_SWEEP = (65536, 262144)
+K_SWEEP = (1, 16)
+BITS = 256
+QUERIES = 32
+REPS = 2
+
+
+ARRAYS = 64  # fixed hardware budget: 64 time-multiplexed 256x256 arrays
+
+
+def _build_index(m: int, rng, min_shards: int = 1):
+    from repro.retrieval import CAMIndex
+
+    idx = CAMIndex(BITS, backend="auto", parallel_arrays=ARRAYS,
+                   min_capacity=max(m, min_shards * 256))
+    idx.add_packed(rng.integers(0, 2**32, (m, BITS // 32), dtype=np.uint64)
+                   .astype(np.uint32))
+    return idx
+
+
+def _time_search(idx, q, k, mesh=None):
+    idx.search(q, k=k, mesh=mesh)  # compile + warmup
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        res = idx.search(q, k=k, mesh=mesh)
+    dt = (time.perf_counter() - t0) / REPS
+    return dt, res
+
+
+def run(mesh=None, shards_label: str = ""):
+    rng = np.random.default_rng(0)
+    rows = []
+    for m in M_SWEEP:
+        idx = _build_index(m, rng, min_shards=mesh.size if mesh else 1)
+        q = rng.integers(0, 2, (QUERIES, BITS))
+        for k in K_SWEEP:
+            dt, res = _time_search(idx, q, k, mesh=mesh)
+            qps = QUERIES / dt
+            cpq = res.stats["cycles_per_query"]
+            est = res.stats.get("est_latency_us", float("nan"))
+            name = f"retrieval_M{m // 1024}k_k{k}{shards_label}"
+            rows.append((name, dt / QUERIES * 1e6,
+                         f"qps={qps:.1f} ppac_cycles/q={cpq} "
+                         f"ppac_est_us/batch={est:.3f} "
+                         f"shards={res.stats['shards']} "
+                         f"backend={res.stats['backend']}"))
+    return rows
+
+
+def main():
+    print("name,us_per_query,derived")
+    for row in run():
+        print("{},{:.1f},{}".format(*row))
+    import jax
+
+    if len(jax.devices()) > 1:
+        d = len(jax.devices())
+        mesh = jax.make_mesh((d,), ("data",))
+        for row in run(mesh=mesh, shards_label=f"_s{d}"):
+            print("{},{:.1f},{}".format(*row))
+    else:
+        print("# single device: re-run with "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+              "for the sharded sweep")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,20 +1,23 @@
-"""LSH approximate-nearest-neighbor via PPAC similarity-match CAM (§III-A).
+"""LSH approximate-nearest-neighbor on the PPAC associative retrieval
+subsystem (§III-A CAM mode, scaled up by repro.retrieval).
 
 Random-hyperplane LSH maps float vectors to binary codes; Hamming
-similarity between codes approximates cosine similarity. PPAC computes all
-M similarities per query in one emulated cycle (one kernel call batched
-over queries here), and the programmable threshold delta turns it into a
-similarity-match CAM.
+similarity between codes approximates cosine similarity. The CAMIndex
+virtualizes the code database onto PPAC array tiles and answers queries
+through the fused streaming top-k kernel — the [Q, M] score matrix is
+never materialized — while the δ-threshold CAM mode yields candidate
+sets, and the cycle model prices every query in emulated PPAC cycles.
 
 Run: PYTHONPATH=src python examples/lsh_lookup.py
 """
 import numpy as np
 
 from repro.core.formats import pack_bits
-from repro.kernels import hamming_similarity
+from repro.kernels.hamming_topk import hamming_topk_ref
+from repro.retrieval import CAMIndex
 
 rng = np.random.default_rng(1)
-D, BITS, M, Q = 64, 256, 2048, 32
+D, BITS, M, Q, K = 64, 256, 2048, 32, 4
 
 # database + queries: clustered vectors so neighbors exist
 centers = rng.standard_normal((32, D))
@@ -27,24 +30,39 @@ planes = rng.standard_normal((D, BITS))
 db_codes = (db @ planes > 0).astype(np.uint8)
 q_codes = (queries @ planes > 0).astype(np.uint8)
 
-# PPAC: all M Hamming similarities per query
-hs = np.asarray(hamming_similarity(pack_bits(q_codes), pack_bits(db_codes),
-                                   n=BITS))
-pred = hs.argmax(1)
+# build the index and answer all queries with one fused top-k batch
+index = CAMIndex(BITS, min_capacity=M)
+ids = index.add(db_codes)
+res = index.search(q_codes, k=K)
+pred = res.ids[:, 0]
+print(f"searched {M} codes for {Q} queries: "
+      f"{res.stats['cycles_per_query']} PPAC cycles/query "
+      f"(row_tiles={res.stats['row_tiles']})")
 
-# ground truth by cosine similarity
+# 1) fused top-k must equal the brute-force (materialized) score path
+bs, bi = hamming_topk_ref(pack_bits(q_codes), pack_bits(db_codes),
+                          n=BITS, k=K)
+assert np.array_equal(res.ids, np.asarray(bi)), "fused != brute force"
+assert np.array_equal(res.scores, np.asarray(bs))
+
+# 2) recall@1 against exact cosine ground truth
 db_n = db / np.linalg.norm(db, axis=1, keepdims=True)
 q_n = queries / np.linalg.norm(queries, axis=1, keepdims=True)
 true = (q_n @ db_n.T).argmax(1)
-
 recall1 = float((pred == true).mean())
-# similarity-match CAM: candidate set via threshold delta
-delta = int(BITS * 0.75)
-cand_sizes = (hs >= delta).sum(1)
-hit = float(np.mean([true[i] in np.flatnonzero(hs[i] >= delta)
-                     for i in range(Q)]))
 print(f"recall@1 (PPAC LSH vs exact cosine): {recall1:.2f}")
-print(f"similarity-match CAM delta={delta}: mean candidates "
-      f"{cand_sizes.mean():.1f}/{M}, true-neighbor hit rate {hit:.2f}")
 assert recall1 >= 0.9, "LSH via Hamming similarity should recover neighbors"
+
+# 3) similarity-match CAM: candidate sets via threshold delta
+delta = int(BITS * 0.75)
+cand = index.match_ids(q_codes, delta=delta)
+hit = float(np.mean([true[i] in cand[i] for i in range(Q)]))
+print(f"similarity-match CAM delta={delta}: mean candidates "
+      f"{np.mean([len(c) for c in cand]):.1f}/{M}, "
+      f"true-neighbor hit rate {hit:.2f}")
+
+# 4) the index is mutable: deleting the best hit promotes the runner-up
+index.delete(pred[:1])
+res2 = index.search(q_codes[:1], k=1)
+assert res2.ids[0, 0] == res.ids[0, 1], "runner-up should win after delete"
 print("OK")

@@ -1,0 +1,3 @@
+"""Fused Hamming top-k / CAM δ-match kernels (associative retrieval)."""
+from .ops import hamming_threshold_match, hamming_topk  # noqa: F401
+from .ref import hamming_threshold_match_ref, hamming_topk_ref  # noqa: F401

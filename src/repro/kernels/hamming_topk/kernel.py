@@ -1,0 +1,240 @@
+"""Pallas TPU kernel: fused Hamming top-k over a streamed packed-bit matrix.
+
+The associative-retrieval primitive of the paper's §III-A CAM mode at
+scale: for packed uint32 queries x [B, W] against a resident database
+a [M, W] (W lanes of 32 bit-cells each), return the k most similar rows
+per query
+
+    h[b, m] = n - popcount(x[b] ^ a[m])        (Hamming similarity)
+
+*without ever materializing the [B, M] score matrix*. The grid streams the
+database in [tm] row tiles (grid dim 1, innermost); the running per-query
+top-k (scores + global row indices) lives in the revisited output block in
+VMEM and is merged with each tile's scores as they are produced — the TPU
+analogue of the PPAC array computing M similarities per cycle while a
+peripheral priority encoder drains the k winners.
+
+Tie handling is bit-exact against ``lax.top_k`` on the full score matrix:
+selection order is (score descending, global index ascending). The merge
+extracts the k best of [running ∪ tile] by k rounds of (max score, then
+min index among the argmaxes) — exactly that ordering.
+
+Row validity (deletes / padding) comes in as a [1, M] int32 mask; invalid
+rows score ``MASKED_SCORE`` (-1), below any real similarity, and keep
+index-ascending order among themselves, matching ref.py.
+
+A second kernel fuses the threshold (CAM δ) match: it emits the per-tile
+match lines y[b, m] = (h >= δ) directly — the match matrix *is* the CAM
+output (one match wire per row in hardware), so it is written tile-by-tile
+with no score matrix either.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .ref import MASKED_SCORE
+
+_NEG_INIT = -(2**30)       # running-slot init: below every candidate score
+_NEG_TAKEN = jnp.iinfo(jnp.int32).min  # extracted candidates never re-win
+_IDX_SENTINEL = 2**30      # index init / argmin mask: above every row index
+
+
+def _tile_scores(x, a, valid, *, n: int, row_chunk: int):
+    """Masked similarity scores [tb, tm] of one database tile.
+
+    Chunks the tile's row dimension to bound the [tb, chunk, tw] popcount
+    intermediate (the subrow partitioning of Fig. 2, as in binary_mvp).
+    """
+    tb = x.shape[0]
+    tm = a.shape[0]
+    n_chunks = tm // row_chunk
+
+    def body(i, s):
+        a_c = lax.dynamic_slice_in_dim(a, i * row_chunk, row_chunk, axis=0)
+        bits = jnp.bitwise_xor(x[:, None, :], a_c[None, :, :])
+        pc = lax.population_count(bits).astype(jnp.int32)
+        part = jnp.sum(pc, axis=-1)  # [tb, chunk]
+        return lax.dynamic_update_slice_in_dim(s, part, i * row_chunk, axis=1)
+
+    s = lax.fori_loop(0, n_chunks, body, jnp.zeros((tb, tm), jnp.int32),
+                      unroll=False)
+    h = n - s
+    return jnp.where(valid > 0, h, MASKED_SCORE)
+
+
+def _merge_topk(run_s, run_i, tile_s, tile_i, *, k: int):
+    """k best of [running ∪ tile] by (score desc, index asc) — exact."""
+    tb = run_s.shape[0]
+    cand_s = jnp.concatenate([run_s, tile_s], axis=1)
+    cand_i = jnp.concatenate([run_i, tile_i], axis=1)
+
+    def select(i, carry):
+        cs, ci, outs, outi = carry
+        best = jnp.max(cs, axis=1, keepdims=True)                   # [tb, 1]
+        at_best = cs == best
+        bidx = jnp.min(jnp.where(at_best, ci, _IDX_SENTINEL),
+                       axis=1, keepdims=True)                       # [tb, 1]
+        outs = lax.dynamic_update_slice_in_dim(outs, best, i, axis=1)
+        outi = lax.dynamic_update_slice_in_dim(outi, bidx, i, axis=1)
+        taken = at_best & (ci == bidx)
+        return jnp.where(taken, _NEG_TAKEN, cs), ci, outs, outi
+
+    _, _, outs, outi = lax.fori_loop(
+        0, k, select,
+        (cand_s, cand_i,
+         jnp.zeros((tb, k), jnp.int32), jnp.zeros((tb, k), jnp.int32)))
+    return outs, outi
+
+
+def _hamming_topk_kernel(x_ref, a_ref, valid_ref, os_ref, oi_ref, *,
+                         n: int, k: int, row_chunk: int):
+    """x_ref [tb, tw] u32; a_ref [tm, tw] u32; valid_ref [1, tm] i32;
+    os_ref/oi_ref [tb, k] i32 — the running top-k, revisited over grid dim 1.
+    """
+    tb = x_ref.shape[0]
+    tm = a_ref.shape[0]
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        os_ref[...] = jnp.full_like(os_ref, _NEG_INIT)
+        oi_ref[...] = jnp.full_like(oi_ref, _IDX_SENTINEL)
+
+    tile_s = _tile_scores(x_ref[...], a_ref[...], valid_ref[...],
+                          n=n, row_chunk=row_chunk)
+    tile_i = j * tm + lax.broadcasted_iota(jnp.int32, (tb, tm), 1)
+    outs, outi = _merge_topk(os_ref[...], oi_ref[...], tile_s, tile_i, k=k)
+    os_ref[...] = outs
+    oi_ref[...] = outi
+
+
+def _hamming_threshold_kernel(x_ref, a_ref, valid_ref, o_ref, *,
+                              n: int, delta: int, row_chunk: int):
+    """o_ref [tb, tm] i32: CAM match lines (h >= δ) for live rows."""
+    tile_s = _tile_scores(x_ref[...], a_ref[...], valid_ref[...],
+                          n=n, row_chunk=row_chunk)
+    o_ref[...] = (tile_s >= delta).astype(jnp.int32)
+
+
+def _pad_operands(x_packed, a_packed, valid, bb, bm):
+    b, w = x_packed.shape
+    m, w2 = a_packed.shape
+    assert w == w2, (w, w2)
+    bp, mp = _round_up(b, bb), _round_up(m, bm)
+    wp = _round_up(max(w, 1), 128)
+    x_p = jnp.pad(x_packed.astype(jnp.uint32), ((0, bp - b), (0, wp - w)))
+    a_p = jnp.pad(a_packed.astype(jnp.uint32), ((0, mp - m), (0, wp - w)))
+    if valid is None:
+        valid = jnp.ones((m,), jnp.int32)
+    v_p = jnp.pad(jnp.asarray(valid, jnp.int32)[None, :], ((0, 0), (0, mp - m)))
+    return x_p, a_p, v_p, bp, mp, wp
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "k", "block_q", "block_m", "row_chunk", "interpret"),
+)
+def hamming_topk_packed(
+    x_packed,
+    a_packed,
+    valid=None,
+    *,
+    n: int,
+    k: int,
+    block_q: int = 8,
+    block_m: int = 256,
+    row_chunk: int = 8,
+    interpret: bool = False,
+):
+    """Fused top-k: (scores [B, k], indices [B, k]) int32.
+
+    x_packed [B, W] uint32, a_packed [M, W] uint32, valid [M] (int/bool,
+    optional). Requires k <= M. Padding lanes must be zero (xor of equal
+    zeros adds 0 to the popcount, so they never change h).
+    """
+    b, _ = x_packed.shape
+    m = a_packed.shape[0]
+    assert 1 <= k <= m, (k, m)
+
+    bb = min(block_q, _round_up(b, 8))
+    bm = min(block_m, _round_up(m, 8))
+    bm = max(bm, _round_up(k, 8))  # a single tile must hold k candidates
+    rc = min(row_chunk, bm)
+    while bm % rc:
+        rc -= 1
+
+    x_p, a_p, v_p, bp, mp, _ = _pad_operands(x_packed, a_packed, valid, bb, bm)
+    grid = (bp // bb, mp // bm)
+    scores, idx = pl.pallas_call(
+        functools.partial(_hamming_topk_kernel, n=n, k=k, row_chunk=rc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, x_p.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, a_p.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bm), lambda i, j: (0, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((bp, k), jnp.int32),
+            jax.ShapeDtypeStruct((bp, k), jnp.int32),
+        ),
+        interpret=interpret,
+    )(x_p, a_p, v_p)
+    return scores[:b], idx[:b]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "delta", "block_q", "block_m", "row_chunk",
+                     "interpret"),
+)
+def hamming_threshold_packed(
+    x_packed,
+    a_packed,
+    valid=None,
+    *,
+    n: int,
+    delta: int,
+    block_q: int = 8,
+    block_m: int = 256,
+    row_chunk: int = 8,
+    interpret: bool = False,
+):
+    """Fused CAM δ-match: match lines [B, M] int32 (1 iff h >= δ, row live)."""
+    b, _ = x_packed.shape
+    m = a_packed.shape[0]
+
+    bb = min(block_q, _round_up(b, 8))
+    bm = min(block_m, _round_up(m, 8))
+    rc = min(row_chunk, bm)
+    while bm % rc:
+        rc -= 1
+
+    x_p, a_p, v_p, bp, mp, _ = _pad_operands(x_packed, a_packed, valid, bb, bm)
+    grid = (bp // bb, mp // bm)
+    out = pl.pallas_call(
+        functools.partial(_hamming_threshold_kernel, n=n, delta=delta,
+                          row_chunk=rc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, x_p.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, a_p.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bm), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, mp), jnp.int32),
+        interpret=interpret,
+    )(x_p, a_p, v_p)
+    return out[:b, :m]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

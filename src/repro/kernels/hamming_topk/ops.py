@@ -1,0 +1,132 @@
+"""Public wrappers for fused Hamming top-k / CAM δ-match — backend dispatch.
+
+Mirrors ``binary_mvp.ops``: packed uint32 operands, the true bit width
+``n``, and a ``backend`` in
+
+  'pallas' — the fused streaming kernel (kernel.py); interpret mode off-TPU
+  'ref'    — brute-force [B, M] score matrix + lax.top_k (oracle)
+  'mxu'    — streaming MXU lowering: scans the database in row chunks,
+             computes each chunk's scores as an int8 dot product and merges
+             into a running top-k — like the Pallas kernel, it never
+             materializes the [B, M] score matrix.
+
+All three produce bit-identical results, including (score desc, index asc)
+tie ordering and the validity-mask semantics of ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ...core.formats import unpack_bits
+from .kernel import (
+    _round_up,
+    hamming_threshold_packed,
+    hamming_topk_packed,
+)
+from .ref import (
+    MASKED_SCORE,
+    hamming_threshold_match_ref,
+    hamming_topk_ref,
+)
+
+_INIT_SCORE = -(2**30)
+_INIT_IDX = 2**30
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k", "chunk_m"))
+def _hamming_topk_mxu(x_packed, a_packed, valid, *, n: int, k: int,
+                      chunk_m: int = 2048):
+    """Streaming MXU top-k: scan over [chunk_m]-row database chunks."""
+    b = x_packed.shape[0]
+    m = a_packed.shape[0]
+    chunk = min(chunk_m, _round_up(m, 8))
+    mp = _round_up(m, chunk)
+
+    a_p = jnp.pad(a_packed.astype(jnp.uint32), ((0, mp - m), (0, 0)))
+    if valid is None:
+        valid = jnp.ones((m,), jnp.int32)
+    v_p = jnp.pad(jnp.asarray(valid, jnp.int32), (0, mp - m))
+    a_chunks = a_p.reshape(mp // chunk, chunk, a_p.shape[1])
+    v_chunks = v_p.reshape(mp // chunk, chunk)
+    bases = jnp.arange(mp // chunk, dtype=jnp.int32) * chunk
+
+    xb = unpack_bits(x_packed, n).astype(jnp.int8)       # [B, n]
+    rx = jnp.sum(xb.astype(jnp.int32), axis=1)[:, None]  # [B, 1]
+
+    def step(carry, inp):
+        run_s, run_i = carry
+        a_c, v_c, base = inp
+        ab = unpack_bits(a_c, n).astype(jnp.int8)        # [chunk, n]
+        dot = lax.dot_general(xb, ab, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+        ra = jnp.sum(ab.astype(jnp.int32), axis=1)[None, :]
+        h = n - (rx + ra - 2 * dot)                      # [B, chunk]
+        tile_s = jnp.where(v_c[None, :] > 0, h, MASKED_SCORE)
+        tile_i = base + lax.broadcasted_iota(jnp.int32, (b, chunk), 1)
+        cand_s = jnp.concatenate([run_s, tile_s], axis=1)
+        cand_i = jnp.concatenate([run_i, tile_i], axis=1)
+        # positions respect global-index order among equal scores (running
+        # entries come from earlier chunks), so value-only top_k reproduces
+        # the exact global tie ordering.
+        vals, pos = lax.top_k(cand_s, k)
+        idx = jnp.take_along_axis(cand_i, pos, axis=1)
+        return (vals, idx), None
+
+    init = (jnp.full((b, k), _INIT_SCORE, jnp.int32),
+            jnp.full((b, k), _INIT_IDX, jnp.int32))
+    (scores, idx), _ = lax.scan(step, init, (a_chunks, v_chunks, bases))
+    return scores, idx
+
+
+def hamming_topk(x_packed, a_packed, *, n: int, k: int, valid=None,
+                 backend: str = "pallas", block_m: int = 256,
+                 chunk_m: int = 2048):
+    """(scores [B, k], indices [B, k]) of the k most similar database rows.
+
+    x_packed [B, W] uint32 queries, a_packed [M, W] uint32 database,
+    valid [M] optional row liveness. Requires k <= M.
+    """
+    assert 1 <= k <= a_packed.shape[0], (k, a_packed.shape[0])
+    if backend == "pallas":
+        return hamming_topk_packed(x_packed, a_packed, valid, n=n, k=k,
+                                   block_m=block_m,
+                                   interpret=_auto_interpret())
+    if backend == "ref":
+        return hamming_topk_ref(x_packed, a_packed, n=n, k=k, valid=valid)
+    if backend == "mxu":
+        return _hamming_topk_mxu(x_packed, a_packed, valid, n=n, k=k,
+                                 chunk_m=chunk_m)
+    raise ValueError(f"unknown backend {backend}")
+
+
+def hamming_threshold_match(x_packed, a_packed, *, n: int, delta: int,
+                            valid=None, backend: str = "pallas"):
+    """CAM match lines [B, M] uint8: 1 iff live row m has h̄ >= δ."""
+    if backend == "pallas":
+        out = hamming_threshold_packed(x_packed, a_packed, valid, n=n,
+                                       delta=delta,
+                                       interpret=_auto_interpret())
+        return out.astype(jnp.uint8)
+    if backend == "ref":
+        return hamming_threshold_match_ref(x_packed, a_packed, n=n,
+                                           delta=delta, valid=valid)
+    if backend == "mxu":
+        xb = unpack_bits(x_packed, n).astype(jnp.int8)
+        ab = unpack_bits(a_packed, n).astype(jnp.int8)
+        dot = lax.dot_general(xb, ab, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+        rx = jnp.sum(xb.astype(jnp.int32), axis=1)[:, None]
+        ra = jnp.sum(ab.astype(jnp.int32), axis=1)[None, :]
+        h = n - (rx + ra - 2 * dot)
+        if valid is not None:
+            h = jnp.where(jnp.asarray(valid)[None, :] > 0, h, MASKED_SCORE)
+        return (h >= delta).astype(jnp.uint8)
+    raise ValueError(f"unknown backend {backend}")

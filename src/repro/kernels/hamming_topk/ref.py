@@ -1,0 +1,43 @@
+"""Brute-force oracles for the fused Hamming top-k / threshold-match kernels.
+
+These materialize the full [B, M] score matrix (exactly what the fused
+kernel avoids) and are the bit-exact ground truth, including tie handling:
+``lax.top_k`` orders by (score descending, index ascending), and the fused
+kernels reproduce that ordering exactly.
+
+Masked (invalid) rows score ``MASKED_SCORE`` (= -1), strictly below every
+real Hamming similarity (which is >= 0), so they can only surface when
+``k`` exceeds the number of live rows — and then in index-ascending order,
+same as the fused paths.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from ..binary_mvp.ref import binary_matmul_packed_ref
+
+MASKED_SCORE = -1
+
+
+def masked_scores_ref(x_packed, a_packed, *, n: int, valid=None):
+    """Hamming similarity [B, M] with invalid rows forced to MASKED_SCORE."""
+    s = binary_matmul_packed_ref(x_packed, a_packed, op="xor")
+    h = n - s
+    if valid is None:
+        return h
+    v = jnp.asarray(valid)
+    return jnp.where(v[None, :] > 0, h, MASKED_SCORE)
+
+
+def hamming_topk_ref(x_packed, a_packed, *, n: int, k: int, valid=None):
+    """(scores [B,k], indices [B,k]) of the k most similar rows per query."""
+    scores = masked_scores_ref(x_packed, a_packed, n=n, valid=valid)
+    return lax.top_k(scores, k)
+
+
+def hamming_threshold_match_ref(x_packed, a_packed, *, n: int, delta: int,
+                                valid=None):
+    """CAM match lines [B, M] uint8: 1 iff live row m has h̄(a_m, x_b) >= δ."""
+    scores = masked_scores_ref(x_packed, a_packed, n=n, valid=valid)
+    return (scores >= delta).astype(jnp.uint8)

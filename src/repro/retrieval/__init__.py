@@ -1,0 +1,8 @@
+"""Associative retrieval subsystem: PPAC as a scalable CAM/ANN index.
+
+CAMIndex             — tile-virtualized packed-bit index with add/delete,
+                       fused top-k search, CAM δ-match, cycle accounting
+sharded_hamming_topk — row-sharded search with all-gather top-k merge
+"""
+from .index import CAMIndex, SearchResult  # noqa: F401
+from .sharded import sharded_hamming_topk  # noqa: F401

@@ -1,0 +1,254 @@
+"""CAMIndex: a scalable associative (content-addressable) memory on PPAC.
+
+Virtualizes an arbitrarily large packed-bit database onto *tiles* of the
+fixed ``PPACConfig`` array geometry (paper §IV-A builds one M×N array; a
+deployment banks many of them). A database of ``size`` codes of
+``n_bits`` bits occupies
+
+    col_tiles = ceil(n_bits / config.n)   arrays side by side (bit split)
+    row_tiles = ceil(high_water / config.m)  arrays stacked   (row split)
+
+Write path is incremental: ``add`` fills tombstoned slots first and grows
+capacity by doubling in whole-tile units (so device buffers take few
+distinct shapes and jit recompiles stay bounded); ``delete`` tombstones
+rows via the validity mask that the fused kernels honor natively — no
+compaction, ids are stable row numbers.
+
+Cycle accounting (per query, through ``core.cost_model`` geometry rules):
+  * scan: every (row, col) tile runs one Hamming cycle (mode III-A);
+    with ``parallel_arrays`` physical arrays the tiles time-multiplex:
+    ceil(row_tiles * col_tiles / parallel_arrays) cycles;
+  * merge: col-split partial similarities reduce over an adder tree,
+    ceil(log2(col_tiles)) cycles;
+  * select: draining k winners through a bit-serial max-search priority
+    encoder costs ceil(log2(n_bits + 1)) cycles per winner (the classic
+    associative-processor max-search; threshold match instead reads the
+    row ALU's sign bit for free);
+  * plus the 2-cycle pipeline latency once per batch.
+
+Wall-clock estimates use the paper's post-layout clock for the configured
+geometry when it appears in cost_model.TABLE_II.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.cost_model import TABLE_II
+from ..core.formats import pack_bits, packed_width
+from ..core.ppac import CycleCounter, PPACConfig
+from ..kernels.hamming_topk.ops import hamming_threshold_match, hamming_topk
+from .sharded import sharded_hamming_topk
+
+
+def _auto_backend() -> str:
+    import jax
+
+    return "pallas" if jax.default_backend() == "tpu" else "mxu"
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Top-k result plus the emulated hardware cost of producing it."""
+
+    scores: np.ndarray   # [Q, k] int32 Hamming similarities (-1 = no row)
+    ids: np.ndarray      # [Q, k] int32 stable row ids
+    stats: Dict[str, float]
+
+
+class CAMIndex:
+    """Associative index over ``n_bits``-wide binary codes (mode III-A)."""
+
+    def __init__(self, n_bits: int, *, config: Optional[PPACConfig] = None,
+                 backend: str = "auto", parallel_arrays: Optional[int] = None,
+                 min_capacity: int = 1024):
+        assert n_bits > 0
+        self.n_bits = n_bits
+        self.config = config or PPACConfig()
+        self.backend = _auto_backend() if backend == "auto" else backend
+        self.parallel_arrays = parallel_arrays  # None -> fully parallel
+        self.w = packed_width(n_bits)
+        cap = self._tile_round(max(min_capacity, self.config.m))
+        self._codes = np.zeros((cap, self.w), np.uint32)   # host mirror
+        self._valid = np.zeros((cap,), np.int32)
+        self._high = 0          # high-water row (exclusive)
+        self._live = 0
+        self._free: list = []   # tombstoned rows available for reuse
+        self._dev = None        # (codes, valid) device cache
+        self.counter = CycleCounter()
+
+    # -- geometry ------------------------------------------------------------
+
+    def _tile_round(self, rows: int) -> int:
+        m = self.config.m
+        return max(m, ((rows + m - 1) // m) * m)
+
+    @property
+    def capacity(self) -> int:
+        return self._codes.shape[0]
+
+    @property
+    def size(self) -> int:
+        """Live (non-deleted) codes."""
+        return self._live
+
+    @property
+    def high_water(self) -> int:
+        return self._high
+
+    @property
+    def col_tiles(self) -> int:
+        return max(1, -(-self.n_bits // self.config.n))
+
+    @property
+    def row_tiles(self) -> int:
+        return max(1, -(-max(self._high, 1) // self.config.m))
+
+    # -- write path ----------------------------------------------------------
+
+    def _ensure_capacity(self, extra: int):
+        need = self._high + max(0, extra - len(self._free))
+        cap = self.capacity
+        if need <= cap:
+            return
+        while cap < need:
+            cap *= 2
+        cap = self._tile_round(cap)
+        codes = np.zeros((cap, self.w), np.uint32)
+        codes[: self._high] = self._codes[: self._high]
+        valid = np.zeros((cap,), np.int32)
+        valid[: self._high] = self._valid[: self._high]
+        self._codes, self._valid = codes, valid
+
+    def add(self, codes_bits) -> np.ndarray:
+        """Insert unpacked {0,1} codes [num, n_bits]; returns stable ids."""
+        codes_bits = np.asarray(codes_bits, np.uint8)
+        assert codes_bits.ndim == 2 and codes_bits.shape[1] == self.n_bits, \
+            codes_bits.shape
+        return self.add_packed(np.asarray(pack_bits(codes_bits), np.uint32))
+
+    def add_packed(self, packed) -> np.ndarray:
+        """Insert pre-packed codes [num, ceil(n_bits/32)] uint32."""
+        packed = np.asarray(packed, np.uint32)
+        num = packed.shape[0]
+        assert packed.shape == (num, self.w), (packed.shape, self.w)
+        self._ensure_capacity(num)
+        reuse = min(num, len(self._free))
+        rows = [self._free.pop() for _ in range(reuse)]
+        fresh = num - reuse
+        if fresh:
+            rows.extend(range(self._high, self._high + fresh))
+            self._high += fresh
+        ids = np.asarray(rows, np.int32)
+        self._codes[ids] = packed
+        self._valid[ids] = 1
+        self._live += num
+        self._dev = None
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by id; returns the number actually deleted."""
+        ids = np.unique(np.atleast_1d(np.asarray(ids, np.int64)))
+        hit = ids[(ids >= 0) & (ids < self._high)]
+        hit = hit[self._valid[hit] > 0]
+        self._valid[hit] = 0
+        self._codes[hit] = 0
+        self._free.extend(int(r) for r in hit)
+        self._live -= len(hit)
+        self._dev = None
+        return len(hit)
+
+    # -- device state --------------------------------------------------------
+
+    def _device_arrays(self):
+        if self._dev is None:
+            self._dev = (jnp.asarray(self._codes), jnp.asarray(self._valid))
+        return self._dev
+
+    def _pack_queries(self, queries, queries_packed):
+        if queries_packed is not None:
+            q = jnp.asarray(queries_packed, jnp.uint32)
+            assert q.ndim == 2 and q.shape[1] == self.w, q.shape
+            return q
+        qb = np.asarray(queries, np.uint8)
+        assert qb.ndim == 2 and qb.shape[1] == self.n_bits, qb.shape
+        return jnp.asarray(pack_bits(qb))
+
+    # -- cycle model ---------------------------------------------------------
+
+    def cycles_per_query(self, k: int = 0, *, threshold_only: bool = False) -> int:
+        rt, ct = self.row_tiles, self.col_tiles
+        arrays = self.parallel_arrays or (rt * ct)
+        scan = -(-(rt * ct) // arrays)
+        merge = int(math.ceil(math.log2(ct))) if ct > 1 else 0
+        select = 0 if threshold_only else k * int(math.ceil(math.log2(self.n_bits + 1)))
+        return scan + merge + select
+
+    def _stats(self, nq: int, k: int, *, threshold_only: bool = False,
+               shards: int = 1) -> Dict[str, float]:
+        cpq = self.cycles_per_query(k, threshold_only=threshold_only)
+        total = nq * cpq + self.counter.pipeline_latency
+        self.counter.tick(total)
+        stats = dict(queries=nq, cycles_per_query=cpq, total_cycles=total,
+                     row_tiles=self.row_tiles, col_tiles=self.col_tiles,
+                     shards=shards, backend=self.backend)
+        impl = TABLE_II.get((self.config.m, self.config.n))
+        if impl:
+            f_hz = impl["f_ghz"] * 1e9
+            stats["est_latency_us"] = total / shards / f_hz * 1e6
+        return stats
+
+    # -- queries -------------------------------------------------------------
+
+    def search(self, queries=None, k: int = 1, *, queries_packed=None,
+               mesh=None, shard_axis: str = "data",
+               backend: Optional[str] = None) -> SearchResult:
+        """Top-k most similar codes per query.
+
+        queries: [Q, n_bits] {0,1} (or pass queries_packed [Q, W] uint32).
+        With a ``mesh``, database rows shard over ``shard_axis`` and the
+        per-device top-k lists merge through an all-gather — bit-identical
+        to the single-device path. Entries beyond the live count come back
+        with score -1.
+        """
+        q = self._pack_queries(queries, queries_packed)
+        codes, valid = self._device_arrays()
+        be = backend or self.backend
+        assert 1 <= k <= self.capacity, (k, self.capacity)
+        if mesh is None:
+            scores, idx = hamming_topk(q, codes, n=self.n_bits, k=k,
+                                       valid=valid, backend=be)
+            shards = 1
+        else:
+            scores, idx = sharded_hamming_topk(
+                q, codes, valid, n=self.n_bits, k=k, mesh=mesh,
+                axis=shard_axis, backend=be)
+            shards = int(mesh.shape[shard_axis])
+        stats = self._stats(q.shape[0], k, shards=shards)
+        return SearchResult(np.asarray(scores), np.asarray(idx), stats)
+
+    def match(self, queries=None, delta: Optional[int] = None, *,
+              queries_packed=None, backend: Optional[str] = None):
+        """CAM δ-match lines [Q, high_water] uint8 (δ=None -> exact match).
+
+        Agrees with ``PPACArray.cam_match`` row-for-row on live rows and
+        returns 0 for tombstoned rows.
+        """
+        q = self._pack_queries(queries, queries_packed)
+        codes, valid = self._device_arrays()
+        d = self.n_bits if delta is None else delta
+        out = hamming_threshold_match(q, codes, n=self.n_bits, delta=d,
+                                      valid=valid,
+                                      backend=backend or self.backend)
+        self._stats(q.shape[0], 0, threshold_only=True)
+        return np.asarray(out[:, : self._high])
+
+    def match_ids(self, queries=None, delta: Optional[int] = None, *,
+                  queries_packed=None):
+        """Per-query arrays of matching row ids (candidate sets)."""
+        lines = self.match(queries, delta, queries_packed=queries_packed)
+        return [np.flatnonzero(row) for row in lines]

@@ -1,0 +1,61 @@
+"""Row-sharded associative search: shard_map + all-gather top-k merge.
+
+The database row dimension is split contiguously across a mesh axis; each
+device runs the fused local top-k on its shard, rebases local row indices
+to global ones, and an all-gather + merge reproduces the single-device
+result bit-exactly (replicated on every device).
+
+Tie correctness: each shard's k-list is ordered (score desc, index asc);
+shards are concatenated in axis-index order, so among equal scores the
+concatenation position order *is* the global-index order, and a value-only
+``lax.top_k`` over the [D*k] candidates yields exactly the single-device
+(score desc, global index asc) ordering. The global top-k is always a
+subset of the union of per-shard top-k lists, so nothing is lost.
+
+Fully-manual shard_map (like sharding/pipeline.py — the partial-manual
+form crashes the CPU XLA backend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..kernels.hamming_topk.ops import hamming_topk
+from ..sharding.compat import shard_map
+
+
+def sharded_hamming_topk(x_packed, a_packed, valid, *, n: int, k: int,
+                         mesh: Mesh, axis: str = "data",
+                         backend: str = "mxu"):
+    """(scores [B, k], global indices [B, k]) — identical to the
+    single-device ``hamming_topk`` on the full database.
+
+    a_packed [M, W] and valid [M] are sharded over ``axis`` (M must divide
+    by the axis size, and k must fit in one shard); queries are replicated.
+    """
+    d = mesh.shape[axis]
+    m = a_packed.shape[0]
+    assert m % d == 0, (m, d)
+    rows = m // d
+    assert 1 <= k <= rows, (k, rows)
+
+    if valid is None:
+        valid = jnp.ones((m,), jnp.int32)
+    valid = jnp.asarray(valid, jnp.int32)
+
+    def local(xq, a_s, v_s):
+        s, i = hamming_topk(xq, a_s, n=n, k=k, valid=v_s, backend=backend)
+        i = i + lax.axis_index(axis) * rows
+        s_all = lax.all_gather(s, axis)                    # [D, B, k]
+        i_all = lax.all_gather(i, axis)
+        b = s.shape[0]
+        s_cat = jnp.moveaxis(s_all, 0, 1).reshape(b, d * k)
+        i_cat = jnp.moveaxis(i_all, 0, 1).reshape(b, d * k)
+        vals, pos = lax.top_k(s_cat, k)
+        return vals, jnp.take_along_axis(i_cat, pos, axis=1)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(), P(axis), P(axis)), out_specs=(P(), P()))
+    return fn(x_packed, a_packed, valid)

@@ -1,0 +1,27 @@
+"""shard_map across jax versions.
+
+jax >= 0.5 exposes ``jax.shard_map`` (with ``check_vma`` and, for
+partial-manual mode, ``axis_names``); 0.4.x only has
+``jax.experimental.shard_map.shard_map`` (``check_rep`` and the
+complementary ``auto=`` axis set). One entry point hides the difference;
+replication/VMA checking is always off (the repo uses fully-manual or
+pod-manual bodies that those checkers reject).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None):
+    """axis_names: iterable of *manual* mesh axes; None -> fully manual."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False, **kw)

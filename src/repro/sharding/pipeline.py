@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import shard_map
+
 
 def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
                    axis: str = "pipe", microbatches: int):
@@ -65,9 +67,6 @@ def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
         outs = lax.psum(outs, axis)
         return outs
 
-    fn = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axis), P()), out_specs=P(),
-        check_vma=False)
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P()), out_specs=P())
     y = fn(stage_params, xs)
     return y.reshape((b,) + x.shape[1:])

@@ -72,7 +72,9 @@ class ShardingRules:
             if isinstance(v, str):
                 return v if v in names else None
             kept = tuple(a for a in v if a in names)
-            return kept if kept else None
+            if not kept:
+                return None
+            return kept[0] if len(kept) == 1 else kept
 
         return ShardingRules({k: fit(v) for k, v in self.rules.items()})
 

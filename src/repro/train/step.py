@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 from ..configs.base import ModelConfig
 from ..models import lm
 from ..optim.adamw import AdamWConfig, cosine_schedule, opt_init, opt_update
+from ..sharding.compat import shard_map
 from ..sharding.rules import ShardingRules
 from .loss import total_loss
 
@@ -146,7 +147,6 @@ def _sharded_pod_grads(params, batch, cfg, tcfg, rules, mesh):
                             params, batch)
     pspecs_out = (P(), jax.tree.map(lambda _: P(), shaped),
                   jax.tree.map(lambda _: P(), params))
-    fn = jax.shard_map(per_pod, mesh=mesh, in_specs=pspecs_in,
-                       out_specs=pspecs_out, check_vma=False,
-                       axis_names={"pod"})
+    fn = shard_map(per_pod, mesh=mesh, in_specs=pspecs_in,
+                   out_specs=pspecs_out, axis_names={"pod"})
     return fn(params, batch)

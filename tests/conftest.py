@@ -1,3 +1,5 @@
+import os
+
 import numpy as np
 import pytest
 
@@ -5,3 +7,29 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+def cpu_subproc_env():
+    """Env for CPU-only jax subprocesses. Forces the CPU platform: without
+    it a stray libtpu install spends minutes probing for TPU metadata
+    before falling back."""
+    return {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+            "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
+
+
+# hypothesis is optional: property-based tests skip when it is absent.
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st  # noqa: F401
+except ImportError:
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _NoStrategies:
+        def __getattr__(self, _name):
+            return lambda *_a, **_k: None
+
+    st = _NoStrategies()

@@ -1,8 +1,7 @@
 """Number formats + bitplane codecs (paper Table I)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import given, settings, st  # hypothesis or skip-shim
 
 from repro.core import formats as F
 

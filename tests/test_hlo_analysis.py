@@ -91,5 +91,7 @@ def test_scanned_matmul_against_known_flops():
     want = 7 * 2 * 128 * 128 * 128
     assert abs(st.flops - want) / want < 0.01
     # XLA's entry-level count misses the trip multiplier
-    xla = comp.cost_analysis()["flops"]
-    assert xla < want / 2
+    ca = comp.cost_analysis()
+    if isinstance(ca, list):  # jax <= 0.4.x returns one dict per device
+        ca = ca[0]
+    assert ca["flops"] < want / 2

@@ -5,8 +5,7 @@ results must be bit-exact (integer arithmetic — the property the paper
 claims over mixed-signal PIM)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import given, settings, st  # hypothesis or skip-shim
 
 from repro.core import formats as F
 from repro.kernels.binary_mvp.kernel import binary_matmul_packed

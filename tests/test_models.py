@@ -119,13 +119,13 @@ def test_mamba2_long_decode_state_is_constant_memory(rng):
                               dtype="float32")
     params, _ = lm.init(cfg, jax.random.PRNGKey(3))
     cache, _ = lm.init_cache(cfg, 1, 8, dtype=jnp.float32)
-    sizes = {k: v.shape for k, v in jax.tree.leaves_with_path(cache)}
+    sizes = {k: v.shape for k, v in jax.tree_util.tree_leaves_with_path(cache)}
     tok = jnp.ones((1, 1), jnp.int32)
     logits, cache = lm.prefill(params, cfg, {"tokens": jnp.ones((1, 8), jnp.int32)}, cache)
     for _ in range(5):
         logits, cache = lm.decode_step(params, cfg, tok, cache)
     # state shapes unchanged (no growth with sequence length)
-    sizes2 = {k: v.shape for k, v in jax.tree.leaves_with_path(cache)}
+    sizes2 = {k: v.shape for k, v in jax.tree_util.tree_leaves_with_path(cache)}
     assert sizes == sizes2
 
 

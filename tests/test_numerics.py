@@ -9,8 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import given, settings, st  # hypothesis or skip-shim
 
 from repro.configs import load_arch
 from repro.models.attention import chunked_attention

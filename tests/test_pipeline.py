@@ -3,6 +3,8 @@ import subprocess
 import sys
 import textwrap
 
+from conftest import cpu_subproc_env
+
 SUB = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -51,7 +53,5 @@ SUB = textwrap.dedent("""
 
 def test_gpipe_matches_sequential():
     res = subprocess.run([sys.executable, "-c", SUB], capture_output=True,
-                         text=True, timeout=600,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                         text=True, timeout=600, env=cpu_subproc_env())
     assert "PIPE_OK" in res.stdout, res.stdout + res.stderr

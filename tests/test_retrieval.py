@@ -1,0 +1,200 @@
+"""Associative retrieval subsystem: fused Hamming top-k kernels (all
+backends bit-exact vs the brute-force oracle, ties included), CAMIndex
+write path + search + CAM δ-match vs PPACArray, sharded search identity,
+and the batched lookup server."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from conftest import cpu_subproc_env
+
+from repro.core import formats as F
+from repro.core.ppac import PPACArray, PPACConfig
+from repro.kernels.hamming_topk.ops import (
+    hamming_threshold_match,
+    hamming_topk,
+)
+from repro.launch.retrieval import LookupRequest, RetrievalServer
+from repro.retrieval import CAMIndex
+
+
+def _pack(rng, rows, n):
+    return F.pack_bits(rng.integers(0, 2, (rows, n)))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "mxu"])
+@pytest.mark.parametrize("b,m,n,k", [(1, 1, 1, 1), (3, 17, 8, 5),
+                                     (5, 300, 64, 16), (8, 40, 513, 7),
+                                     (2, 1000, 32, 32)])
+def test_topk_matches_ref_exactly(rng, backend, b, m, n, k):
+    xp, ap = _pack(rng, b, n), _pack(rng, m, n)
+    rs, ri = hamming_topk(xp, ap, n=n, k=k, backend="ref")
+    s, i = hamming_topk(xp, ap, n=n, k=k, backend=backend)
+    assert np.array_equal(np.asarray(s), np.asarray(rs))
+    assert np.array_equal(np.asarray(i), np.asarray(ri))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "mxu"])
+def test_topk_tie_handling(rng, backend):
+    """n=2 forces massive score duplication; constant DB makes *every* row
+    tie — index-ascending order must match lax.top_k bit-for-bit."""
+    b, m, n, k = 4, 600, 2, 20
+    xp, ap = _pack(rng, b, n), _pack(rng, m, n)
+    rs, ri = hamming_topk(xp, ap, n=n, k=k, backend="ref")
+    s, i = hamming_topk(xp, ap, n=n, k=k, backend=backend)
+    assert np.array_equal(np.asarray(s), np.asarray(rs))
+    assert np.array_equal(np.asarray(i), np.asarray(ri))
+
+    const = F.pack_bits(np.ones((300, 16), np.uint8))
+    q = _pack(rng, 3, 16)
+    rs, ri = hamming_topk(q, const, n=16, k=10, backend="ref")
+    s, i = hamming_topk(q, const, n=16, k=10, backend=backend)
+    assert np.array_equal(np.asarray(i), np.asarray(ri))
+    assert np.array_equal(np.asarray(i), np.tile(np.arange(10), (3, 1)))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "mxu"])
+def test_topk_validity_mask(rng, backend):
+    """Tombstoned rows score -1 and only surface when k exceeds live rows,
+    in index-ascending order — identical across backends."""
+    b, m, n = 3, 50, 24
+    xp, ap = _pack(rng, b, n), _pack(rng, m, n)
+    valid = np.ones(m, np.int32)
+    valid[10:45] = 0  # 15 live rows, k=20 > live
+    rs, ri = hamming_topk(xp, ap, n=n, k=20, valid=valid, backend="ref")
+    s, i = hamming_topk(xp, ap, n=n, k=20, valid=valid, backend=backend)
+    assert np.array_equal(np.asarray(s), np.asarray(rs))
+    assert np.array_equal(np.asarray(i), np.asarray(ri))
+    assert (np.asarray(s)[:, 15:] == -1).all()
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref", "mxu"])
+def test_threshold_match_agrees_with_ppac_array(rng, backend):
+    """The fused CAM δ-match must agree with the cycle-exact PPACArray
+    emulator (paper §III-A) row-for-row."""
+    m, n = 32, 48
+    a_bits = rng.integers(0, 2, (m, n)).astype(np.uint8)
+    arr = PPACArray(PPACConfig(m=m, n=n))
+    arr.write(a_bits)
+    x_bits = a_bits[5].copy()
+    x_bits[:4] ^= 1  # 4 mismatches
+    for delta in (n, n - 4, n // 2):
+        want = np.asarray(arr.cam_match(x_bits, delta=delta)).astype(np.uint8)
+        got = np.asarray(hamming_threshold_match(
+            F.pack_bits(x_bits[None, :]), F.pack_bits(a_bits),
+            n=n, delta=delta, backend=backend))[0]
+        assert np.array_equal(got, want), delta
+
+
+def test_camindex_search_and_write_path(rng):
+    idx = CAMIndex(64, backend="mxu", min_capacity=256)
+    codes = rng.integers(0, 2, (700, 64))
+    ids = idx.add(codes)
+    assert np.array_equal(ids, np.arange(700))
+    assert idx.size == 700 and idx.capacity % idx.config.m == 0
+
+    # exact self-retrieval
+    res = idx.search(codes[[5, 300, 699]], k=3)
+    assert np.array_equal(res.ids[:, 0], [5, 300, 699])
+    assert (res.scores[:, 0] == 64).all()
+
+    # delete -> gone from results; add -> tombstones reused, ids stable
+    assert idx.delete([5, 300]) == 2 and idx.size == 698
+    res = idx.search(codes[[5, 300]], k=1)
+    assert res.ids[0, 0] != 5 and res.ids[1, 0] != 300
+    new_ids = idx.add(rng.integers(0, 2, (2, 64)))
+    assert set(new_ids.tolist()) == {5, 300} and idx.size == 700
+
+    # brute-force oracle over the whole (masked) store
+    q = rng.integers(0, 2, (4, 64))
+    res = idx.search(q, k=10)
+    hs = (q[:, None, :] == np.asarray(
+        F.unpack_bits(idx._codes, 64))[None, :, :]).sum(-1)
+    hs = np.where(idx._valid[None, :] > 0, hs, -1)
+    order = np.lexsort((np.arange(hs.shape[1])[None, :].repeat(4, 0), -hs), 1)
+    assert np.array_equal(res.ids, order[:, :10])
+    assert np.array_equal(res.scores, np.take_along_axis(hs, order, 1)[:, :10])
+
+
+def test_camindex_duplicate_delete(rng):
+    """Duplicate ids in one delete() must tombstone the row exactly once
+    (no double free-list entry, no live-count drift)."""
+    idx = CAMIndex(32, backend="mxu", min_capacity=256)
+    idx.add(rng.integers(0, 2, (10, 32)))
+    assert idx.delete([3, 3, 3]) == 1
+    assert idx.size == 9
+    new = idx.add(rng.integers(0, 2, (2, 32)))
+    assert sorted(new.tolist()) == [3, 10] and idx.size == 11
+
+
+def test_camindex_match_and_cycles(rng):
+    idx = CAMIndex(32, backend="mxu", min_capacity=256,
+                   config=PPACConfig(m=64, n=16))  # 2 col tiles
+    codes = rng.integers(0, 2, (200, 32))
+    idx.add(codes)
+    idx.delete([7])
+    lines = idx.match(codes[[7, 9]])
+    assert lines.shape == (2, 200)
+    assert lines[0, 7] == 0      # tombstoned: never matches
+    assert lines[1, 9] == 1
+    cand = idx.match_ids(codes[[9]], delta=16)
+    assert 9 in cand[0]
+
+    c0 = idx.counter.cycles
+    res = idx.search(codes[:8], k=4)
+    assert idx.counter.cycles - c0 == res.stats["total_cycles"]
+    # scan cycles grow with the store; select cost scales with k
+    assert res.stats["row_tiles"] == -(-idx.high_water // 64)
+    assert res.stats["col_tiles"] == 2
+    assert idx.cycles_per_query(8) > idx.cycles_per_query(1) > \
+        idx.cycles_per_query(0, threshold_only=True)
+
+
+SUBPROC_SHARDED = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np, jax
+    from repro.retrieval import CAMIndex
+
+    rng = np.random.default_rng(3)
+    idx = CAMIndex(96, backend="mxu", min_capacity=512)
+    idx.add(rng.integers(0, 2, (900, 96)))
+    idx.delete(list(range(40, 80)))
+    q = rng.integers(0, 2, (5, 96))
+    single = idx.search(q, k=8)
+    mesh = jax.make_mesh((2,), ("data",))
+    for be in ("mxu", "ref", "pallas"):
+        sh = idx.search(q, k=8, mesh=mesh, backend=be)
+        assert np.array_equal(single.scores, sh.scores), be
+        assert np.array_equal(single.ids, sh.ids), be
+        assert sh.stats["shards"] == 2
+    print("SHARDED_OK")
+""")
+
+
+def test_sharded_search_matches_single_device():
+    """2 simulated devices: row-sharded search with all-gather top-k merge
+    must be bit-identical to the single-device path, for every backend."""
+    res = subprocess.run([sys.executable, "-c", SUBPROC_SHARDED],
+                         capture_output=True, text=True, timeout=600,
+                         env=cpu_subproc_env())
+    assert "SHARDED_OK" in res.stdout, res.stdout + res.stderr
+
+
+def test_retrieval_server_bucketing(rng):
+    idx = CAMIndex(32, backend="mxu", min_capacity=256)
+    codes = rng.integers(0, 2, (120, 32))
+    idx.add(codes)
+    server = RetrievalServer(idx, max_k=4, buckets=(1, 4, 16))
+    targets = rng.integers(0, 120, 23)
+    for i, t in enumerate(targets):
+        server.submit(LookupRequest(i, codes[t].copy(), k=1 + i % 4))
+    done = server.run()
+    assert len(done) == 23 and all(r.done for r in done)
+    for r in done:
+        assert r.ids.shape == (r.k,) and r.ids[0] == targets[r.rid]
+        assert r.scores[0] == 32
+    # 23 requests at max bucket 16 -> batches of 16 and 7 (bucketed to 16)
+    assert server.batches == 2 and server.bucket_counts[16] == 2

@@ -6,6 +6,7 @@ import textwrap
 
 import jax
 import pytest
+from conftest import cpu_subproc_env
 from jax.sharding import PartitionSpec as P
 
 from repro.sharding.rules import ShardingRules, default_rules, fit_spec
@@ -87,9 +88,7 @@ SUBPROC = textwrap.dedent("""
 
 def test_multidevice_train_lowering():
     res = subprocess.run([sys.executable, "-c", SUBPROC], capture_output=True,
-                         text=True, timeout=600,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                         text=True, timeout=600, env=cpu_subproc_env())
     assert "MULTIDEV_OK" in res.stdout, res.stdout + res.stderr
 
 
@@ -126,6 +125,5 @@ SUBPROC_COMPRESS = textwrap.dedent("""
 def test_cross_pod_grad_compression_traces_bf16_psum():
     res = subprocess.run([sys.executable, "-c", SUBPROC_COMPRESS],
                          capture_output=True, text=True, timeout=600,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                         env=cpu_subproc_env())
     assert "COMPRESS_OK" in res.stdout, res.stdout + res.stderr
