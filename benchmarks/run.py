@@ -7,10 +7,10 @@ import sys
 
 
 def main() -> None:
-    from . import kernels, retrieval, roofline, table2, table3, table4
+    from . import coding, kernels, retrieval, roofline, table2, table3, table4
 
     print("name,us_per_call,derived")
-    for mod in (table2, table3, table4, kernels, roofline, retrieval):
+    for mod in (table2, table3, table4, kernels, roofline, retrieval, coding):
         try:
             rows = mod.run()
         except Exception as e:  # pragma: no cover

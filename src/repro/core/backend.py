@@ -1,0 +1,23 @@
+"""Kernel-backend selection, shared by every subsystem.
+
+Three interchangeable, bit-identical lowerings exist for the PPAC ops:
+'pallas' (the real TPU kernels; interpret mode off-TPU), 'ref' (jnp
+oracles) and 'mxu' (int8 dot-product lowering — the fast path on CPU).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def auto_backend() -> str:
+    """Native Pallas on TPU, the MXU lowering everywhere else."""
+    return "pallas" if jax.default_backend() == "tpu" else "mxu"
+
+
+def resolve_backend(backend: str) -> str:
+    return auto_backend() if backend == "auto" else backend
+
+
+def auto_interpret() -> bool:
+    """Pallas kernels run in interpret mode off-TPU."""
+    return jax.default_backend() != "tpu"

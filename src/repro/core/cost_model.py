@@ -16,7 +16,8 @@ Accounting rules (paper §IV-A):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+import math
+from typing import Dict, Optional
 
 from .ppac import PPACConfig, cycles_compute_cache_inner_product, cycles_multibit_mvp
 
@@ -51,6 +52,37 @@ TABLE_III: Dict[str, dict] = {
 TPU_PEAK_BF16_FLOPS = 197e12       # per chip
 TPU_HBM_BW = 819e9                 # bytes/s per chip
 TPU_ICI_BW = 50e9                  # bytes/s per link (one direction)
+
+
+def tiled_scan_merge_cycles(m_rows: int, n_bits: int,
+                            config: Optional[PPACConfig] = None,
+                            parallel_arrays: Optional[int] = None) -> int:
+    """Cycles for one MVP-like op against an [m_rows, n_bits] operand
+    virtualized onto tiles of the configured array geometry.
+
+    Every (row, col) tile runs one array cycle; with ``parallel_arrays``
+    physical arrays the tiles time-multiplex (ceil(tiles / arrays)); the
+    col-split partials then merge through a tree — an adder tree for the
+    integer modes, an XOR tree for GF(2) — of depth ceil(log2(col_tiles)).
+    Shared by CAMIndex scans and the gf2 subsystem.
+    """
+    cfg = config or PPACConfig()
+    rt = max(1, -(-m_rows // cfg.m))
+    ct = max(1, -(-n_bits // cfg.n))
+    arrays = parallel_arrays or (rt * ct)
+    scan = -(-(rt * ct) // arrays)
+    merge = int(math.ceil(math.log2(ct))) if ct > 1 else 0
+    return scan + merge
+
+
+def est_latency_us(total_cycles: int, config: PPACConfig,
+                   shards: int = 1) -> Optional[float]:
+    """Wall-clock estimate at the paper's post-layout clock for the
+    configured geometry, when Table II measured it; None otherwise."""
+    impl = TABLE_II.get((config.m, config.n))
+    if not impl:
+        return None
+    return total_cycles / shards / (impl["f_ghz"] * 1e9) * 1e6
 
 
 def ops_per_cycle(m: int, n: int, convention: str = "paper") -> int:

@@ -1,0 +1,31 @@
+"""GF(2) linear-algebra + coding subsystem on PPAC (paper §III-D at scale).
+
+ops     — batched affine maps, LFSR keystreams/scramblers, CRC-as-MVP,
+          and the tile-virtualized GF(2) cycle model
+ldpc    — systematic LDPC codes (random [P|L] + array codes), encode via
+          back-substitution, iterative bit-flipping decoder with
+          per-iteration PPAC cycle accounting
+sharded — codeword blocks row-sharded over a mesh via shard_map
+"""
+from .ldpc import (  # noqa: F401
+    BitFlipDecoder,
+    DecodeResult,
+    LDPCCode,
+    bsc_flip,
+    make_array_ldpc,
+    make_random_ldpc,
+    solve_unit_lower,
+)
+from .ops import (  # noqa: F401
+    affine_map,
+    crc,
+    crc_matrix,
+    crc_reference,
+    descramble,
+    gf2_cycles,
+    gf2_matvec,
+    lfsr_companion,
+    lfsr_keystream,
+    lfsr_observation_matrix,
+    scramble,
+)

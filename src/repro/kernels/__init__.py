@@ -4,6 +4,8 @@ binary_mvp    — packed 1-bit XNOR/AND popcount matmul (modes III-A/B/D/E)
 bitserial_mvp — fused multi-bitplane MVP (mode III-C, all Table-I formats)
 hamming_topk  — fused streaming Hamming top-k / CAM δ-match (mode III-A
                 associative retrieval at scale; never materializes [B, M])
+gf2_tiled     — tiled GF(2) matmul with XOR-parity accumulation across
+                lane tiles (mode III-D at n ≫ 256; operands stay packed)
 """
 from .binary_mvp.ops import (  # noqa: F401
     and_dot,
@@ -14,6 +16,7 @@ from .binary_mvp.ops import (  # noqa: F401
     pla_eval,
 )
 from .bitserial_mvp.ops import ppac_cycles, ppac_matmul  # noqa: F401
+from .gf2_tiled.ops import gf2_matmul_tiled  # noqa: F401
 from .hamming_topk.ops import (  # noqa: F401
     hamming_threshold_match,
     hamming_topk,

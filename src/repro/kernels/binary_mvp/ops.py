@@ -13,13 +13,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...core.backend import auto_interpret as _auto_interpret
 from ...core.formats import unpack_bits
 from .kernel import binary_matmul_packed
 from .ref import binary_matmul_packed_ref
-
-
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _raw_sum(x_packed, a_packed, op: str, backend: str, n: int):

@@ -1,0 +1,1 @@
+from .ops import gf2_matmul_tiled  # noqa: F401

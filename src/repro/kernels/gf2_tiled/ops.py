@@ -1,0 +1,45 @@
+"""Public jit'd wrapper for the tiled GF(2) matmul — backend dispatch.
+
+Mirrors ``binary_mvp.ops``: packed uint32 operands, the true bit width
+``n``, and a ``backend`` in
+
+  'pallas' — the tiled XOR-parity-accumulating kernel (kernel.py);
+             interpret mode off-TPU
+  'ref'    — packed-lane jnp oracle (ref.py)
+  'mxu'    — the LSB of binary_mvp's MXU and-dot (one shared lowering;
+             it unpacks to int8 bits — the beyond-paper path)
+
+'pallas' and 'ref' never unpack the operands to uint8 bit planes; all
+three produce bit-identical results.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.backend import auto_interpret as _auto_interpret
+from ..binary_mvp.ops import gf2_matmul as _gf2_matmul_mvp
+from .kernel import gf2_matmul_packed
+from .ref import gf2_matmul_packed_ref
+
+
+@functools.partial(jax.jit, static_argnames=("n", "backend"))
+def gf2_matmul_tiled(x_packed, a_packed, *, n: int, backend: str = "pallas"):
+    """GF(2) MVP y = x Aᵀ over packed operands: [B, W] × [M, W] -> [B, M] uint8.
+
+    ``n`` is the true bit width (lanes beyond it must be zero-padded, as
+    :func:`repro.core.formats.pack_bits` guarantees).
+    """
+    if backend == "pallas":
+        out = gf2_matmul_packed(x_packed, a_packed,
+                                interpret=_auto_interpret())
+    elif backend == "ref":
+        out = gf2_matmul_packed_ref(x_packed, a_packed)
+    elif backend == "mxu":
+        # one shared MXU lowering: LSB of binary_mvp's and-dot
+        out = _gf2_matmul_mvp(x_packed, a_packed, n=n, backend="mxu")
+    else:
+        raise ValueError(f"unknown backend {backend}")
+    return out.astype(jnp.uint8)

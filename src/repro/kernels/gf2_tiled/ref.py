@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the tiled GF(2) matmul kernel.
+
+Like the kernel, it works on packed uint32 lanes directly (no unpacking to
+uint8 bit planes): the GF(2) inner product is the parity of the AND
+popcount, and parity distributes over the lane sum.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def gf2_matmul_packed_ref(x_packed, a_packed):
+    """y[b,m] = parity(sum_w popcount(x[b,w] & a[m,w])) — reference, O(B*M*W)."""
+    x = jnp.asarray(x_packed, jnp.uint32)[:, None, :]   # [B,1,W]
+    a = jnp.asarray(a_packed, jnp.uint32)[None, :, :]   # [1,M,W]
+    pc = lax.population_count(jnp.bitwise_and(x, a)).astype(jnp.int32)
+    return jnp.sum(pc, axis=-1) & 1

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ...core.backend import auto_interpret as _auto_interpret
 from ...core.formats import unpack_bits
 from .kernel import (
     _round_up,
@@ -35,10 +36,6 @@ from .ref import (
 
 _INIT_SCORE = -(2**30)
 _INIT_IDX = 2**30
-
-
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("n", "k", "chunk_m"))

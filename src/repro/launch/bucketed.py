@@ -1,0 +1,93 @@
+"""Shared continuous-batching scaffolding for the lookup/decode servers.
+
+Requests queue up; ``step`` drains them in fixed batch *buckets* (an
+ascending tuple, typically powers of two) so the number of compiled
+shapes stays bounded.  Drain policy: while the queue fills a whole
+bucket (> 1), drain the largest such bucket with no padding; only the
+final partial remainder — necessarily smaller than the smallest
+multi-row bucket — is padded (by repeating its tail row) into the
+smallest bucket that holds it.  This bounds padding waste per drain
+sequence to less than one small bucket, instead of up to 4× when a
+just-over-a-boundary queue is rounded all the way up.
+
+Subclasses provide the request validation, the row extraction, the
+batched compute, and the per-request retirement.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+class BucketedBatchServer:
+    """Queue -> bucketed batches -> per-request retirement."""
+
+    def __init__(self, *, buckets=(1, 4, 16, 64)):
+        assert tuple(buckets) == tuple(sorted(buckets)) and buckets
+        self.buckets = tuple(buckets)
+        self.queue: List = []
+        self.batches = 0
+        self.bucket_counts: Dict[int, int] = {b: 0 for b in self.buckets}
+
+    # -- subclass hooks ------------------------------------------------------
+
+    def _validate(self, req) -> None:
+        raise NotImplementedError
+
+    def _row(self, req) -> np.ndarray:
+        """The request's input row (stacked into the batch array)."""
+        raise NotImplementedError
+
+    def _run(self, rows: np.ndarray):
+        """Batched compute over [bucket, ...] rows."""
+        raise NotImplementedError
+
+    def _retire(self, req, result, i: int) -> None:
+        """Fill request ``req`` from row ``i`` of the batch ``result``."""
+        raise NotImplementedError
+
+    # -- scheduling ----------------------------------------------------------
+
+    def submit(self, req):
+        self._validate(req)
+        self.queue.append(req)
+
+    def _bucket(self, count: int) -> int:
+        for b in self.buckets:
+            if count <= b:
+                return b
+        return self.buckets[-1]
+
+    def _drain_size(self):
+        """(take, bucket): whole buckets first, pad only the remainder."""
+        cap = min(len(self.queue), self.buckets[-1])
+        full = [b for b in self.buckets if 1 < b <= cap]
+        if full:
+            take = max(full)
+            return take, take
+        return cap, self._bucket(cap)
+
+    def step(self) -> List:
+        """Drain one bucket; returns retired requests."""
+        if not self.queue:
+            return []
+        take, bucket = self._drain_size()
+        batch, self.queue = self.queue[:take], self.queue[take:]
+        rows = np.stack([self._row(r) for r in batch])
+        if bucket > take:  # pad by repeating the tail row
+            rows = np.concatenate(
+                [rows, np.repeat(rows[-1:], bucket - take, axis=0)])
+        result = self._run(rows)
+        self.batches += 1
+        self.bucket_counts[bucket] += 1
+        for i, req in enumerate(batch):
+            self._retire(req, result, i)
+            req.done = True
+        return batch
+
+    def run(self) -> List:
+        done = []
+        while self.queue:
+            done.extend(self.step())
+        return done

@@ -2,11 +2,11 @@
 
 The retrieval twin of launch/serve.py's continuous-batching loop: lookup
 requests (one binary code each, per-request k) arrive in a queue; the
-server drains them in fixed query-batch *buckets* (powers of two, so the
-number of compiled search shapes stays bounded), pads the tail batch by
-repeating its last query, runs one fused ``CAMIndex.search`` per bucket,
-then retires every request with its slice of the batch result. Requests
-keep arriving while batches run — submit/run can interleave.
+shared ``BucketedBatchServer`` scheduler drains them in fixed query-batch
+buckets (bounded compiled shapes, tail padding only on the final partial
+bucket), runs one fused ``CAMIndex.search`` per bucket, then retires
+every request with its slice of the batch result. Requests keep arriving
+while batches run — submit/run can interleave.
 
 CLI (self-contained demo: plants queries that must retrieve their source
 row, then reports QPS and emulated PPAC cycles):
@@ -19,12 +19,13 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Optional
 
 import numpy as np
 
 from ..core.ppac import PPACConfig
 from ..retrieval.index import CAMIndex
+from .bucketed import BucketedBatchServer
 
 
 @dataclasses.dataclass
@@ -37,58 +38,31 @@ class LookupRequest:
     done: bool = False
 
 
-class RetrievalServer:
+class RetrievalServer(BucketedBatchServer):
     """Bucketed batch scheduler over one CAMIndex."""
 
     def __init__(self, index: CAMIndex, *, max_k: int = 16,
                  buckets=(1, 4, 16, 64), mesh=None, shard_axis: str = "data"):
-        assert tuple(buckets) == tuple(sorted(buckets))
+        super().__init__(buckets=buckets)
         self.index = index
         self.max_k = max_k
-        self.buckets = tuple(buckets)
         self.mesh = mesh
         self.shard_axis = shard_axis
-        self.queue: List[LookupRequest] = []
-        self.batches = 0
-        self.bucket_counts: Dict[int, int] = {b: 0 for b in self.buckets}
 
-    def submit(self, req: LookupRequest):
+    def _validate(self, req: LookupRequest):
         assert 1 <= req.k <= self.max_k, (req.k, self.max_k)
         assert req.code.shape == (self.index.n_bits,), req.code.shape
-        self.queue.append(req)
 
-    def _bucket(self, count: int) -> int:
-        for b in self.buckets:
-            if count <= b:
-                return b
-        return self.buckets[-1]
+    def _row(self, req: LookupRequest) -> np.ndarray:
+        return req.code
 
-    def step(self) -> List[LookupRequest]:
-        """Drain up to one max-size bucket; returns retired requests."""
-        if not self.queue:
-            return []
-        take = min(len(self.queue), self.buckets[-1])
-        batch, self.queue = self.queue[:take], self.queue[take:]
-        bucket = self._bucket(take)
-        codes = np.stack([r.code for r in batch])
-        if bucket > take:  # pad by repeating the tail query
-            codes = np.concatenate(
-                [codes, np.repeat(codes[-1:], bucket - take, axis=0)])
-        res = self.index.search(codes, k=self.max_k, mesh=self.mesh,
-                                shard_axis=self.shard_axis)
-        self.batches += 1
-        self.bucket_counts[bucket] += 1
-        for i, req in enumerate(batch):
-            req.scores = res.scores[i, : req.k].copy()
-            req.ids = res.ids[i, : req.k].copy()
-            req.done = True
-        return batch
+    def _run(self, codes: np.ndarray):
+        return self.index.search(codes, k=self.max_k, mesh=self.mesh,
+                                 shard_axis=self.shard_axis)
 
-    def run(self) -> List[LookupRequest]:
-        done = []
-        while self.queue:
-            done.extend(self.step())
-        return done
+    def _retire(self, req: LookupRequest, res, i: int):
+        req.scores = res.scores[i, : req.k].copy()
+        req.ids = res.ids[i, : req.k].copy()
 
 
 def main():

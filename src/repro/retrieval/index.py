@@ -38,17 +38,12 @@ from typing import Dict, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.cost_model import TABLE_II
+from ..core.backend import auto_backend
+from ..core.cost_model import est_latency_us, tiled_scan_merge_cycles
 from ..core.formats import pack_bits, packed_width
 from ..core.ppac import CycleCounter, PPACConfig
 from ..kernels.hamming_topk.ops import hamming_threshold_match, hamming_topk
 from .sharded import sharded_hamming_topk
-
-
-def _auto_backend() -> str:
-    import jax
-
-    return "pallas" if jax.default_backend() == "tpu" else "mxu"
 
 
 @dataclasses.dataclass
@@ -69,7 +64,7 @@ class CAMIndex:
         assert n_bits > 0
         self.n_bits = n_bits
         self.config = config or PPACConfig()
-        self.backend = _auto_backend() if backend == "auto" else backend
+        self.backend = auto_backend() if backend == "auto" else backend
         self.parallel_arrays = parallel_arrays  # None -> fully parallel
         self.w = packed_width(n_bits)
         cap = self._tile_round(max(min_capacity, self.config.m))
@@ -181,12 +176,11 @@ class CAMIndex:
     # -- cycle model ---------------------------------------------------------
 
     def cycles_per_query(self, k: int = 0, *, threshold_only: bool = False) -> int:
-        rt, ct = self.row_tiles, self.col_tiles
-        arrays = self.parallel_arrays or (rt * ct)
-        scan = -(-(rt * ct) // arrays)
-        merge = int(math.ceil(math.log2(ct))) if ct > 1 else 0
+        scan_merge = tiled_scan_merge_cycles(
+            max(self._high, 1), self.n_bits, self.config,
+            self.parallel_arrays)
         select = 0 if threshold_only else k * int(math.ceil(math.log2(self.n_bits + 1)))
-        return scan + merge + select
+        return scan_merge + select
 
     def _stats(self, nq: int, k: int, *, threshold_only: bool = False,
                shards: int = 1) -> Dict[str, float]:
@@ -196,10 +190,9 @@ class CAMIndex:
         stats = dict(queries=nq, cycles_per_query=cpq, total_cycles=total,
                      row_tiles=self.row_tiles, col_tiles=self.col_tiles,
                      shards=shards, backend=self.backend)
-        impl = TABLE_II.get((self.config.m, self.config.n))
-        if impl:
-            f_hz = impl["f_ghz"] * 1e9
-            stats["est_latency_us"] = total / shards / f_hz * 1e6
+        lat = est_latency_us(total, self.config, shards)
+        if lat is not None:
+            stats["est_latency_us"] = lat
         return stats
 
     # -- queries -------------------------------------------------------------

@@ -1,7 +1,10 @@
 import os
+import pathlib
 
 import numpy as np
 import pytest
+
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
 
 
 @pytest.fixture(scope="session")
@@ -12,24 +15,64 @@ def rng():
 def cpu_subproc_env():
     """Env for CPU-only jax subprocesses. Forces the CPU platform: without
     it a stray libtpu install spends minutes probing for TPU metadata
-    before falling back."""
-    return {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+    before falling back.  PYTHONPATH is absolute so the suite can be
+    invoked from any working directory."""
+    return {"PYTHONPATH": _SRC, "PATH": "/usr/bin:/bin", "HOME": "/root",
             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
 
 
-# hypothesis is optional: property-based tests skip when it is absent.
+# hypothesis is optional: when absent, @given tests fall back to a fixed
+# number of deterministic pseudo-random draws from the declared strategies
+# instead of skipping (CI installs real hypothesis and gets shrinking,
+# example databases, and wider coverage; see REQUIRE_HYPOTHESIS below).
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
 except ImportError:
-    def given(*_a, **_k):
-        return pytest.mark.skip(reason="hypothesis not installed")
+    import functools
+    import inspect
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+    FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _St:
+        """Samplers for the strategy subset this repo uses."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    st = _St()
+
+    def given(*strategies):
+        def deco(f):
+            @functools.wraps(f)
+            def runner(*args, **kwargs):
+                # deterministic per-test seed so failures reproduce
+                rng = np.random.default_rng(zlib.crc32(f.__name__.encode()))
+                for _ in range(FALLBACK_EXAMPLES):
+                    f(*args, *(s.draw(rng) for s in strategies), **kwargs)
+            # strategy params are filled here, not by pytest fixtures
+            runner.__signature__ = inspect.Signature()
+            return runner
+        return deco
 
     def settings(*_a, **_k):
         return lambda f: f
-
-    class _NoStrategies:
-        def __getattr__(self, _name):
-            return lambda *_a, **_k: None
-
-    st = _NoStrategies()

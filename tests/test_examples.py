@@ -1,0 +1,42 @@
+"""Smoke-runs every examples/*.py as a subprocess (JAX_PLATFORMS=cpu) so
+example rewrites cannot silently rot.  Each example is a self-asserting
+demo that exits nonzero on regression.
+
+The module is marked ``slow`` so it is exemptible locally with
+``-m "not slow"``; the CI workflow runs the full suite, examples
+included."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+from conftest import cpu_subproc_env
+
+pytestmark = pytest.mark.slow
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+EXAMPLES = sorted((REPO / "examples").glob("*.py"))
+
+# flags keeping the heavier demos CI-sized; {tmp} is a per-test scratch dir
+EXTRA_ARGS = {
+    "train_lm.py": ["--steps", "30", "--ckpt-dir", "{tmp}/ckpt"],
+}
+
+
+def test_every_example_is_covered():
+    """New examples must show up here automatically (glob, not a list)."""
+    assert len(EXAMPLES) >= 6
+    assert {p.name for p in EXAMPLES} >= {
+        "quickstart.py", "gf2_crypto.py", "lsh_lookup.py", "train_lm.py"}
+
+
+@pytest.mark.parametrize("path", EXAMPLES, ids=lambda p: p.name)
+def test_example_smoke(path, tmp_path):
+    args = [a.format(tmp=tmp_path) for a in EXTRA_ARGS.get(path.name, [])]
+    res = subprocess.run(
+        [sys.executable, str(path), *args],
+        capture_output=True, text=True, timeout=600, cwd=str(REPO),
+        env=cpu_subproc_env())
+    assert res.returncode == 0, \
+        f"{path.name} failed\n--- stdout ---\n{res.stdout[-2000:]}" \
+        f"\n--- stderr ---\n{res.stderr[-2000:]}"

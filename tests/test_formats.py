@@ -1,7 +1,9 @@
 """Number formats + bitplane codecs (paper Table I)."""
+import os
+
 import numpy as np
 import pytest
-from conftest import given, settings, st  # hypothesis or skip-shim
+from conftest import HAVE_HYPOTHESIS, given, settings, st  # hypothesis or fallback
 
 from repro.core import formats as F
 
@@ -58,3 +60,83 @@ def test_popcount_matches_numpy(n, seed):
     bits = rng.integers(0, 2, size=(n,))
     packed = F.pack_bits(bits)
     assert int(np.sum(np.asarray(F.popcount(packed)))) == int(bits.sum())
+
+
+# -- property tests: round trips over every Table I format and odd shapes -----
+
+@given(st.integers(0, 8), st.integers(0, 100), st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_pack_unpack_roundtrip_property(rows, n, seed):
+    """pack ∘ unpack is the identity for any (rows, n), n a multiple of 32
+    or not, empty shapes included; padding lanes are always zero."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(rows, n)).astype(np.uint8)
+    packed = F.pack_bits(bits)
+    assert packed.shape == (rows, F.packed_width(n))
+    assert np.array_equal(np.asarray(F.unpack_bits(packed, n)), bits)
+    # tail padding must be zero (kernels rely on it)
+    if n % 32 and rows:
+        tail = np.asarray(packed)[:, -1] >> (n % 32)
+        assert not tail.any()
+
+
+@given(st.integers(1, 8), st.integers(0, 4), st.integers(0, 40),
+       st.sampled_from(["uint", "int", "oddint"]),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_bitplane_roundtrip_property(bits, rows, cols, fmt, seed):
+    """to_bitplanes ∘ from_bitplanes is the identity on any multi-dim
+    (rows, cols) array of representable values, for every Table I format."""
+    rng = np.random.default_rng(seed)
+    lo, hi = F.value_range(fmt, bits)
+    step = 2 if fmt == "oddint" else 1
+    vals = rng.choice(np.arange(lo, hi + 1, step), size=(rows, cols))
+    planes = F.to_bitplanes(vals, bits, fmt)
+    assert planes.shape == (bits, rows, cols)
+    assert np.array_equal(np.asarray(F.from_bitplanes(planes, fmt)), vals)
+
+
+@given(st.integers(1, 6), st.integers(0, 3), st.integers(0, 70),
+       st.sampled_from(["uint", "int", "oddint"]),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_pack_planes_roundtrip_property(bits, rows, n, fmt, seed):
+    """The full codec — integers -> bitplanes -> packed lanes -> unpacked
+    planes -> integers — round-trips for every format, including n not a
+    multiple of 32 and empty/singleton shapes."""
+    rng = np.random.default_rng(seed)
+    lo, hi = F.value_range(fmt, bits)
+    step = 2 if fmt == "oddint" else 1
+    vals = rng.choice(np.arange(lo, hi + 1, step), size=(rows, n))
+    packed = F.pack_planes(vals, bits, F.fmt(fmt))
+    assert packed.shape == (bits, rows, F.packed_width(n))
+    planes = F.unpack_bits(packed, n)
+    assert np.array_equal(np.asarray(F.from_bitplanes(planes, fmt)), vals)
+
+
+@pytest.mark.parametrize("fmt", ["uint", "int", "oddint"])
+@pytest.mark.parametrize("shape", [(0,), (0, 5), (3, 0), (1, 1)])
+def test_bitplane_roundtrip_degenerate_shapes(fmt, shape):
+    lo, hi = F.value_range(fmt, 3)
+    vals = np.full(shape, hi, np.int32)
+    planes = F.to_bitplanes(vals, 3, fmt)
+    assert planes.shape == (3,) + shape
+    back = np.asarray(F.from_bitplanes(planes, fmt))
+    assert back.shape == shape and np.array_equal(back, vals)
+
+
+@pytest.mark.parametrize("rows,n", [(0, 7), (0, 32), (3, 0), (1, 1)])
+def test_pack_unpack_degenerate_shapes(rows, n):
+    bits = np.ones((rows, n), np.uint8)
+    packed = F.pack_bits(bits)
+    assert packed.shape == (rows, F.packed_width(n))
+    assert np.array_equal(np.asarray(F.unpack_bits(packed, n)), bits)
+
+
+def test_hypothesis_installed_when_required():
+    """CI sets REQUIRE_HYPOTHESIS=1 so the property tests above run under
+    real hypothesis there (the local fallback only samples the strategies)."""
+    if not os.environ.get("REQUIRE_HYPOTHESIS"):
+        pytest.skip("hypothesis only mandatory in CI (REQUIRE_HYPOTHESIS=1)")
+    assert HAVE_HYPOTHESIS, \
+        "REQUIRE_HYPOTHESIS is set but the hypothesis package is missing"

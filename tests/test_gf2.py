@@ -1,0 +1,407 @@
+"""GF(2) coding subsystem: tiled kernel (all backends bit-exact, n >> 256,
+parity accumulation across lane tiles), affine/LFSR/CRC ops vs bit-serial
+references, LDPC encode/decode (guaranteed-t exhaustive recovery, backend
+and shard bit-identity, cycle accounting vs the cost model), and the
+batched decode server."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from conftest import cpu_subproc_env
+
+from repro.core import formats as F
+from repro.core.ppac import (
+    PPACArray,
+    PPACConfig,
+    cycles_compute_cache_inner_product,
+)
+from repro.gf2 import (
+    BitFlipDecoder,
+    affine_map,
+    bsc_flip,
+    crc,
+    crc_matrix,
+    crc_reference,
+    descramble,
+    gf2_cycles,
+    gf2_matvec,
+    lfsr_keystream,
+    lfsr_observation_matrix,
+    make_array_ldpc,
+    make_random_ldpc,
+    scramble,
+    solve_unit_lower,
+)
+from repro.kernels.gf2_tiled.kernel import gf2_matmul_packed
+from repro.kernels.gf2_tiled.ops import gf2_matmul_tiled
+from repro.launch.coding import CodingServer, DecodeRequest
+
+
+def _bits(rng, rows, n):
+    return rng.integers(0, 2, (rows, n)).astype(np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# kernels/gf2_tiled
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["pallas", "mxu"])
+@pytest.mark.parametrize("b,m,n", [(1, 1, 1), (3, 17, 33), (5, 64, 300),
+                                   (2, 9, 1024), (4, 40, 700)])
+def test_gf2_tiled_matches_ref_exactly(rng, backend, b, m, n):
+    x, a = _bits(rng, b, n), _bits(rng, m, n)
+    want = (x @ a.T) % 2
+    xp, ap = F.pack_bits(x), F.pack_bits(a)
+    ref = np.asarray(gf2_matmul_tiled(xp, ap, n=n, backend="ref"))
+    got = np.asarray(gf2_matmul_tiled(xp, ap, n=n, backend=backend))
+    assert np.array_equal(ref, want)
+    assert np.array_equal(got, want)
+
+
+def test_gf2_tiled_parity_accumulates_across_lane_tiles(rng):
+    """Tiny block_w forces many grid steps over the lane dim — the running
+    XOR across tiles must equal the one-shot parity."""
+    b, m, n = 3, 24, 2048  # 64 lanes
+    x, a = _bits(rng, b, n), _bits(rng, m, n)
+    want = (x @ a.T) % 2
+    got = np.asarray(gf2_matmul_packed(
+        F.pack_bits(x), F.pack_bits(a),
+        block_w=1, block_m=8, block_b=8, interpret=True))
+    assert np.array_equal(got, want)
+
+
+def test_gf2_tiled_agrees_with_ppac_array(rng):
+    """The tiled kernel must agree with the cycle-exact PPACArray emulator
+    (paper §III-D) row-for-row at array geometry."""
+    m, n = 32, 48
+    a = _bits(rng, m, n)
+    arr = PPACArray(PPACConfig(m=m, n=n))
+    arr.write(a)
+    x = _bits(rng, 1, n)[0]
+    want = np.asarray(arr.gf2_mvp(x))
+    for be in ("ref", "pallas", "mxu"):
+        got = np.asarray(gf2_matmul_tiled(
+            F.pack_bits(x[None, :]), F.pack_bits(a), n=n, backend=be))[0]
+        assert np.array_equal(got, want), be
+
+
+def test_gf2_cycles_geometry():
+    cfg = PPACConfig(m=256, n=256)
+    assert gf2_cycles(1, 256, 256, cfg) == 1           # one tile, no merge
+    # fully parallel tiles: scan is 1 cycle, col split adds the XOR tree
+    assert gf2_cycles(1, 256, 1024, cfg) == 1 + 2      # 4 col tiles
+    assert gf2_cycles(1, 1024, 256, cfg) == 1          # row split: no merge
+    assert gf2_cycles(2, 512, 512, cfg) == 2 * (1 + 1)
+    # time-multiplexed onto fewer physical arrays: 16 tiles on 4 arrays
+    assert gf2_cycles(1, 1024, 1024, cfg, parallel_arrays=4) == 4 + 2
+
+
+# ---------------------------------------------------------------------------
+# gf2.ops: affine / LFSR / CRC
+# ---------------------------------------------------------------------------
+
+def test_affine_map_aes_sbox(rng):
+    a = np.zeros((8, 8), np.uint8)
+    for i in range(8):
+        for j in (0, 4, 5, 6, 7):
+            a[i, (i + j) % 8] = 1
+    c = np.array([1, 1, 0, 0, 0, 1, 1, 0], np.uint8)
+    xs = _bits(rng, 16, 8)
+    y = np.asarray(affine_map(xs, a, c, backend="ref"))
+    assert np.array_equal(y, (xs @ a.T % 2) ^ c[None, :])
+    # without the constant it is the plain matvec
+    y0 = np.asarray(affine_map(xs, a, backend="ref"))
+    assert np.array_equal(y0, xs @ a.T % 2)
+
+
+def _serial_lfsr(state, taps, length):
+    s = list(state)
+    out = []
+    for _ in range(length):
+        out.append(int(s[-1]))
+        fb = 0
+        for t in taps:
+            fb ^= int(s[t - 1])
+        s = [fb] + s[:-1]
+    return out
+
+
+@pytest.mark.parametrize("backend", ["ref", "mxu", "pallas"])
+def test_lfsr_keystream_matches_serial_reference(rng, backend):
+    taps, deg = (7, 6), 7
+    states = _bits(rng, 3, deg)
+    ks = np.asarray(lfsr_keystream(states, taps, 200, backend=backend))
+    for b in range(3):
+        assert list(ks[b]) == _serial_lfsr(states[b], taps, 200)
+
+
+def test_lfsr_maximal_length():
+    """x^7+x^6+1 is primitive: period 2^7-1 for any nonzero seed."""
+    seed = np.zeros((1, 7), np.uint8)
+    seed[0, 0] = 1
+    ks = np.asarray(lfsr_keystream(seed, (7, 6), 254, backend="ref"))[0]
+    assert np.array_equal(ks[:127], ks[127:])
+    assert not np.array_equal(ks[:63], ks[63:126])  # no shorter period
+    obs = lfsr_observation_matrix((7, 6), 7, 10)
+    assert obs.shape == (10, 7) and obs[0, 6] == 1
+
+
+def test_scrambler_roundtrip(rng):
+    taps = (5, 3)
+    seeds = _bits(rng, 4, 5)
+    frames = _bits(rng, 4, 100)
+    tx = np.asarray(scramble(frames, seeds, taps, backend="ref"))
+    assert not np.array_equal(tx, frames)
+    assert np.array_equal(
+        np.asarray(descramble(tx, seeds, taps, backend="ref")), frames)
+
+
+def test_crc8_matches_bitwise_division(rng):
+    poly, deg = 0x07, 8  # CRC-8: x^8 + x^2 + x + 1
+    msgs = _bits(rng, 6, 40)
+    got = np.asarray(crc(msgs, poly, deg, backend="ref"))
+    for i in range(6):
+        want = crc_reference(msgs[i], poly, deg)
+        assert sum(int(b) << j for j, b in enumerate(got[i])) == want
+    # linearity: crc(a ^ b) = crc(a) ^ crc(b)
+    r = crc_matrix(poly, deg, 40)
+    ab = (msgs[0] ^ msgs[1])[None, :]
+    assert np.array_equal(
+        np.asarray(crc(ab, poly, deg, backend="ref"))[0], got[0] ^ got[1])
+    assert r.shape == (deg, 40)
+
+
+# ---------------------------------------------------------------------------
+# gf2.ldpc: codes + encode
+# ---------------------------------------------------------------------------
+
+def test_solve_unit_lower_random(rng):
+    p = 20
+    l_mat = (np.tril(rng.random((p, p)) < 0.4, -1)
+             | np.eye(p, dtype=bool)).astype(np.uint8)
+    rhs = _bits(rng, p, 7)
+    x = solve_unit_lower(l_mat, rhs)
+    assert np.array_equal((l_mat @ x) % 2, rhs)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas", "mxu"])
+def test_random_ldpc_encode_zero_syndrome(rng, backend):
+    code = make_random_ldpc(96, 48, rng=rng)
+    msgs = _bits(rng, 8, 48)
+    cw = code.encode(msgs, backend=backend)
+    assert cw.shape == (8, 96)
+    assert np.array_equal(cw[:, :48], msgs)          # systematic
+    assert not code.syndrome(cw, backend=backend).any()
+    bad = cw.copy()
+    bad[:, 3] ^= 1
+    assert code.syndrome(bad, backend=backend).any(axis=1).all()
+
+
+def test_encode_backends_bit_identical(rng):
+    code = make_random_ldpc(80, 40, rng=rng)
+    msgs = _bits(rng, 5, 40)
+    outs = [code.encode(msgs, backend=be) for be in ("ref", "pallas", "mxu")]
+    assert np.array_equal(outs[0], outs[1])
+    assert np.array_equal(outs[0], outs[2])
+
+
+def test_array_ldpc_structure():
+    code = make_array_ldpc(6, 5)
+    assert (code.n, code.k, code.n_chk) == (30, 20, 11)
+    assert code.col_weight.min() == code.col_weight.max() == 2
+    assert code.max_overlap == 1
+    assert code.guaranteed_t == 1
+    # encode parity part is [P | L] with unit-lower-triangular L
+    l_part = code.h_enc[:, code.k:]
+    assert np.all(np.diag(l_part) == 1)
+    assert not np.triu(l_part, 1).any()
+
+
+def test_array_ldpc_encode_consistent_with_grid_parity(rng):
+    r, c = 5, 7
+    code = make_array_ldpc(r, c)
+    cw = code.encode(_bits(rng, 6, code.k), backend="ref")
+    assert not code.syndrome(cw, backend="ref").any()
+
+
+# ---------------------------------------------------------------------------
+# gf2.ldpc: bit-flipping decoder
+# ---------------------------------------------------------------------------
+
+def test_decoder_recovers_all_guaranteed_error_patterns(rng):
+    """Exhaustive: every single-bit error pattern (t=1 for the array code)
+    on several codewords must decode back exactly, in one iteration."""
+    code = make_array_ldpc(4, 4)  # n=16: all 16 patterns enumerable
+    t = code.guaranteed_t
+    assert t == 1
+    dec = BitFlipDecoder(code, backend="mxu", max_iters=4)
+    msgs = _bits(rng, 3, code.k)
+    cw = code.encode(msgs, backend="mxu")
+    for w in range(3):
+        noisy = np.repeat(cw[w:w + 1], code.n, axis=0)
+        noisy[np.arange(code.n), np.arange(code.n)] ^= 1
+        res = dec.decode(noisy)
+        assert res.ok.all()
+        assert (res.iters == 1).all()
+        assert np.array_equal(res.codewords,
+                              np.repeat(cw[w:w + 1], code.n, axis=0))
+        assert np.array_equal(res.msgs, np.repeat(msgs[w:w + 1], code.n, 0))
+
+
+def test_decoder_clean_words_take_zero_iterations(rng):
+    code = make_array_ldpc(8, 8)
+    dec = BitFlipDecoder(code, backend="mxu", max_iters=6)
+    cw = code.encode(_bits(rng, 5, code.k), backend="mxu")
+    res = dec.decode(cw)
+    assert res.ok.all() and (res.iters == 0).all()
+    assert np.array_equal(res.codewords, cw)
+    # cycle accounting: zero iterations -> only the pipeline latency
+    assert res.stats["iterations"] == 0
+    assert res.stats["total_cycles"] == dec.counter.pipeline_latency
+
+
+def test_decoder_backends_bit_identical(rng):
+    """ref/pallas/mxu must agree on decoded bits, ok flags and per-word
+    iteration counts — including on words that fail to converge."""
+    code = make_random_ldpc(64, 32, rng=rng)
+    words = _bits(rng, 9, 64)  # garbage: mix of decodable and not
+    outs = {}
+    for be in ("ref", "pallas", "mxu"):
+        dec = BitFlipDecoder(code, backend=be, max_iters=6)
+        r = dec.decode(words)
+        outs[be] = (r.codewords, r.ok, r.iters)
+    for be in ("pallas", "mxu"):
+        for a, b in zip(outs["ref"], outs[be]):
+            assert np.array_equal(a, b), be
+
+
+def test_decoder_reports_failures(rng):
+    """Words whose syndrome never clears come back ok=False with
+    iters == max_iters; mixed batches keep per-word accounting."""
+    code = make_array_ldpc(6, 6)
+    dec = BitFlipDecoder(code, backend="mxu", max_iters=3)
+    cw = code.encode(_bits(rng, 2, code.k), backend="mxu")
+    two_err = bsc_flip(cw[1:], 3, rng)  # beyond t: may or may not converge
+    # an adversarial stuck word: two errors in one grid row vote 1 each,
+    # never passing the 2v > gamma=2 majority -> provably stuck
+    stuck = cw[0].copy()
+    stuck[0] ^= 1
+    stuck[1] ^= 1
+    batch = np.concatenate([cw[:1], stuck[None, :], two_err])
+    res = dec.decode(batch)
+    assert res.ok[0] and res.iters[0] == 0
+    assert not res.ok[1] and res.iters[1] == dec.max_iters
+    assert res.stats["iterations"] == dec.max_iters
+
+
+def test_decode_cycle_accounting_against_cost_model(rng):
+    """stats must be exactly the cost-model formulas: tile-virtualized
+    PPAC cycles and the §IV-B compute-cache baseline."""
+    code = make_array_ldpc(16, 16)  # n=256, n_chk=32
+    cfg = PPACConfig(m=256, n=256)
+    dec = BitFlipDecoder(code, config=cfg, backend="mxu", max_iters=5)
+    cpwi = dec.cycles_per_word_iteration()
+    assert cpwi == (gf2_cycles(1, code.n_chk, code.n, cfg)
+                    + gf2_cycles(1, code.n, code.n_chk, cfg))
+    cc = dec.compute_cache_cycles_per_word_iteration()
+    assert cc == (cycles_compute_cache_inner_product(1, code.n)
+                  + cycles_compute_cache_inner_product(1, code.n_chk))
+    assert cc > cpwi  # the paper's §IV-B speedup claim, 1-bit case
+
+    cw = code.encode(_bits(rng, 4, code.k), backend="mxu")
+    noisy = bsc_flip(cw, 1, rng)
+    c0 = dec.counter.cycles
+    res = dec.decode(noisy)
+    iters = int(res.iters.max())
+    assert res.stats["total_cycles"] == 4 * iters * cpwi + \
+        dec.counter.pipeline_latency
+    assert res.stats["compute_cache_cycles"] == 4 * iters * cc
+    assert dec.counter.cycles - c0 == res.stats["total_cycles"]
+    assert res.stats["speedup_vs_compute_cache"] > 1
+
+
+def test_gf2_matvec_counts_cycles(rng):
+    from repro.core.ppac import CycleCounter
+
+    counter = CycleCounter()
+    cfg = PPACConfig(m=64, n=64)
+    x, a = _bits(rng, 3, 200), _bits(rng, 100, 200)
+    gf2_matvec(x, a, backend="ref", counter=counter, config=cfg)
+    assert counter.cycles == gf2_cycles(3, 100, 200, cfg) + \
+        counter.pipeline_latency
+
+
+SUBPROC_SHARDED = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np, jax
+    from repro.gf2 import BitFlipDecoder, bsc_flip, make_array_ldpc
+
+    rng = np.random.default_rng(3)
+    code = make_array_ldpc(8, 8)
+    cw = code.encode(rng.integers(0, 2, (7, code.k)), backend="mxu")
+    noisy = bsc_flip(cw, 1, rng)
+    single = BitFlipDecoder(code, backend="mxu", max_iters=5).decode(noisy)
+    assert single.ok.all()
+    mesh = jax.make_mesh((2,), ("data",))
+    for be in ("mxu", "ref", "pallas"):
+        dec = BitFlipDecoder(code, backend=be, max_iters=5)
+        sh = dec.decode(noisy, mesh=mesh)  # B=7 pads to 8, slices back
+        assert np.array_equal(single.codewords, sh.codewords), be
+        assert np.array_equal(single.ok, sh.ok), be
+        assert np.array_equal(single.iters, sh.iters), be
+        assert sh.stats["shards"] == 2
+    print("SHARDED_OK")
+""")
+
+
+def test_sharded_decode_matches_single_device():
+    """2 simulated devices: codeword blocks row-sharded via shard_map must
+    decode bit-identically to the single-device path, for every backend."""
+    res = subprocess.run([sys.executable, "-c", SUBPROC_SHARDED],
+                         capture_output=True, text=True, timeout=600,
+                         env=cpu_subproc_env())
+    assert "SHARDED_OK" in res.stdout, res.stdout + res.stderr
+
+
+# ---------------------------------------------------------------------------
+# launch/coding.py server
+# ---------------------------------------------------------------------------
+
+def test_coding_server_bucketing_and_recovery(rng):
+    code = make_array_ldpc(8, 8)
+    dec = BitFlipDecoder(code, backend="mxu", max_iters=4)
+    server = CodingServer(dec, buckets=(1, 4, 16))
+    msgs = _bits(rng, 23, code.k)
+    cw = code.encode(msgs, backend="mxu")
+    noisy = bsc_flip(cw, 1, rng)
+    for i in range(23):
+        server.submit(DecodeRequest(i, noisy[i]))
+    done = server.run()
+    assert len(done) == 23 and all(r.done for r in done)
+    for r in done:
+        assert r.ok and r.iters <= 1
+        assert np.array_equal(r.msg, msgs[r.rid])
+        assert np.array_equal(r.codeword, cw[r.rid])
+    # 23 requests: whole buckets 16 and 4 drain unpadded, the remaining
+    # 3 pad into one 4-bucket
+    assert server.batches == 3
+    assert server.bucket_counts[16] == 1 and server.bucket_counts[4] == 2
+
+
+def test_coding_server_interleaved_submit(rng):
+    code = make_array_ldpc(4, 4)
+    dec = BitFlipDecoder(code, backend="mxu", max_iters=4)
+    server = CodingServer(dec, buckets=(1, 4))
+    cw = code.encode(_bits(rng, 6, code.k), backend="mxu")
+    for i in range(3):
+        server.submit(DecodeRequest(i, cw[i].copy()))
+    first = server.step()
+    assert len(first) == 3 and server.bucket_counts[4] == 1
+    for i in range(3, 6):
+        server.submit(DecodeRequest(i, cw[i].copy()))
+    done = server.run()
+    assert {r.rid for r in done} == {3, 4, 5}
+    assert all(r.ok for r in first + done)

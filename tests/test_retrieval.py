@@ -129,6 +129,70 @@ def test_camindex_duplicate_delete(rng):
     assert sorted(new.tolist()) == [3, 10] and idx.size == 11
 
 
+def test_camindex_delete_all_then_search(rng):
+    """An emptied index must still answer: every slot comes back with the
+    masked score -1 and index-ascending tombstone ids."""
+    idx = CAMIndex(48, backend="mxu", min_capacity=256)
+    codes = rng.integers(0, 2, (30, 48))
+    ids = idx.add(codes)
+    assert idx.delete(ids) == 30 and idx.size == 0
+    res = idx.search(codes[:4], k=5)
+    assert (res.scores == -1).all()
+    assert np.array_equal(res.ids, np.tile(np.arange(5), (4, 1)))
+    lines = idx.match(codes[:2])
+    assert not lines.any()
+    assert idx.match_ids(codes[:1]) and idx.match_ids(codes[:1])[0].size == 0
+
+
+def test_camindex_k_exceeds_live_rows(rng):
+    """k may exceed the live count (up to capacity): real rows first, then
+    -1 fillers — bit-identical between backends."""
+    idx = CAMIndex(32, backend="mxu", min_capacity=256)
+    codes = rng.integers(0, 2, (10, 32))
+    idx.add(codes)
+    idx.delete([1, 3, 5, 7, 9])
+    res = idx.search(codes[[0]], k=12)
+    assert res.scores[0, 0] == 32 and res.ids[0, 0] == 0
+    assert (res.scores[0, :5] >= 0).all() and (res.scores[0, 5:] == -1).all()
+    live = {0, 2, 4, 6, 8}
+    assert set(res.ids[0, :5].tolist()) == live
+    ref = idx.search(codes[[0]], k=12, backend="ref")
+    assert np.array_equal(res.scores, ref.scores)
+    assert np.array_equal(res.ids, ref.ids)
+
+
+def test_camindex_readd_after_delete_all(rng):
+    """Tombstoned slots are all reused before the high-water mark grows,
+    and re-added codes are immediately searchable."""
+    idx = CAMIndex(24, backend="mxu", min_capacity=256)
+    first = rng.integers(0, 2, (12, 24))
+    ids = idx.add(first)
+    idx.delete(ids)
+    second = rng.integers(0, 2, (12, 24))
+    new_ids = idx.add(second)
+    assert sorted(new_ids.tolist()) == sorted(ids.tolist())  # slots reused
+    assert idx.high_water == 12 and idx.size == 12
+    res = idx.search(second, k=1)
+    assert (res.scores[:, 0] == 24).all()
+    got = {int(i): int(r) for i, r in zip(res.ids[:, 0], range(12))}
+    for rid, row in got.items():
+        assert np.array_equal(
+            np.asarray(F.unpack_bits(idx._codes[rid], 24)), second[row])
+
+
+def test_camindex_delete_bogus_ids(rng):
+    """Out-of-range, negative, duplicate and already-dead ids are ignored
+    and never corrupt the live count or free list."""
+    idx = CAMIndex(16, backend="mxu", min_capacity=256)
+    idx.add(rng.integers(0, 2, (5, 16)))
+    assert idx.delete([-3, 99, 1000]) == 0 and idx.size == 5
+    assert idx.delete([2, 2, -1, 99]) == 1 and idx.size == 4
+    assert idx.delete([2]) == 0 and idx.size == 4      # already tombstoned
+    assert len(idx._free) == 1
+    new = idx.add(rng.integers(0, 2, (1, 16)))
+    assert new.tolist() == [2] and idx.size == 5
+
+
 def test_camindex_match_and_cycles(rng):
     idx = CAMIndex(32, backend="mxu", min_capacity=256,
                    config=PPACConfig(m=64, n=16))  # 2 col tiles
@@ -196,5 +260,7 @@ def test_retrieval_server_bucketing(rng):
     for r in done:
         assert r.ids.shape == (r.k,) and r.ids[0] == targets[r.rid]
         assert r.scores[0] == 32
-    # 23 requests at max bucket 16 -> batches of 16 and 7 (bucketed to 16)
-    assert server.batches == 2 and server.bucket_counts[16] == 2
+    # 23 requests: whole buckets 16 and 4 drain unpadded, the remaining
+    # 3 pad into one 4-bucket
+    assert server.batches == 3
+    assert server.bucket_counts[16] == 1 and server.bucket_counts[4] == 2
