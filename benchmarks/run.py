@@ -1,23 +1,82 @@
-"""Benchmark harness — one module per paper table. Prints
-``name,us_per_call,derived`` CSV. Table functions assert our analytical
-reproductions match the paper's published numbers before printing."""
+"""Benchmark harness — one module per paper table / subsystem. Prints
+``name,us_per_call,derived`` CSV and optionally a machine-readable JSON
+(``--json out.json``) so the perf trajectory can be recorded as a CI
+artifact. Table functions assert our analytical reproductions match the
+paper's published numbers before printing. ``--only`` selects a subset of
+modules (comma-separated) — CI's fast smoke job runs
+``--only kernels,serving``.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 
 
-def main() -> None:
-    from . import coding, kernels, retrieval, roofline, table2, table3, table4
+def _modules():
+    from . import (coding, kernels, retrieval, roofline, serving, table2,
+                   table3, table4)
 
-    print("name,us_per_call,derived")
-    for mod in (table2, table3, table4, kernels, roofline, retrieval, coding):
+    # insertion order == run order
+    return {
+        "table2": table2,
+        "table3": table3,
+        "table4": table4,
+        "kernels": kernels,
+        "roofline": roofline,
+        "retrieval": retrieval,
+        "coding": coding,
+        "serving": serving,
+    }
+
+
+def collect(only=None):
+    """[(module, name, us, derived)] for the selected benchmark modules."""
+    mods = _modules()
+    if only:
+        unknown = [m for m in only if m not in mods]
+        if unknown:
+            raise SystemExit(
+                f"unknown benchmark module(s) {unknown}; "
+                f"available: {sorted(mods)}")
+        mods = {k: v for k, v in mods.items() if k in only}
+    out = []
+    for key, mod in mods.items():
         try:
             rows = mod.run()
         except Exception as e:  # pragma: no cover
             print(f"{mod.__name__},ERROR,{e!r}", file=sys.stderr)
             raise
-        for name, us, derived in rows:
-            print(f"{name},{us:.1f},{derived}")
+        out.extend((key, name, us, derived) for name, us, derived in rows)
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write results as a JSON list of "
+                         "{module,name,us_per_call,derived}")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset "
+                         "(e.g. 'kernels,serving')")
+    args = ap.parse_args(argv)
+
+    only = ([m.strip() for m in args.only.split(",") if m.strip()]
+            if args.only else None)
+    rows = collect(only)
+
+    print("name,us_per_call,derived")
+    for _, name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        payload = [dict(module=module, name=name, us_per_call=us,
+                        derived=derived)
+                   for module, name, us, derived in rows]
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {len(payload)} benchmark rows to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

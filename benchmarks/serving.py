@@ -1,0 +1,61 @@
+"""Serving-path benchmark: LM decode-step latency + emulated PPAC cycles.
+
+One decode step of a small LM is timed per resident weight container
+(bf16 float baseline, int8 MXU fallback, packed4 / packed1 fused PPAC
+kernels) and priced in the paper's §III-C K·L cycle accounting aggregated
+over every projection — the Table II NN-inference story at model scale.
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import load_arch
+from repro.models import lm
+from repro.serve.step import convert_params_for_serving, serving_cycle_report
+
+_CONTAINERS = [(0, "float_bf16"), (8, "int8"), (4, "packed4"), (1, "packed1")]
+
+
+def _t(fn, reps=3):
+    jax.block_until_ready(fn())  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    base = load_arch("smollm_360m").smoke()
+    params0, _ = lm.init(base, jax.random.PRNGKey(0))
+    slots, max_seq = 2, 32
+    for wb, label in _CONTAINERS:
+        if wb == 0:
+            cfg, params, mode, rep = base, params0, "float", None
+        else:
+            cfg = dataclasses.replace(
+                base, ppac=dataclasses.replace(
+                    base.ppac, enabled=True, weight_bits=wb, act_bits=8,
+                    min_features=32))
+            params = convert_params_for_serving(params0, cfg)
+            mode = "serve"
+            rep = serving_cycle_report(params, cfg)
+
+        cache, _ = lm.init_cache(cfg, slots, max_seq)
+        _, cache = jax.jit(
+            lambda p, b, c, cfg=cfg, mode=mode: lm.prefill(p, cfg, b, c,
+                                                           mode=mode)
+        )(params, {"tokens": jnp.ones((slots, 8), jnp.int32)}, cache)
+        decode = jax.jit(
+            lambda p, t, c, cfg=cfg, mode=mode: lm.decode_step(p, cfg, t, c,
+                                                               mode=mode))
+        tok = jnp.ones((slots, 1), jnp.int32)
+        us = _t(lambda: decode(params, tok, cache)[0])
+        derived = (f"cycles_per_tok={rep.cycles_per_token};"
+                   f"fused={rep.fused_cycles_per_token}" if rep
+                   else "float baseline")
+        rows.append((f"serve_decode_{label}_b{slots}", us, derived))
+    return rows

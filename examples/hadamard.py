@@ -29,7 +29,7 @@ rng = np.random.default_rng(0)
 x = rng.integers(-(2 ** (L - 1)), 2 ** (L - 1), size=(16, N))
 
 # PPAC path: 1-bit oddint matrix × 8-bit int vectors (fused bitplane kernel)
-y = np.asarray(ppac_matmul(x, H, k_bits=1, l_bits=L,
+y = np.asarray(ppac_matmul(x, H, mode="mvp_multibit", k_bits=1, l_bits=L,
                            fmt_a="oddint", fmt_x="int"))
 ref = x @ H.T
 assert np.array_equal(y, ref)

@@ -6,13 +6,7 @@ import numpy as np
 
 from repro.core import formats as F
 from repro.core.ppac import PPACArray, PPACConfig
-from repro.kernels import (
-    cam_match,
-    gf2_matmul,
-    hamming_similarity,
-    inner_product_pm1,
-    ppac_matmul,
-)
+from repro.kernels import ppac_matmul
 
 rng = np.random.default_rng(0)
 M, N = 256, 256
@@ -38,17 +32,18 @@ y = np.asarray(arr.mvp_multibit(Ai, xi, 4, 4, "int", "int"))
 assert np.array_equal(y, Ai @ xi)
 print(f"4-bit int MVP: exact ({arr.counter.cycles} emulated cycles total)")
 
-# --- the TPU kernels (batched, bit-packed) -----------------------------------
+# --- the TPU kernels (batched, bit-packed, one dispatch surface) -------------
 X = rng.integers(0, 2, (8, N)).astype(np.uint8)
 xp, ap = F.pack_bits(X), F.pack_bits(A)
-hs = hamming_similarity(xp, ap, n=N)                 # Pallas interpret on CPU
-ip = inner_product_pm1(xp, ap, n=N)
-g2 = gf2_matmul(xp, ap, n=N)
+hs = ppac_matmul(xp, ap, mode="hamming", n=N)        # auto backend per platform
+ip = ppac_matmul(xp, ap, mode="mvp_1bit", n=N)
+g2 = ppac_matmul(xp, ap, mode="gf2", n=N)
 print("kernel Hamming similarities:", np.asarray(hs)[0, :4], "...")
 print("kernel GF(2) MVP bits:", np.asarray(g2)[0, :8], "...")
 
 Xi = rng.integers(-8, 8, (8, N))
-ym = np.asarray(ppac_matmul(Xi, Ai, k_bits=4, l_bits=4, backend="mxu"))
+ym = np.asarray(ppac_matmul(Xi, Ai, mode="mvp_multibit", k_bits=4, l_bits=4,
+                            backend="mxu"))
 assert np.array_equal(ym, Xi @ Ai.T)
 print("fused bit-serial 4x4-bit matmul: exact, all 8 queries")
 print("OK")

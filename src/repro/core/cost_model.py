@@ -75,6 +75,71 @@ def tiled_scan_merge_cycles(m_rows: int, n_bits: int,
     return scan + merge
 
 
+def projection_mvp_cycles(d_out: int, d_in: int, k_bits: int = 1,
+                          l_bits: int = 1,
+                          config: Optional[PPACConfig] = None,
+                          parallel_arrays: Optional[int] = None) -> int:
+    """Emulated cycles for one K-bit-matrix × L-bit-vector projection MVP
+    against a [d_out, d_in] weight virtualized onto the configured array
+    geometry.
+
+    Each of the K·L bit-plane-pair passes of the §III-C schedule is one
+    1-bit MVP over the [d_out, d_in]-bit tile grid (scan + adder-tree
+    merge, per :func:`tiled_scan_merge_cycles`); a single-array fit
+    reduces to the paper's K·L cycles exactly.
+    """
+    return k_bits * l_bits * tiled_scan_merge_cycles(
+        d_out, d_in, config, parallel_arrays)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectionCost:
+    """PPAC cycle cost of one quantized projection inside a model step."""
+
+    name: str
+    kind: str
+    d_in: int
+    d_out: int
+    k_bits: int
+    l_bits: int
+    count: int          # projections of this shape (e.g. stacked layers)
+    cycles: int         # total for `count` projections, one token each
+    fused: bool         # True when served by the fused PPAC kernels
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingCycleReport:
+    """Per-token PPAC cycle accounting aggregated over a model step —
+    the Table II NN-inference story (§III-C) at model scale."""
+
+    projections: tuple          # tuple[ProjectionCost, ...]
+    config: PPACConfig
+
+    @property
+    def cycles_per_token(self) -> int:
+        return sum(p.cycles for p in self.projections)
+
+    @property
+    def fused_cycles_per_token(self) -> int:
+        return sum(p.cycles for p in self.projections if p.fused)
+
+    @property
+    def num_projections(self) -> int:
+        return sum(p.count for p in self.projections)
+
+    def est_us_per_token(self) -> Optional[float]:
+        return est_latency_us(self.cycles_per_token, self.config)
+
+    def as_dict(self) -> dict:
+        return dict(
+            cycles_per_token=self.cycles_per_token,
+            fused_cycles_per_token=self.fused_cycles_per_token,
+            num_projections=self.num_projections,
+            est_us_per_token=self.est_us_per_token(),
+            projections=[dataclasses.asdict(p) for p in self.projections],
+        )
+
+
 def est_latency_us(total_cycles: int, config: PPACConfig,
                    shards: int = 1) -> Optional[float]:
     """Wall-clock estimate at the paper's post-layout clock for the

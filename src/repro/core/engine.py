@@ -13,44 +13,63 @@ A ``PPACLinear`` projection can run in three regimes:
 Serving weight containers (memory-roofline lever, see EXPERIMENTS.md §Perf):
 
   bf16     : [in, out] bf16                       (baseline)
-  int8     : [in, out] int8 + scale               (K<=8)
-  packed4  : [in, out/2] uint8, two nibbles       (K<=4; unpacked via shifts)
+  int8     : [in, out] int8 + scale               (K<=8; MXU dot)
+  packed4  : [K, out, in/32] uint32 bitplanes     (K<=4; fused bit-serial
+             kernel — the resident layout IS the kernel operand)
   packed1  : [out, in/32] uint32 bitplanes        (K=1; XNOR-popcount kernel)
 
-All integer paths are bit-true (int32 accumulation) — the property the paper
-holds over mixed-signal PIM (§III-D).
+The packed kinds execute through the unified kernel engine
+(``repro.kernels.engine.ppac_matmul``): packed1 via the 1-bit ±1 MVP mode,
+packed4 via the fused multi-bit plane-pair kernel against the pre-packed
+resident planes — no unpack-to-int8 ``dot_general`` fallback. All integer
+paths are bit-true (int32 accumulation) — the property the paper holds
+over mixed-signal PIM (§III-D) — and bit-identical across the
+'pallas'/'ref'/'mxu' backends.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..kernels.binary_mvp.ops import inner_product_pm1
-from .formats import pack_bits
+from ..kernels.engine import ppac_matmul
+from .formats import pack_bits, to_bitplanes
 from .quant import binarize_pm1, fake_quant, quantize
 
 
 @jax.tree_util.register_pytree_node_class
 class QuantContainer:
-    """Resident quantized weight: arrays are pytree children, ``kind`` is
-    static aux data (so jit specializes on the container format)."""
+    """Resident quantized weight: arrays are pytree children; ``kind`` plus
+    the quantization metadata (``bits``, ``fmt``, logical ``n_in``) are
+    static aux data, so jit specializes on the container format."""
 
-    def __init__(self, kind: str, wq, scale):
+    def __init__(self, kind: str, wq, scale, *, bits: Optional[int] = None,
+                 fmt: Optional[str] = None, n_in: Optional[int] = None):
         self.kind = kind
         self.wq = wq
         self.scale = scale
+        self.bits = bits
+        self.fmt = fmt
+        self.n_in = n_in
 
     def tree_flatten(self):
-        return (self.wq, self.scale), self.kind
+        return (self.wq, self.scale), (self.kind, self.bits, self.fmt,
+                                       self.n_in)
 
     @classmethod
-    def tree_unflatten(cls, kind, children):
-        return cls(kind, *children)
+    def tree_unflatten(cls, aux, children):
+        kind, bits, fmt, n_in = aux
+        return cls(kind, *children, bits=bits, fmt=fmt, n_in=n_in)
+
+    def with_children(self, wq, scale) -> "QuantContainer":
+        """Same kind/metadata, different payloads (sharding specs etc.)."""
+        return QuantContainer(self.kind, wq, scale, bits=self.bits,
+                              fmt=self.fmt, n_in=self.n_in)
 
     def __repr__(self):
-        return f"QuantContainer({self.kind}, wq={getattr(self.wq, 'shape', None)})"
+        return (f"QuantContainer({self.kind}, bits={self.bits}, "
+                f"wq={getattr(self.wq, 'shape', None)})")
 
 
 def qat_dense(x, w, *, weight_bits: int, act_bits: int,
@@ -69,49 +88,81 @@ def pack_weight_for_serving(w, *, weight_bits: int,
                             weight_format: str = "int") -> QuantContainer:
     """Offline conversion of a float [in, out] weight to a resident
     quantized container (run once at model load, like writing the PPAC
-    latch array)."""
+    latch array).
+
+    1-bit weights become one packed XNOR plane; 2..4-bit weights become K
+    packed logical bitplanes [K, out, in/32] — the exact operand layout of
+    the fused bit-serial kernel, so serving streams activations against
+    the resident planes with no per-call weight reshaping. 5..8 bits fall
+    back to int8 rows (MXU dot); wider requests keep bf16.
+    """
+    n_in = w.shape[0]
     w = w.astype(jnp.float32)
     if weight_bits == 1:
         q, s = binarize_pm1(w, axis=0)              # q in {±1}, s [1, out]
         bits = ((q + 1) / 2).astype(jnp.uint8)      # logical levels
         packed = pack_bits(bits.T)                  # [out, in/32] u32
-        return QuantContainer("packed1", packed, s[0])
+        return QuantContainer("packed1", packed, s[0], bits=1, fmt="pm1",
+                              n_in=n_in)
+    if weight_bits > 8:
+        return QuantContainer("bf16", w.astype(jnp.bfloat16),
+                              jnp.ones((w.shape[1],), jnp.float32),
+                              bits=16, fmt="float", n_in=n_in)
     q, s = quantize(w, weight_bits, weight_format, axis=0)  # s [1, out]
     if weight_bits <= 4:
-        qu = (q + 8).astype(jnp.uint8)              # int4 biased to [0,15]
-        lo, hi = qu[0::2, :], qu[1::2, :]           # pack along `in` dim
-        packed = (lo | (hi << 4)).astype(jnp.uint8)  # [in/2, out]
-        return QuantContainer("packed4", packed, s[0])
-    return QuantContainer("int8", q.astype(jnp.int8), s[0])
+        a_int = q.T.astype(jnp.int32)               # [out, in] exact ints
+        planes = to_bitplanes(a_int, weight_bits, weight_format)
+        packed = pack_bits(planes)                  # [K, out, in/32] u32
+        return QuantContainer("packed4", packed, s[0], bits=weight_bits,
+                              fmt=weight_format, n_in=n_in)
+    return QuantContainer("int8", q.astype(jnp.int8), s[0], bits=weight_bits,
+                          fmt=weight_format, n_in=n_in)
+
+
+def serve_dense_acc(xf, container: QuantContainer, *, act_bits: int,
+                    act_format: str = "int", backend: str = "mxu"):
+    """Exact integer accumulations for a packed/int container.
+
+    xf: [B, in] float32 activations. Returns (acc [B, out] int32,
+    act_scale [B, 1] float32) — the raw PPAC row-ALU results before
+    dequantization, bit-identical across backends for the packed kinds.
+    """
+    kind = container.kind
+    if kind == "packed1":
+        xq, xs = binarize_pm1(xf, axis=-1)          # {±1} activations
+        xbits = ((xq + 1) / 2).astype(jnp.uint8)
+        xp = pack_bits(xbits)
+        acc = ppac_matmul(xp, container.wq, mode="mvp_1bit",
+                          n=xf.shape[-1], backend=backend)  # [B, out] int32
+        return acc, xs
+    xq, xs = quantize(xf, act_bits, act_format, axis=-1)
+    if kind == "packed4":
+        acc = ppac_matmul(xq.astype(jnp.int32), container.wq,
+                          mode="mvp_multibit_planes", n=xf.shape[-1],
+                          k_bits=container.bits, l_bits=act_bits,
+                          fmt_a=container.fmt, fmt_x=act_format,
+                          backend=backend)
+        return acc, xs
+    if kind == "int8":
+        acc = jax.lax.dot_general(
+            xq.astype(jnp.int8), container.wq, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        return acc, xs
+    raise ValueError(f"no integer path for container kind {kind!r}")
 
 
 def serve_dense(x, container: QuantContainer, *, act_bits: int,
                 act_format: str = "int", backend: str = "mxu"):
     """Exact-integer projection against a resident quantized weight."""
-    kind = container.kind
     scale = container.scale
     lead = x.shape[:-1]
     xf = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
 
-    if kind == "packed1":
-        xq, xs = binarize_pm1(xf, axis=-1)          # {±1} activations
-        xbits = ((xq + 1) / 2).astype(jnp.uint8)
-        xp = pack_bits(xbits)
-        ip = inner_product_pm1(xp, container.wq, n=xf.shape[-1],
-                               backend=backend)      # [B, out] int32
-        y = ip.astype(jnp.float32) * xs * scale[None, :]
-        return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
-
-    xq, xs = quantize(xf, act_bits, act_format, axis=-1)
-    xi = xq.astype(jnp.int8)
-    if kind == "packed4":
-        packed = container.wq
-        lo = (packed & 0xF).astype(jnp.int8) - 8     # [in/2, out]
-        hi = (packed >> 4).astype(jnp.int8) - 8
-        wq = jnp.stack([lo, hi], axis=1).reshape(-1, packed.shape[-1])
+    if container.kind == "bf16":
+        y = (xf.astype(jnp.bfloat16) @ container.wq).astype(jnp.float32)
+        y = y * scale[None, :]
     else:
-        wq = container.wq
-    acc = jax.lax.dot_general(xi, wq, (((1,), (0,)), ((), ())),
-                              preferred_element_type=jnp.int32)
-    y = acc.astype(jnp.float32) * xs * scale[None, :]
+        acc, xs = serve_dense_acc(xf, container, act_bits=act_bits,
+                                  act_format=act_format, backend=backend)
+        y = acc.astype(jnp.float32) * xs * scale[None, :]
     return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)

@@ -19,7 +19,8 @@ mixed-signal PIM (bit-true LSB arithmetic cannot tolerate analog error):
 Matrix *construction* (companion powers, CRC columns) is host-side numpy
 — it is configuration, like loading the latch array, which the paper
 excludes from its measurements (§IV-A).  The *application* is always a
-PPAC GF(2) MVP through :func:`repro.kernels.gf2_tiled.gf2_matmul_tiled`.
+PPAC GF(2) MVP through the unified kernel engine
+(:func:`repro.kernels.engine.ppac_matmul`, mode ``"gf2"``).
 
 ``gf2_cycles`` prices one batched MVP in emulated PPAC cycles using the
 same tile-virtualization rules as ``retrieval.index.CAMIndex``: every
@@ -41,7 +42,7 @@ from ..core.backend import resolve_backend  # noqa: F401  (re-exported)
 from ..core.cost_model import tiled_scan_merge_cycles
 from ..core.formats import pack_bits
 from ..core.ppac import CycleCounter, PPACConfig
-from ..kernels.gf2_tiled.ops import gf2_matmul_tiled
+from ..kernels.engine import ppac_matmul
 
 
 def gf2_cycles(nq: int, m_rows: int, n_bits: int,
@@ -61,8 +62,8 @@ def gf2_matvec(x_bits, a_bits, *, backend: str = "auto",
     a = np.asarray(a_bits, np.uint8)
     assert x.ndim == 2 and a.ndim == 2 and x.shape[1] == a.shape[1], \
         (x.shape, a.shape)
-    out = gf2_matmul_tiled(pack_bits(x), pack_bits(a), n=x.shape[1],
-                           backend=resolve_backend(backend))
+    out = ppac_matmul(pack_bits(x), pack_bits(a), mode="gf2", n=x.shape[1],
+                      backend=backend)
     if counter is not None:
         counter.tick(gf2_cycles(x.shape[0], a.shape[0], x.shape[1], config)
                      + counter.pipeline_latency)

@@ -1,7 +1,13 @@
 """Pallas TPU kernels for the PPAC operation modes.
 
+engine        — the unified dispatch surface: ``ppac_matmul(x, a, mode=...)``
+                over a registry of every Table-I operation mode, with
+                bit-identical 'pallas' / 'ref' / 'mxu' backends
+tiling        — shared machinery: pad-to-tile planning, lane-tile
+                streaming, ``row_chunk`` subrow chunking
 binary_mvp    — packed 1-bit XNOR/AND popcount matmul (modes III-A/B/D/E)
-bitserial_mvp — fused multi-bitplane MVP (mode III-C, all Table-I formats)
+bitserial_mvp — fused multi-bitplane MVP (mode III-C, all Table-I formats;
+                ``ppac_matmul_planes`` serves pre-packed resident weights)
 hamming_topk  — fused streaming Hamming top-k / CAM δ-match (mode III-A
                 associative retrieval at scale; never materializes [B, M])
 gf2_tiled     — tiled GF(2) matmul with XOR-parity accumulation across
@@ -15,7 +21,12 @@ from .binary_mvp.ops import (  # noqa: F401
     inner_product_pm1,
     pla_eval,
 )
-from .bitserial_mvp.ops import ppac_cycles, ppac_matmul  # noqa: F401
+from .bitserial_mvp.ops import (  # noqa: F401
+    ppac_cycles,
+    ppac_matmul_planes,
+)
+from .bitserial_mvp.ops import ppac_matmul as multibit_matmul  # noqa: F401
+from .engine import MODES, modes, ppac_matmul  # noqa: F401
 from .gf2_tiled.ops import gf2_matmul_tiled  # noqa: F401
 from .hamming_topk.ops import (  # noqa: F401
     hamming_threshold_match,

@@ -15,13 +15,10 @@ From S the wrapper derives all 1-bit modes:
     GF(2)          : S_and & 1
     inner product  : 2*h̄ - N  (eq. 1)
 
-Tiling: grid (B/tb, M/tm, W/tw). Per step the kernel holds an x tile
-[tb, tw], an a tile [tm, tw] and the int32 accumulator [tb, tm] in VMEM.
-The inner broadcast is chunked over rows of the a tile (``row_chunk``) to
-bound the [tb, chunk, tw] popcount intermediate — this plays the role of
-the paper's subrow partitioning (bounding adder fan-in / VMEM footprint).
-Lane dims are multiples of 128 and sublane dims multiples of 8 for TPU
-layout friendliness.
+Tiling, padding, lane streaming and the ``row_chunk`` subrow chunking all
+come from :mod:`repro.kernels.tiling` — the kernel body here is just the
+per-tile accumulation of the chunked popcount sum, so arbitrarily large
+B/M/W stream through fixed VMEM tiles.
 """
 from __future__ import annotations
 
@@ -29,39 +26,21 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
+
+from ..tiling import lane_stream_call, plan_tiles, subrow_popcount_sum
 
 
 def _binary_matmul_kernel(x_ref, a_ref, o_ref, *, op: str, row_chunk: int):
     """x_ref: [tb, tw] uint32; a_ref: [tm, tw] uint32; o_ref: [tb, tm] int32."""
-    tb, tw = x_ref.shape
-    tm = a_ref.shape[0]
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    x = x_ref[...]  # [tb, tw]
-    a = a_ref[...]  # [tm, tw]
-
-    # Chunk the row dimension to bound the [tb, chunk, tw] intermediate.
-    n_chunks = tm // row_chunk
-
-    def body(i, acc):
-        a_c = lax.dynamic_slice_in_dim(a, i * row_chunk, row_chunk, axis=0)
-        if op == "xor":
-            bits = jnp.bitwise_xor(x[:, None, :], a_c[None, :, :])
-        else:  # and
-            bits = jnp.bitwise_and(x[:, None, :], a_c[None, :, :])
-        pc = lax.population_count(bits).astype(jnp.int32)  # [tb, chunk, tw]
-        part = jnp.sum(pc, axis=-1)  # [tb, chunk]
-        return lax.dynamic_update_slice_in_dim(acc, part, i * row_chunk, axis=1)
-
-    partial_s = lax.fori_loop(
-        0, n_chunks, body, jnp.zeros((tb, tm), jnp.int32), unroll=False
-    )
-    o_ref[...] += partial_s
+    bit_op = jnp.bitwise_xor if op == "xor" else jnp.bitwise_and
+    o_ref[...] += subrow_popcount_sum(x_ref[...], a_ref[...], bit_op=bit_op,
+                                      row_chunk=row_chunk)
 
 
 @functools.partial(
@@ -91,31 +70,8 @@ def binary_matmul_packed(
     m, w2 = a_packed.shape
     assert w == w2, (w, w2)
 
-    bb = min(block_b, _round_up(b, 8))
-    bm = min(block_m, _round_up(m, 8))
-    bw = min(block_w, _round_up(w, 128))
-    rc = min(row_chunk, bm)
-    while bm % rc:
-        rc -= 1
-
-    bp, mp, wp = _round_up(b, bb), _round_up(m, bm), _round_up(w, bw)
-    x_p = jnp.pad(x_packed.astype(jnp.uint32), ((0, bp - b), (0, wp - w)))
-    a_p = jnp.pad(a_packed.astype(jnp.uint32), ((0, mp - m), (0, wp - w)))
-
-    grid = (bp // bb, mp // bm, wp // bw)
-    out = pl.pallas_call(
-        functools.partial(_binary_matmul_kernel, op=op, row_chunk=rc),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, bw), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bm, bw), lambda i, j, k: (j, k)),
-        ],
-        out_specs=pl.BlockSpec((bb, bm), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((bp, mp), jnp.int32),
-        interpret=interpret,
-    )(x_p, a_p)
-    return out[:b, :m]
-
-
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
+    plan = plan_tiles(b, m, w, block_b=block_b, block_m=block_m,
+                      block_w=block_w, row_chunk=row_chunk)
+    return lane_stream_call(
+        functools.partial(_binary_matmul_kernel, op=op, row_chunk=plan.rc),
+        x_packed, a_packed, plan, interpret=interpret)

@@ -13,6 +13,11 @@ The plane-pair weight matrix W encodes the entire number-format algebra
 weights, and oddint's affine offset is folded in by appending a constant
 "mask" plane (the all-valid-bits vector) — the exact generalization of the
 paper's h̄(a, 1)/h̄(a, 0) offset trick. See ops.py for the construction.
+
+Tiling, padding, lane streaming and the ``row_chunk`` subrow chunking all
+come from :mod:`repro.kernels.tiling`: the plane stacks ride along as
+leading block dims (whole stack resident per tile), so arbitrarily large
+B/M/W stream through fixed VMEM tiles exactly like the 1-bit kernels.
 """
 from __future__ import annotations
 
@@ -20,39 +25,30 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
+
+from ..tiling import lane_stream_call, plan_tiles, subrow_popcount_sum
 
 
 def _bitserial_kernel(x_ref, a_ref, w_ref, o_ref, *, k1: int, l1: int,
                       row_chunk: int):
     """x_ref [l1, tb, tw] u32; a_ref [k1, tm, tw] u32; w_ref [k1, l1] i32;
     o_ref [tb, tm] i32 (accumulated over the lane grid dim)."""
-    _, tb, tw = x_ref.shape
+    _, tb, _ = x_ref.shape
     tm = a_ref.shape[1]
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    n_chunks = tm // row_chunk
     acc = jnp.zeros((tb, tm), jnp.int32)
     for k in range(k1):          # static unroll: K1*L1 <= ~36 "cycles"
         a_k = a_ref[k]           # [tm, tw]
         for l in range(l1):
-            x_l = x_ref[l]       # [tb, tw]
-            w_kl = w_ref[k, l]
-
-            def body(i, s):
-                a_c = lax.dynamic_slice_in_dim(a_k, i * row_chunk, row_chunk, 0)
-                bits = jnp.bitwise_and(x_l[:, None, :], a_c[None, :, :])
-                pc = lax.population_count(bits).astype(jnp.int32)
-                part = jnp.sum(pc, axis=-1)  # [tb, chunk]
-                return lax.dynamic_update_slice_in_dim(s, part, i * row_chunk, 1)
-
-            s_kl = lax.fori_loop(0, n_chunks, body,
-                                 jnp.zeros((tb, tm), jnp.int32))
-            acc = acc + w_kl * s_kl
+            s_kl = subrow_popcount_sum(x_ref[l], a_k,
+                                       bit_op=jnp.bitwise_and,
+                                       row_chunk=row_chunk)
+            acc = acc + w_ref[k, l] * s_kl
     o_ref[...] += acc
 
 
@@ -81,34 +77,12 @@ def bitserial_matmul_packed(
     k1, m, w2 = a_planes.shape
     assert w == w2 and weights.shape == (k1, l1)
 
-    bb = min(block_b, _round_up(b, 8))
-    bm = min(block_m, _round_up(m, 8))
-    bw = min(block_w, _round_up(w, 128))
-    rc = min(row_chunk, bm)
-    while bm % rc:
-        rc -= 1
-
-    bp, mp, wp = _round_up(b, bb), _round_up(m, bm), _round_up(w, bw)
-    x_p = jnp.pad(x_planes.astype(jnp.uint32),
-                  ((0, 0), (0, bp - b), (0, wp - w)))
-    a_p = jnp.pad(a_planes.astype(jnp.uint32),
-                  ((0, 0), (0, mp - m), (0, wp - w)))
-
-    grid = (bp // bb, mp // bm, wp // bw)
-    out = pl.pallas_call(
-        functools.partial(_bitserial_kernel, k1=k1, l1=l1, row_chunk=rc),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((l1, bb, bw), lambda i, j, k: (0, i, k)),
-            pl.BlockSpec((k1, bm, bw), lambda i, j, k: (0, j, k)),
-            pl.BlockSpec((k1, l1), lambda i, j, k: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((bb, bm), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((bp, mp), jnp.int32),
-        interpret=interpret,
-    )(x_p, a_p, weights.astype(jnp.int32))
-    return out[:b, :m]
-
-
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
+    plan = plan_tiles(b, m, w, block_b=block_b, block_m=block_m,
+                      block_w=block_w, row_chunk=row_chunk)
+    return lane_stream_call(
+        functools.partial(_bitserial_kernel, k1=k1, l1=l1, row_chunk=plan.rc),
+        x_planes, a_planes, plan,
+        x_leading=l1, a_leading=k1,
+        extra_inputs=(jnp.asarray(weights, jnp.int32),),
+        extra_specs=(pl.BlockSpec((k1, l1), lambda i, j, k: (0, 0)),),
+        interpret=interpret)

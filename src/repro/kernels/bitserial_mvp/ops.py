@@ -5,6 +5,12 @@ logical bitplanes and the plane-pair weight matrix, and dispatches to the
 fused Pallas kernel ('pallas'), the jnp oracle ('ref'), or an int8 MXU
 lowering ('mxu').
 
+``ppac_matmul_planes`` is the serving variant: the K-bit matrix arrives
+already decomposed into packed bitplane lanes (the resident weight layout
+of ``core.engine.pack_weight_for_serving``) and only the L-bit vector batch
+is decomposed on the fly — the matrix is weight-stationary, exactly the
+paper's premise of a static A with streaming x (§IV-A).
+
 Weight-matrix construction. For an operand with format f and L bits, the
 value decomposes over logical planes b_l in {0,1} as
 
@@ -27,19 +33,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...core.backend import auto_interpret as _auto_interpret
 from ...core.formats import (
     NumberFormat,
     fmt,
+    from_bitplanes,
     pack_bits,
     plane_weights,
     to_bitplanes,
+    unpack_bits,
 )
 from .kernel import bitserial_matmul_packed
 from .ref import bitserial_matmul_packed_ref
-
-
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _operand_decomposition(f: NumberFormat, bits: int) -> Tuple[np.ndarray, int]:
@@ -54,6 +59,17 @@ def _operand_decomposition(f: NumberFormat, bits: int) -> Tuple[np.ndarray, int]
     return w, int(c)
 
 
+def _pair_weights(wa, ca, wx, cx):
+    """Plane-pair weight matrix [K1, L1] with mask-plane rows/cols appended
+    when either side carries a constant offset (cross terms w*c and c*c)."""
+    if cx != 0 or ca != 0:
+        wa = np.concatenate([wa, [ca]])
+        wx = np.concatenate([wx, [cx]])
+    weights = np.outer(wa, wx).astype(np.int64)
+    assert np.abs(weights).max() < 2**31, "plane weights overflow int32"
+    return jnp.asarray(weights, jnp.int32), (cx != 0 or ca != 0)
+
+
 def build_planes_and_weights(x_int, a_int, k_bits: int, l_bits: int,
                              fmt_a, fmt_x):
     """Returns (x_planes [L1,B,W], a_planes [K1,M,W], weights [K1,L1])."""
@@ -64,28 +80,22 @@ def build_planes_and_weights(x_int, a_int, k_bits: int, l_bits: int,
 
     wx, cx = _operand_decomposition(fmt_x, l_bits)
     wa, ca = _operand_decomposition(fmt_a, k_bits)
+    weights, need_mask = _pair_weights(wa, ca, wx, cx)
 
     x_planes = to_bitplanes(x_int, l_bits, fmt_x)  # (L,B,N)
     a_planes = to_bitplanes(a_int, k_bits, fmt_a)  # (K,M,N)
 
-    mask = jnp.ones((1, n), jnp.uint8)
-    if cx != 0 or ca != 0:
+    if need_mask:
         # Append mask planes so cross terms (w*c and c*c) are representable.
+        mask = jnp.ones((1, n), jnp.uint8)
         x_planes = jnp.concatenate(
             [x_planes, jnp.broadcast_to(mask, (1, b, n))], axis=0)
         a_planes = jnp.concatenate(
             [a_planes, jnp.broadcast_to(mask, (1, m, n))], axis=0)
-        wx_e = np.concatenate([wx, [cx]])
-        wa_e = np.concatenate([wa, [ca]])
-    else:
-        wx_e, wa_e = wx, wa
-
-    weights = np.outer(wa_e, wx_e).astype(np.int64)
-    assert np.abs(weights).max() < 2**31, "plane weights overflow int32"
 
     xp = pack_bits(x_planes)  # (L1,B,W)
     ap = pack_bits(a_planes)  # (K1,M,W)
-    return xp, ap, jnp.asarray(weights, jnp.int32)
+    return xp, ap, weights
 
 
 @functools.partial(jax.jit,
@@ -113,6 +123,58 @@ def ppac_matmul(x_int, a_int, *, k_bits: int, l_bits: int,
         return bitserial_matmul_packed(xp, ap, w, interpret=_auto_interpret())
     if backend == "ref":
         return bitserial_matmul_packed_ref(xp, ap, w)
+    raise ValueError(f"unknown backend {backend}")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "k_bits", "l_bits", "fmt_a", "fmt_x",
+                                    "backend"))
+def ppac_matmul_planes(x_int, a_planes, *, n: int, k_bits: int, l_bits: int,
+                       fmt_a="int", fmt_x="int", backend: str = "pallas"):
+    """y[b,m] = <a_m, x_b> against a *pre-packed* K-plane resident matrix.
+
+    a_planes: [K, M, ceil(n/32)] uint32 — the K logical bitplanes of the
+    K-bit matrix in packed lane form (lanes beyond ``n`` zero, as
+    ``core.formats.pack_bits`` guarantees); x_int: [B, n] integers in the
+    ``fmt_x`` L-bit range, decomposed on the fly. Bit-true int32 result,
+    identical across backends and to ``ppac_matmul`` on the unpacked ints.
+    """
+    fa, fx = fmt(fmt_a), fmt(fmt_x)
+    b = x_int.shape[0]
+    k, m, _ = a_planes.shape
+    assert k == k_bits, (k, k_bits)
+
+    if backend == "mxu":
+        # Fold the resident planes back to integers and use the MXU.
+        a_bits = unpack_bits(a_planes, n)              # [K, M, n]
+        ai = from_bitplanes(a_bits, fa)                # [M, n] int32
+        xi = jnp.asarray(x_int, jnp.int32)
+        small = max(2**k_bits, 2**l_bits) <= 128
+        dt = jnp.int8 if small else jnp.int32
+        return jax.lax.dot_general(
+            xi.astype(dt), ai.astype(dt), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+    wx, cx = _operand_decomposition(fx, l_bits)
+    wa, ca = _operand_decomposition(fa, k_bits)
+    weights, need_mask = _pair_weights(wa, ca, wx, cx)
+
+    xp = pack_bits(to_bitplanes(x_int, l_bits, fx))    # [L, B, W]
+    ap = jnp.asarray(a_planes, jnp.uint32)
+    if need_mask:
+        # The constant all-ones plane (valid bits only) is shape-derived —
+        # it never needs to be stored with the weights.
+        mask_row = pack_bits(jnp.ones((n,), jnp.uint8))  # [W]
+        xp = jnp.concatenate(
+            [xp, jnp.broadcast_to(mask_row, (1, b) + mask_row.shape)], axis=0)
+        ap = jnp.concatenate(
+            [ap, jnp.broadcast_to(mask_row, (1, m) + mask_row.shape)], axis=0)
+
+    if backend == "pallas":
+        return bitserial_matmul_packed(xp, ap, weights,
+                                       interpret=_auto_interpret())
+    if backend == "ref":
+        return bitserial_matmul_packed_ref(xp, ap, weights)
     raise ValueError(f"unknown backend {backend}")
 
 

@@ -1,0 +1,155 @@
+"""Unified PPAC kernel engine: one dispatch surface over every operation mode.
+
+The paper presents PPAC as a *versatile* accelerator — one bit-cell array
+whose peripherals reconfigure between Hamming similarity, CAM matching,
+1-bit and multi-bit MVPs, GF(2) products and PLA evaluation (Table I,
+§III). This module is the software analogue: a single entry point
+
+    ppac_matmul(x, a, mode=..., backend=..., **mode_kwargs)
+
+over a mode registry, so every subsystem (`core.engine` model serving,
+`retrieval.CAMIndex`, the `gf2` coding stack) calls PPAC compute through
+the same surface instead of importing per-mode kernels. Each mode has
+three bit-identical lowerings ('pallas' | 'ref' | 'mxu', 'auto' resolves
+per platform) and is validated against the cycle-exact ``PPACArray``
+oracle in tests.
+
+Modes (operands are packed uint32 lanes unless noted):
+
+  hamming              h̄[b,m] = n - popcount(x ^ a)              (§III-A)
+  cam                  match lines (h̄ >= δ), honors a validity mask
+  topk                 fused streaming top-k of h̄ -> (scores, indices)
+  mvp_1bit             1-bit MVP, all four Table-I format pairs
+                       (fmt_a/fmt_x in {'pm1','01'}; eqs. (1)–(3))
+  mvp_multibit         K-bit matrix × L-bit vector ints (§III-C)
+  mvp_multibit_planes  same, against a pre-packed K-plane resident matrix
+                       (the serving weight layout)
+  gf2                  GF(2) MVP with XOR-parity lane accumulation (§III-D)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.backend import resolve_backend
+from .binary_mvp.ops import and_dot, hamming_similarity, inner_product_pm1
+from .bitserial_mvp.ops import ppac_matmul as _multibit_matmul
+from .bitserial_mvp.ops import ppac_matmul_planes as _multibit_matmul_planes
+from .gf2_tiled.ops import gf2_matmul_tiled
+from .hamming_topk.ops import hamming_threshold_match, hamming_topk
+
+
+def _lane_popcount(packed) -> jnp.ndarray:
+    """Total set bits per packed row (padding lanes are zero by contract)."""
+    pc = lax.population_count(jnp.asarray(packed, jnp.uint32))
+    return jnp.sum(pc.astype(jnp.int32), axis=-1)
+
+
+def _mode_hamming(x, a, *, backend, n: int):
+    return hamming_similarity(x, a, n=n, backend=backend)
+
+
+def _mode_cam(x, a, *, backend, n: int, delta=None, valid=None):
+    d = n if delta is None else delta
+    return hamming_threshold_match(x, a, n=n, delta=d, valid=valid,
+                                   backend=backend)
+
+
+def _mode_topk(x, a, *, backend, n: int, k: int, valid=None):
+    return hamming_topk(x, a, n=n, k=k, valid=valid, backend=backend)
+
+
+def _mode_mvp_1bit(x, a, *, backend, n: int, fmt_a: str = "pm1",
+                   fmt_x: str = "pm1"):
+    """All four Table-I 1-bit format pairs over packed logical bits.
+
+    'pm1' operands store level 1 for +1 and level 0 for -1; '01' operands
+    store the value directly. The mixed pairs fold the h̄(a,1)/h̄(a,0)
+    precompute of eqs. (2)/(3) into lane popcounts of the resident packed
+    operand, so they stay bit-identical across backends for free.
+    """
+    pair = (fmt_a, fmt_x)
+    if pair == ("pm1", "pm1"):
+        return inner_product_pm1(x, a, n=n, backend=backend)
+    if pair == ("01", "01"):
+        return and_dot(x, a, n=n, backend=backend)
+    s_and = and_dot(x, a, n=n, backend=backend)
+    if pair == ("pm1", "01"):
+        # eq. (2): <a,x> = 2*S_and - sum(x)  (a in ±1, x in {0,1})
+        return 2 * s_and - _lane_popcount(x)[:, None]
+    if pair == ("01", "pm1"):
+        # eq. (3): <a,x> = 2*S_and - sum(a)  (a in {0,1}, x in ±1)
+        return 2 * s_and - _lane_popcount(a)[None, :]
+    raise ValueError(f"unsupported 1-bit format pair {pair}")
+
+
+def _mode_mvp_multibit(x, a, *, backend, k_bits: int, l_bits: int,
+                       fmt_a="int", fmt_x="int"):
+    return _multibit_matmul(x, a, k_bits=k_bits, l_bits=l_bits,
+                            fmt_a=fmt_a, fmt_x=fmt_x, backend=backend)
+
+
+def _mode_mvp_multibit_planes(x, a, *, backend, n: int, k_bits: int,
+                              l_bits: int, fmt_a="int", fmt_x="int"):
+    return _multibit_matmul_planes(x, a, n=n, k_bits=k_bits, l_bits=l_bits,
+                                   fmt_a=fmt_a, fmt_x=fmt_x, backend=backend)
+
+
+def _mode_gf2(x, a, *, backend, n: int):
+    return gf2_matmul_tiled(x, a, n=n, backend=backend)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModeSpec:
+    """One entry of the PPAC mode registry."""
+
+    fn: Callable
+    summary: str
+    paper_section: str
+
+
+MODES: Dict[str, ModeSpec] = {
+    "hamming": ModeSpec(_mode_hamming,
+                        "Hamming similarity h̄ = n - popcount(x^a)", "III-A"),
+    "cam": ModeSpec(_mode_cam,
+                    "CAM δ-match lines (h̄ >= δ), validity-masked", "III-A"),
+    "topk": ModeSpec(_mode_topk,
+                     "fused streaming top-k of h̄ -> (scores, ids)", "III-A"),
+    "mvp_1bit": ModeSpec(_mode_mvp_1bit,
+                         "1-bit MVP, format pairs pm1/01 (eqs. 1-3)", "III-B"),
+    "mvp_multibit": ModeSpec(_mode_mvp_multibit,
+                             "K-bit matrix × L-bit vector integer MVP",
+                             "III-C"),
+    "mvp_multibit_planes": ModeSpec(
+        _mode_mvp_multibit_planes,
+        "multi-bit MVP against a pre-packed K-plane resident matrix",
+        "III-C"),
+    "gf2": ModeSpec(_mode_gf2, "GF(2) MVP (XOR-parity accumulation)", "III-D"),
+}
+
+
+def modes() -> Dict[str, str]:
+    """Mode name -> one-line summary (for docs/CLIs)."""
+    return {name: spec.summary for name, spec in MODES.items()}
+
+
+def ppac_matmul(x, a, *, mode: str, backend: str = "auto", **kwargs):
+    """Run one PPAC operation mode on (x, a) via the mode registry.
+
+    x is the streaming operand ([B, W] packed lanes, or [B, n] integers
+    for the multi-bit modes); a is the resident matrix ([M, W] lanes,
+    [M, n] integers, or [K, M, W] packed planes for
+    'mvp_multibit_planes'). ``backend`` is 'pallas' | 'ref' | 'mxu' |
+    'auto' (native Pallas on TPU, the MXU lowering elsewhere); all three
+    are bit-identical. Mode-specific arguments (``n``, ``k``, ``delta``,
+    ``valid``, ``k_bits``/``l_bits``, ``fmt_a``/``fmt_x``) pass through
+    as keywords.
+    """
+    spec = MODES.get(mode)
+    if spec is None:
+        raise ValueError(
+            f"unknown PPAC mode {mode!r}; available: {sorted(MODES)}")
+    return spec.fn(x, a, backend=resolve_backend(backend), **kwargs)

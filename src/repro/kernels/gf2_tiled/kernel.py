@@ -8,16 +8,12 @@ each), compute
             = parity( sum_w popcount(x[b, w] & a[m, w]) )
 
 for arbitrarily large n = 32·W (n ≫ 256, i.e. many PPAC arrays side by
-side).  The grid streams the lane dimension in [tw] tiles (grid dim 2,
-innermost); each tile contributes the parity of its local AND-popcount and
-the revisited output block *XOR-accumulates* the per-tile parities — the
-TPU analogue of chaining the single-bit GF(2) outputs of adjacent PPAC
-arrays through an XOR tree instead of an adder tree.  Operands stay in
-packed uint32 form throughout; bits are never unpacked to uint8 planes.
-
-The inner broadcast is chunked over rows of the a tile (``row_chunk``) to
-bound the [tb, chunk, tw] popcount intermediate, exactly like binary_mvp
-(the subrow partitioning of Fig. 2).
+side).  The lane-streamed grid comes from :mod:`repro.kernels.tiling`;
+each lane tile contributes the parity of its local AND-popcount and the
+revisited output block *XOR-accumulates* the per-tile parities — the TPU
+analogue of chaining the single-bit GF(2) outputs of adjacent PPAC arrays
+through an XOR tree instead of an adder tree.  Operands stay in packed
+uint32 form throughout; bits are never unpacked to uint8 planes.
 """
 from __future__ import annotations
 
@@ -25,34 +21,23 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
+
+from ..tiling import lane_stream_call, plan_tiles, subrow_popcount_sum
 
 
 def _gf2_matmul_kernel(x_ref, a_ref, o_ref, *, row_chunk: int):
     """x_ref: [tb, tw] uint32; a_ref: [tm, tw] uint32; o_ref: [tb, tm] int32
     holding the running parity (0/1), XOR-accumulated over grid dim 2."""
-    tb, tw = x_ref.shape
-    tm = a_ref.shape[0]
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    x = x_ref[...]  # [tb, tw]
-    a = a_ref[...]  # [tm, tw]
-    n_chunks = tm // row_chunk
-
-    def body(i, acc):
-        a_c = lax.dynamic_slice_in_dim(a, i * row_chunk, row_chunk, axis=0)
-        bits = jnp.bitwise_and(x[:, None, :], a_c[None, :, :])
-        pc = lax.population_count(bits).astype(jnp.int32)  # [tb, chunk, tw]
-        par = jnp.sum(pc, axis=-1) & 1                     # [tb, chunk]
-        return lax.dynamic_update_slice_in_dim(acc, par, i * row_chunk, axis=1)
-
-    tile_par = lax.fori_loop(
-        0, n_chunks, body, jnp.zeros((tb, tm), jnp.int32), unroll=False
-    )
+    tile_par = subrow_popcount_sum(x_ref[...], a_ref[...],
+                                   bit_op=jnp.bitwise_and,
+                                   row_chunk=row_chunk,
+                                   postprocess=lambda p: p & 1)
     o_ref[...] ^= tile_par
 
 
@@ -81,31 +66,8 @@ def gf2_matmul_packed(
     m, w2 = a_packed.shape
     assert w == w2, (w, w2)
 
-    bb = min(block_b, _round_up(b, 8))
-    bm = min(block_m, _round_up(m, 8))
-    bw = min(block_w, _round_up(w, 128))
-    rc = min(row_chunk, bm)
-    while bm % rc:
-        rc -= 1
-
-    bp, mp, wp = _round_up(b, bb), _round_up(m, bm), _round_up(w, bw)
-    x_p = jnp.pad(x_packed.astype(jnp.uint32), ((0, bp - b), (0, wp - w)))
-    a_p = jnp.pad(a_packed.astype(jnp.uint32), ((0, mp - m), (0, wp - w)))
-
-    grid = (bp // bb, mp // bm, wp // bw)
-    out = pl.pallas_call(
-        functools.partial(_gf2_matmul_kernel, row_chunk=rc),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, bw), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bm, bw), lambda i, j, k: (j, k)),
-        ],
-        out_specs=pl.BlockSpec((bb, bm), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((bp, mp), jnp.int32),
-        interpret=interpret,
-    )(x_p, a_p)
-    return out[:b, :m]
-
-
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
+    plan = plan_tiles(b, m, w, block_b=block_b, block_m=block_m,
+                      block_w=block_w, row_chunk=row_chunk)
+    return lane_stream_call(
+        functools.partial(_gf2_matmul_kernel, row_chunk=plan.rc),
+        x_packed, a_packed, plan, interpret=interpret)

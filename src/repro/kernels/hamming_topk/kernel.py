@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from ..tiling import round_up as _round_up
+from ..tiling import subrow_popcount_sum
 from .ref import MASKED_SCORE
 
 _NEG_INIT = -(2**30)       # running-slot init: below every candidate score
@@ -47,22 +49,12 @@ _IDX_SENTINEL = 2**30      # index init / argmin mask: above every row index
 def _tile_scores(x, a, valid, *, n: int, row_chunk: int):
     """Masked similarity scores [tb, tm] of one database tile.
 
-    Chunks the tile's row dimension to bound the [tb, chunk, tw] popcount
-    intermediate (the subrow partitioning of Fig. 2, as in binary_mvp).
+    Chunks the tile's row dimension via the shared
+    :func:`repro.kernels.tiling.subrow_popcount_sum` (the subrow
+    partitioning of Fig. 2, as in binary_mvp).
     """
-    tb = x.shape[0]
-    tm = a.shape[0]
-    n_chunks = tm // row_chunk
-
-    def body(i, s):
-        a_c = lax.dynamic_slice_in_dim(a, i * row_chunk, row_chunk, axis=0)
-        bits = jnp.bitwise_xor(x[:, None, :], a_c[None, :, :])
-        pc = lax.population_count(bits).astype(jnp.int32)
-        part = jnp.sum(pc, axis=-1)  # [tb, chunk]
-        return lax.dynamic_update_slice_in_dim(s, part, i * row_chunk, axis=1)
-
-    s = lax.fori_loop(0, n_chunks, body, jnp.zeros((tb, tm), jnp.int32),
-                      unroll=False)
+    s = subrow_popcount_sum(x, a, bit_op=jnp.bitwise_xor,
+                            row_chunk=row_chunk)
     h = n - s
     return jnp.where(valid > 0, h, MASKED_SCORE)
 
@@ -234,7 +226,3 @@ def hamming_threshold_packed(
         interpret=interpret,
     )(x_p, a_p, v_p)
     return out[:b, :m]
-
-
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult

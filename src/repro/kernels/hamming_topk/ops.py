@@ -23,8 +23,8 @@ from jax import lax
 
 from ...core.backend import auto_interpret as _auto_interpret
 from ...core.formats import unpack_bits
+from ..tiling import round_up as _round_up
 from .kernel import (
-    _round_up,
     hamming_threshold_packed,
     hamming_topk_packed,
 )

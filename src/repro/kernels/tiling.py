@@ -1,0 +1,158 @@
+"""Shared tiling machinery for the PPAC Pallas kernels.
+
+Every PPAC matmul-like kernel in this package streams the same way: packed
+uint32 operands x [.., B, W] and a [.., M, W] are padded up to tile
+multiples, a (B/bb, M/bm, W/bw) grid walks batch × row × lane tiles with
+the lane dimension innermost, and the revisited [bb, bm] int32 output
+block accumulates one contribution per lane tile (integer add for the
+popcount modes, XOR for GF(2) parity). Inside a tile, the row dimension is
+chunked (``row_chunk``) to bound the [bb, chunk, bw] popcount intermediate
+— the TPU analogue of the paper's subrow partitioning (Fig. 2), which
+bounds adder fan-in in hardware and VMEM footprint here.
+
+This module owns that machinery once: tile planning (:func:`plan_tiles`),
+zero-padding (:func:`pad_lanes`), the chunked popcount inner loop
+(:func:`subrow_popcount_sum`) and the canonical lane-streamed
+``pallas_call`` (:func:`lane_stream_call`). The per-mode kernels
+(``binary_mvp``, ``bitserial_mvp``, ``gf2_tiled``) are thin bodies on top;
+``hamming_topk`` reuses the planning + inner loop with its own 2-D grid
+(its output is a running top-k, not a revisited matmul block).
+
+Padding is always with zero lanes, which every mode tolerates by
+construction: XOR of equal zeros and AND against zero both popcount to 0,
+so padded bit-cells never change a sum or flip a parity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# TPU layout friendliness: lane (last) dims in multiples of 128, sublane
+# (second-to-last) dims in multiples of 8.
+LANE_MULTIPLE = 128
+SUBLANE_MULTIPLE = 8
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """Resolved tile geometry for one lane-streamed kernel launch."""
+
+    b: int          # logical batch rows
+    m: int          # logical matrix rows
+    w: int          # logical packed lanes
+    bb: int         # batch tile
+    bm: int         # row tile
+    bw: int         # lane tile
+    rc: int         # subrow chunk (divides bm)
+    bp: int         # padded batch
+    mp: int         # padded rows
+    wp: int         # padded lanes
+
+    @property
+    def grid(self):
+        """(batch tiles, row tiles, lane tiles) — lane dim innermost."""
+        return (self.bp // self.bb, self.mp // self.bm, self.wp // self.bw)
+
+
+def plan_tiles(b: int, m: int, w: int, *, block_b: int = 64,
+               block_m: int = 128, block_w: int = 64,
+               row_chunk: int = 8) -> TilePlan:
+    """Clamp requested block sizes to the (rounded-up) operand shape and
+    derive the padded geometry. ``row_chunk`` is shrunk until it divides
+    the row tile."""
+    bb = min(block_b, round_up(b, SUBLANE_MULTIPLE))
+    bm = min(block_m, round_up(m, SUBLANE_MULTIPLE))
+    bw = min(block_w, round_up(w, LANE_MULTIPLE))
+    rc = min(row_chunk, bm)
+    while bm % rc:
+        rc -= 1
+    return TilePlan(b, m, w, bb, bm, bw, rc,
+                    round_up(b, bb), round_up(m, bm), round_up(w, bw))
+
+
+def pad_lanes(arr, rows_to: int, lanes_to: int) -> jnp.ndarray:
+    """Zero-pad the trailing [rows, lanes] dims of a packed uint32 operand;
+    leading (bit-plane) dims pass through untouched."""
+    arr = jnp.asarray(arr, jnp.uint32)
+    pads = ([(0, 0)] * (arr.ndim - 2)
+            + [(0, rows_to - arr.shape[-2]), (0, lanes_to - arr.shape[-1])])
+    return jnp.pad(arr, pads)
+
+
+def subrow_popcount_sum(x, a, *, bit_op, row_chunk: int, postprocess=None):
+    """S[b, r] = sum_w popcount(bit_op(x[b, w], a[r, w])) over one tile.
+
+    x: [tb, tw] uint32, a: [tm, tw] uint32 -> [tb, tm] int32. The row dim
+    is chunked (``row_chunk`` rows at a time) to bound the [tb, chunk, tw]
+    popcount intermediate — the subrow partitioning of Fig. 2.
+    ``postprocess`` maps each [tb, chunk] int32 partial (e.g. ``& 1`` for
+    GF(2) parity) before it lands in the result.
+    """
+    tb = x.shape[0]
+    tm = a.shape[0]
+    n_chunks = tm // row_chunk
+
+    def body(i, acc):
+        a_c = lax.dynamic_slice_in_dim(a, i * row_chunk, row_chunk, axis=0)
+        bits = bit_op(x[:, None, :], a_c[None, :, :])
+        pc = lax.population_count(bits).astype(jnp.int32)  # [tb, chunk, tw]
+        part = jnp.sum(pc, axis=-1)                        # [tb, chunk]
+        if postprocess is not None:
+            part = postprocess(part)
+        return lax.dynamic_update_slice_in_dim(acc, part, i * row_chunk, axis=1)
+
+    return lax.fori_loop(0, n_chunks, body, jnp.zeros((tb, tm), jnp.int32),
+                         unroll=False)
+
+
+def _x_spec(plan: TilePlan, leading: int):
+    if leading:
+        return pl.BlockSpec((leading, plan.bb, plan.bw),
+                            lambda i, j, k: (0, i, k))
+    return pl.BlockSpec((plan.bb, plan.bw), lambda i, j, k: (i, k))
+
+
+def _a_spec(plan: TilePlan, leading: int):
+    if leading:
+        return pl.BlockSpec((leading, plan.bm, plan.bw),
+                            lambda i, j, k: (0, j, k))
+    return pl.BlockSpec((plan.bm, plan.bw), lambda i, j, k: (j, k))
+
+
+def lane_stream_call(kernel_body, x_packed, a_packed, plan: TilePlan, *,
+                     x_leading: int = 0, a_leading: int = 0,
+                     extra_inputs=(), extra_specs=(),
+                     interpret: bool = False):
+    """Run ``kernel_body`` on the canonical lane-streamed grid.
+
+    Pads the operands per ``plan``, streams x tiles along grid dims (0, 2)
+    and a tiles along (1, 2), hands any ``extra_inputs`` through with their
+    ``extra_specs``, and revisits the [bb, bm] int32 output block across
+    grid dim 2 (the lane stream) — the body must init it at
+    ``pl.program_id(2) == 0`` and accumulate into it. Returns the result
+    cropped back to the logical [b, m].
+
+    ``x_leading``/``a_leading`` carry a bit-plane stack (bitserial MVP):
+    nonzero values make the operand [leading, rows, lanes] with the whole
+    plane stack resident per tile.
+    """
+    x_p = pad_lanes(x_packed, plan.bp, plan.wp)
+    a_p = pad_lanes(a_packed, plan.mp, plan.wp)
+    out = pl.pallas_call(
+        kernel_body,
+        grid=plan.grid,
+        in_specs=[_x_spec(plan, x_leading), _a_spec(plan, a_leading),
+                  *extra_specs],
+        out_specs=pl.BlockSpec((plan.bb, plan.bm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((plan.bp, plan.mp), jnp.int32),
+        interpret=interpret,
+    )(x_p, a_p, *extra_inputs)
+    return out[:plan.b, :plan.m]

@@ -6,10 +6,14 @@ A production-shaped (single-host scaled) server loop:
   * decode runs as one fused batch step over all live requests,
   * finished requests (EOS/length) retire and their slots are refilled
     from the queue — a simple continuous-batching scheduler,
-  * optional PPAC quantized weights / int8 KV via flags.
+  * optional PPAC quantized weights / int8 KV via flags; with
+    ``--serve-quant`` the decode matmuls run on the fused PPAC kernels
+    (packed bitplane weights) and the server reports the emulated PPAC
+    cycle cost per decoded token / per decode step (§III-C accounting).
 
 CLI: PYTHONPATH=src python -m repro.launch.serve --arch smollm_360m \
-        --requests 12 --max-new 16 [--serve-quant] [--kv-int8]
+        --requests 12 --max-new 16 [--serve-quant] [--weight-bits 4] \
+        [--kv-int8]
 """
 from __future__ import annotations
 
@@ -24,7 +28,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig, load_arch
 from ..models import lm
-from ..serve.step import convert_params_for_serving
+from ..serve.step import convert_params_for_serving, serving_cycle_report
 
 
 @dataclasses.dataclass
@@ -123,6 +127,11 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--serve-quant", action="store_true")
+    ap.add_argument("--weight-bits", type=int, default=4,
+                    choices=(1, 2, 3, 4, 8),
+                    help="resident weight precision K for --serve-quant: "
+                         "1/2..4 run the fused PPAC kernels, 8 the int8 "
+                         "MXU fallback")
     ap.add_argument("--kv-int8", action="store_true")
     args = ap.parse_args()
 
@@ -131,12 +140,30 @@ def main():
         cfg = dataclasses.replace(cfg, kv_dtype="int8")
     params, _ = lm.init(cfg, jax.random.PRNGKey(0))
     mode = "float"
+    report = None
     if args.serve_quant:
         cfg = dataclasses.replace(
             cfg, ppac=dataclasses.replace(cfg.ppac, enabled=True,
-                                          weight_bits=8, min_features=32))
+                                          weight_bits=args.weight_bits,
+                                          act_bits=8, min_features=32,
+                                          backend="auto"))
         params = convert_params_for_serving(params, cfg)
         mode = "serve"
+        report = serving_cycle_report(params, cfg)
+        est = report.est_us_per_token()
+        # K/L from the accounting itself: packed1 binarizes activations, so
+        # its bit-serial schedule is 1x1 regardless of act_bits.
+        kl = sorted({(p.k_bits, p.l_bits) for p in report.projections})
+        kl_str = ", ".join(f"K={k}, L={l}" for k, l in kl)
+        print(f"PPAC serving: {report.num_projections} quantized projections "
+              f"({kl_str}), "
+              f"{report.cycles_per_token} emulated cycles/token "
+              f"({report.fused_cycles_per_token} on fused kernels); "
+              f"per decode step of {args.slots} slots: "
+              f"{report.cycles_per_token * args.slots} cycles"
+              + (f", est {est:.1f} us/token at the paper's "
+                 f"{report.config.m}x{report.config.n} clock"
+                 if est is not None else ""))
 
     rng = np.random.default_rng(0)
     server = BatchServer(cfg, params, slots=args.slots, mode=mode)
@@ -150,6 +177,10 @@ def main():
     toks = sum(len(r.out) for r in completed)
     print(f"served {len(completed)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks / dt:.1f} tok/s, slots={args.slots})")
+    if report is not None:
+        print(f"PPAC compute: {toks * report.cycles_per_token} emulated "
+              f"cycles for {toks} decoded tokens "
+              f"({report.cycles_per_token}/token)")
     for r in completed[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
 

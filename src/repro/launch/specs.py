@@ -149,9 +149,11 @@ def _abstract_cache(cfg: ModelConfig, b: int, max_seq: int):
 def _param_shardings(mesh, rules, pshapes, paxes):
     """Shardings for (possibly quantized-container) param trees.
 
-    PPAC containers keep the original weight's logical axes: packed4 wq is
-    [in/2, out] (same axis order, divisibility re-checked by fit_spec);
-    packed1 wq is [out, in/32] (axes reversed); scales follow the out dim.
+    PPAC containers keep the original weight's logical axes: int8/bf16 wq
+    is [in, out] (same axis order, divisibility re-checked by fit_spec);
+    packed1 wq is [out, in/32] (axes reversed, lanes replicated); packed4
+    wq is [K, out, in/32] bitplanes (plane dim replicated); scales follow
+    the out dim.
     """
     from ..core.engine import QuantContainer
 
@@ -170,10 +172,11 @@ def _param_shardings(mesh, rules, pshapes, paxes):
             a_in, a_out = ax[-2], ax[-1]
             if leaf.kind == "packed1":
                 wq_ax = lead + (a_out, None)
+            elif leaf.kind == "packed4":
+                wq_ax = lead + (None, a_out, None)
             else:
                 wq_ax = lead + (a_in, a_out)
-            return QuantContainer(
-                leaf.kind,
+            return leaf.with_children(
                 spec_or_rep(wq_ax, leaf.wq),
                 spec_or_rep(lead + (a_out,), leaf.scale))
         return spec_or_rep(ax, leaf)

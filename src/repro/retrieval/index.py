@@ -42,7 +42,7 @@ from ..core.backend import auto_backend
 from ..core.cost_model import est_latency_us, tiled_scan_merge_cycles
 from ..core.formats import pack_bits, packed_width
 from ..core.ppac import CycleCounter, PPACConfig
-from ..kernels.hamming_topk.ops import hamming_threshold_match, hamming_topk
+from ..kernels.engine import ppac_matmul
 from .sharded import sharded_hamming_topk
 
 
@@ -213,8 +213,8 @@ class CAMIndex:
         be = backend or self.backend
         assert 1 <= k <= self.capacity, (k, self.capacity)
         if mesh is None:
-            scores, idx = hamming_topk(q, codes, n=self.n_bits, k=k,
-                                       valid=valid, backend=be)
+            scores, idx = ppac_matmul(q, codes, mode="topk", n=self.n_bits,
+                                      k=k, valid=valid, backend=be)
             shards = 1
         else:
             scores, idx = sharded_hamming_topk(
@@ -234,9 +234,8 @@ class CAMIndex:
         q = self._pack_queries(queries, queries_packed)
         codes, valid = self._device_arrays()
         d = self.n_bits if delta is None else delta
-        out = hamming_threshold_match(q, codes, n=self.n_bits, delta=d,
-                                      valid=valid,
-                                      backend=backend or self.backend)
+        out = ppac_matmul(q, codes, mode="cam", n=self.n_bits, delta=d,
+                          valid=valid, backend=backend or self.backend)
         self._stats(q.shape[0], 0, threshold_only=True)
         return np.asarray(out[:, : self._high])
 

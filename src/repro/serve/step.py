@@ -3,7 +3,9 @@
 ``convert_params_for_serving`` is the PPAC load path: projection weights
 become resident quantized containers (int8 / packed4 / packed1), exactly
 the paper's weight-stationary premise — the decode memory-roofline lever
-measured in EXPERIMENTS.md §Perf.
+measured in EXPERIMENTS.md §Perf. ``serving_cycle_report`` prices the
+converted model in emulated PPAC cycles per decoded token (the §III-C
+K·L accounting aggregated over every projection of a step).
 """
 from __future__ import annotations
 
@@ -12,9 +14,16 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core.engine import pack_weight_for_serving
+from ..core.cost_model import (
+    ProjectionCost,
+    ServingCycleReport,
+    projection_mvp_cycles,
+)
+from ..core.engine import QuantContainer, pack_weight_for_serving
+from ..core.ppac import PPACConfig
 from ..models import lm
 from ..sharding.rules import ShardingRules
 
@@ -90,3 +99,60 @@ def convert_params_for_serving(params, cfg: ModelConfig):
         return leaf
 
     return jax.tree_util.tree_map_with_path(convert, params)
+
+
+# -- PPAC cycle accounting -----------------------------------------------------
+
+def _container_geometry(c: QuantContainer):
+    """(base_ndim, d_out, d_in) of one (possibly layer-stacked) container."""
+    wq = c.wq
+    if c.kind == "packed1":
+        base, d_out = 2, wq.shape[-2]
+        d_in = c.n_in or wq.shape[-1] * 32
+    elif c.kind == "packed4":
+        base, d_out = 3, wq.shape[-2]
+        d_in = c.n_in or wq.shape[-1] * 32
+    else:  # int8 / bf16: [in, out] rows
+        base, d_out = 2, wq.shape[-1]
+        d_in = c.n_in or wq.shape[-2]
+    return base, d_out, d_in
+
+
+def serving_cycle_report(params, cfg: ModelConfig, *,
+                         config: Optional[PPACConfig] = None,
+                         parallel_arrays: Optional[int] = None
+                         ) -> ServingCycleReport:
+    """Per-token PPAC cycle accounting over every quantized projection.
+
+    Each K-bit container costs K·L tile-grid cycles per streamed token
+    (packed1: K=L=1, one XNOR pass), aggregated across (possibly
+    layer-stacked) projections — a full LM decode step priced in the
+    paper's §III-C accounting. int8 containers run on the MXU fallback,
+    not the fused kernels; they are reported with ``fused=False`` at their
+    would-be K=8 bit-serial cost. bf16 containers are not PPAC-executable
+    and are skipped.
+    """
+    hw = config or PPACConfig()
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, QuantContainer))
+    entries = []
+    for path, leaf in flat:
+        if not isinstance(leaf, QuantContainer) or leaf.kind == "bf16":
+            continue
+        name = "/".join(str(getattr(p, "key", getattr(p, "name", p)))
+                        for p in path)
+        base, d_out, d_in = _container_geometry(leaf)
+        if leaf.kind == "packed1":
+            k_bits, l_bits = 1, 1
+        else:
+            k_bits = leaf.bits or 8
+            l_bits = cfg.ppac.act_bits
+        count = (int(np.prod(leaf.wq.shape[: leaf.wq.ndim - base]))
+                 if leaf.wq.ndim > base else 1)
+        cycles = count * projection_mvp_cycles(
+            d_out, d_in, k_bits, l_bits, hw, parallel_arrays)
+        entries.append(ProjectionCost(
+            name=name, kind=leaf.kind, d_in=d_in, d_out=d_out,
+            k_bits=k_bits, l_bits=l_bits, count=count, cycles=cycles,
+            fused=leaf.kind in ("packed1", "packed4")))
+    return ServingCycleReport(projections=tuple(entries), config=hw)

@@ -1,0 +1,132 @@
+"""Unified kernel engine: the mode registry vs the cycle-exact PPACArray.
+
+Every registry mode must (a) dispatch across all three backends with
+bit-identical results and (b) agree with the paper-faithful emulator —
+the oracle the issue of versatility hangs on (§III, Table I).
+"""
+import numpy as np
+import pytest
+
+from repro.core import formats as F
+from repro.core.ppac import PPACArray, PPACConfig
+from repro.kernels.engine import MODES, modes, ppac_matmul
+
+BACKENDS = ("pallas", "ref", "mxu")
+
+
+@pytest.fixture
+def small_array(rng):
+    m, n = 32, 48
+    a_bits = rng.integers(0, 2, (m, n)).astype(np.uint8)
+    arr = PPACArray(PPACConfig(m=m, n=n, rows_per_bank=16, subrow_bits=16))
+    arr.write(a_bits)
+    return arr, a_bits, m, n
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hamming_mode_vs_oracle(rng, small_array, backend):
+    arr, a_bits, m, n = small_array
+    x_bits = rng.integers(0, 2, (5, n)).astype(np.uint8)
+    got = np.asarray(ppac_matmul(F.pack_bits(x_bits), F.pack_bits(a_bits),
+                                 mode="hamming", n=n, backend=backend))
+    oracle = np.stack([np.asarray(arr.hamming_similarity(x_bits[i]))
+                       for i in range(5)])
+    assert np.array_equal(got, oracle)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_cam_mode_vs_oracle(rng, small_array, backend):
+    arr, a_bits, m, n = small_array
+    x_bits = a_bits[3:4].copy()
+    x_bits[0, :4] ^= 1  # 4 flipped bits
+    xp, ap = F.pack_bits(x_bits), F.pack_bits(a_bits)
+    for delta in (None, n - 4, n - 3):
+        got = np.asarray(ppac_matmul(xp, ap, mode="cam", n=n, delta=delta,
+                                     backend=backend))
+        oracle = np.asarray(arr.cam_match(x_bits[0], delta=delta))
+        assert np.array_equal(got[0].astype(bool), oracle), delta
+
+
+@pytest.mark.parametrize("fmt_a", ["pm1", "01"])
+@pytest.mark.parametrize("fmt_x", ["pm1", "01"])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mvp_1bit_all_format_pairs_vs_oracle(rng, small_array, fmt_a, fmt_x,
+                                             backend):
+    arr, a_bits, m, n = small_array
+    x_bits = rng.integers(0, 2, (4, n)).astype(np.uint8)
+    got = np.asarray(ppac_matmul(F.pack_bits(x_bits), F.pack_bits(a_bits),
+                                 mode="mvp_1bit", n=n, fmt_a=fmt_a,
+                                 fmt_x=fmt_x, backend=backend))
+    oracle = np.stack([np.asarray(arr.mvp_1bit(x_bits[i], fmt_a, fmt_x))
+                       for i in range(4)])
+    assert np.array_equal(got, oracle), (fmt_a, fmt_x)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_gf2_mode_vs_oracle(rng, small_array, backend):
+    arr, a_bits, m, n = small_array
+    x_bits = rng.integers(0, 2, (5, n)).astype(np.uint8)
+    got = np.asarray(ppac_matmul(F.pack_bits(x_bits), F.pack_bits(a_bits),
+                                 mode="gf2", n=n, backend=backend))
+    oracle = np.stack([np.asarray(arr.gf2_mvp(x_bits[i])) for i in range(5)])
+    assert np.array_equal(got, oracle)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mvp_multibit_mode_vs_oracle(rng, backend):
+    m, n, k, l = 16, 24, 3, 4
+    a = rng.integers(-(2 ** (k - 1)), 2 ** (k - 1), (m, n))
+    x = rng.integers(-(2 ** (l - 1)), 2 ** (l - 1), (3, n))
+    got = np.asarray(ppac_matmul(x, a, mode="mvp_multibit", k_bits=k,
+                                 l_bits=l, backend=backend))
+    arr = PPACArray(PPACConfig(m=m, n=n))
+    oracle = np.stack([np.asarray(arr.mvp_multibit(a, x[i], k, l))
+                       for i in range(3)])
+    assert np.array_equal(got, oracle)
+    assert np.array_equal(got, x @ a.T)
+
+
+@pytest.mark.parametrize("fmt_a,fmt_x", [("int", "int"), ("uint", "uint"),
+                                         ("oddint", "int"),
+                                         ("oddint", "oddint")])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mvp_multibit_planes_matches_int_mode(rng, backend, fmt_a, fmt_x):
+    # odd n exercises the shape-derived mask lane of the nonzero-offset
+    # (oddint) formats: its padding bits must stay zero
+    m, n, k, l = 20, 51, 4, 3
+    la, ha = F.value_range(fmt_a, k)
+    lx, hx = F.value_range(fmt_x, l)
+    a = rng.choice(np.arange(la, ha + 1, 2 if fmt_a == "oddint" else 1),
+                   size=(m, n))
+    x = rng.choice(np.arange(lx, hx + 1, 2 if fmt_x == "oddint" else 1),
+                   size=(4, n))
+    a_planes = F.pack_planes(a, k, F.fmt(fmt_a))  # [K, M, W]
+    got = np.asarray(ppac_matmul(x, a_planes, mode="mvp_multibit_planes",
+                                 n=n, k_bits=k, l_bits=l, fmt_a=fmt_a,
+                                 fmt_x=fmt_x, backend=backend))
+    assert np.array_equal(got, x @ a.T), (fmt_a, fmt_x)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_topk_mode_agrees_with_cam_scores(rng, backend):
+    n, m = 64, 40
+    a_bits = rng.integers(0, 2, (m, n)).astype(np.uint8)
+    x_bits = rng.integers(0, 2, (3, n)).astype(np.uint8)
+    xp, ap = F.pack_bits(x_bits), F.pack_bits(a_bits)
+    scores, ids = ppac_matmul(xp, ap, mode="topk", n=n, k=5, backend=backend)
+    h = (x_bits[:, None, :] == a_bits[None, :, :]).sum(-1)
+    best = np.sort(h, axis=1)[:, ::-1][:, :5]
+    assert np.array_equal(np.asarray(scores), best)
+    assert np.array_equal(np.asarray(scores),
+                          np.take_along_axis(h, np.asarray(ids), axis=1))
+
+
+def test_registry_surface():
+    listed = modes()
+    assert set(listed) == set(MODES)
+    for want in ("hamming", "cam", "topk", "mvp_1bit", "mvp_multibit",
+                 "mvp_multibit_planes", "gf2"):
+        assert want in listed
+    with pytest.raises(ValueError, match="unknown PPAC mode"):
+        ppac_matmul(np.zeros((1, 1), np.uint32), np.zeros((1, 1), np.uint32),
+                    mode="nope")

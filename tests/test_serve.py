@@ -8,8 +8,13 @@ import pytest
 
 from repro.configs import load_arch
 from repro.core.engine import QuantContainer
+from repro.core.ppac import PPACConfig
 from repro.models import lm
-from repro.serve.step import convert_params_for_serving, greedy_generate
+from repro.serve.step import (
+    convert_params_for_serving,
+    greedy_generate,
+    serving_cycle_report,
+)
 
 
 def test_greedy_generate_shapes():
@@ -60,6 +65,35 @@ def test_quantized_decode_close_to_float(bits):
     # top-1 agreement on most positions
     agree = (lf.argmax(-1) == lq.argmax(-1)).mean()
     assert agree > 0.7, agree
+
+
+@pytest.mark.parametrize("bits,kind,kl", [(1, "packed1", 1), (4, "packed4", 32)])
+def test_serving_cycle_report(bits, kind, kl):
+    cfg = load_arch("stablelm_12b").smoke()
+    cfg = dataclasses.replace(
+        cfg, ppac=dataclasses.replace(cfg.ppac, enabled=True,
+                                      weight_bits=bits, act_bits=8,
+                                      min_features=32))
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    served = convert_params_for_serving(params, cfg)
+    rep = serving_cycle_report(served, cfg)
+    assert rep.num_projections > 0
+    assert rep.cycles_per_token > 0
+    # every converted projection runs on the fused kernels
+    assert all(p.fused and p.kind == kind for p in rep.projections)
+    assert rep.fused_cycles_per_token == rep.cycles_per_token
+    # K*L plane-pair passes per tile-grid scan (packed1: one XNOR pass)
+    one = rep.projections[0]
+    assert one.k_bits * one.l_bits == kl
+    assert rep.est_us_per_token() is not None  # 256x256 is in Table II
+    d = rep.as_dict()
+    assert d["cycles_per_token"] == rep.cycles_per_token
+    # a 16x16 array needs strictly more tile-grid scans than the default
+    # 256x256 for this model's projections — guards that the geometry
+    # actually flows into the accounting
+    tiny = serving_cycle_report(served, cfg,
+                                config=PPACConfig(m=16, n=16))
+    assert tiny.cycles_per_token > rep.cycles_per_token
 
 
 def test_quantized_generation_runs():
