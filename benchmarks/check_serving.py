@@ -1,0 +1,80 @@
+"""CI gate on the serving-benchmark JSON: the zero-repack fast path must
+actually be fast.
+
+Two checks over the ``serving`` rows of a ``benchmarks.run --json`` file:
+
+  1. fused <= tol * int8 — the packed containers routed through the PPAC
+     engine must not lose to the plain int8 MXU fallback at smoke scale
+     (the pre-PR fused path was ~3x slower: per-call unpacking of the
+     resident planes; the default tolerance leaves headroom for
+     row-to-row timing drift on shared CI runners while still catching
+     that class of regression);
+  2. prepack >= speedup * fast — the fast path must beat the pre-PR
+     per-projection / per-call-repack layout by the acceptance margin.
+
+Usage: python -m benchmarks.check_serving BENCH.json [--tol 1.6]
+       [--speedup 1.5]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+
+def _rows(path):
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in data
+            if r.get("module", "serving") == "serving"}
+
+
+def check(path: str, *, tol: float = 1.6, speedup: float = 1.5) -> int:
+    rows = _rows(path)
+
+    def find(tag):
+        pat = re.compile(rf"_{re.escape(tag)}_b\d+$")
+        hits = [us for name, us in rows.items() if pat.search(name)]
+        if not hits:
+            raise SystemExit(f"no serving row matching '_{tag}_b*' in "
+                             f"{path}; have {sorted(rows)}")
+        return hits[0]
+
+    int8 = find("int8")
+    failures = []
+    for kind in ("packed4", "packed1"):
+        fast = find(kind)
+        prepack = find(f"{kind}_prepack")
+        if fast > tol * int8:
+            failures.append(
+                f"{kind} fast path {fast:.1f}us is slower than "
+                f"{tol:.2f}x the int8 MXU fallback ({int8:.1f}us)")
+        ratio = prepack / fast
+        if ratio < speedup:
+            failures.append(
+                f"{kind} fast path only {ratio:.2f}x faster than the "
+                f"prepack path ({fast:.1f}us vs {prepack:.1f}us; "
+                f"need >= {speedup:.2f}x)")
+        print(f"{kind}: fast {fast:.1f}us, prepack {prepack:.1f}us "
+              f"({ratio:.2f}x), int8 {int8:.1f}us")
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("json_path")
+    ap.add_argument("--tol", type=float, default=1.6,
+                    help="fused may be at most this factor of int8 "
+                         "(the pre-PR repack path sat at 3-4x; the margin "
+                         "absorbs shared-runner timing drift between rows)")
+    ap.add_argument("--speedup", type=float, default=1.5,
+                    help="required fast-vs-prepack speedup")
+    args = ap.parse_args(argv)
+    return check(args.json_path, tol=args.tol, speedup=args.speedup)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,26 +14,38 @@ Serving weight containers (memory-roofline lever, see EXPERIMENTS.md §Perf):
 
   bf16     : [in, out] bf16                       (baseline)
   int8     : [in, out] int8 + scale               (K<=8; MXU dot)
-  packed4  : [K, out, in/32] uint32 bitplanes     (K<=4; fused bit-serial
-             kernel — the resident layout IS the kernel operand)
-  packed1  : [out, in/32] uint32 bitplanes        (K=1; XNOR-popcount kernel)
+  packed4  : [K1, out, in/32] uint32 bitplanes    (K<=4; fused bit-serial
+             kernel — the resident layout IS the kernel operand; offset
+             formats store their all-ones mask plane as the K+1-th plane)
+  packed1  : [out, in/32] uint32 bitplanes        (K=1; ±1 plane)
 
-The packed kinds execute through the unified kernel engine
-(``repro.kernels.engine.ppac_matmul``): packed1 via the 1-bit ±1 MVP mode,
-packed4 via the fused multi-bit plane-pair kernel against the pre-packed
-resident planes — no unpack-to-int8 ``dot_general`` fallback. All integer
-paths are bit-true (int32 accumulation) — the property the paper holds
-over mixed-signal PIM (§III-D) — and bit-identical across the
-'pallas'/'ref'/'mxu' backends.
+The zero-repack invariant: everything a lowering consumes is materialized
+ONCE at load time ("writing the latch array") and a serving call only
+streams activations. The packed kinds execute through the unified kernel
+engine's ``mvp_multibit_resident`` mode — activations are bit-sliced
+*inside* the Pallas body; nothing is ever concatenated onto or broadcast
+over the resident planes at call time. Off-TPU, the MXU lowering consumes
+an int8 *shadow* of the same integers, also built at load time (the
+per-lowering analogue of loading the array), so no backend unpacks the
+resident weight per call. All integer paths are bit-true (int32
+accumulation) — the property the paper holds over mixed-signal PIM
+(§III-D) — and bit-identical across the 'pallas'/'ref'/'mxu' backends.
+
+Grouped containers (``splits``) stack several projections that share an
+input (wq/wk/wv, wi/wg) column-wise into ONE resident container; per-
+output-channel quantization makes the stacked container bit-identical to
+the per-projection ones, while a decode step launches one fat kernel per
+group instead of one per projection (``serve_dense_grouped``).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..kernels.engine import ppac_matmul
+from .formats import fmt as _fmt
 from .formats import pack_bits, to_bitplanes
 from .quant import binarize_pm1, fake_quant, quantize
 
@@ -41,35 +53,47 @@ from .quant import binarize_pm1, fake_quant, quantize
 @jax.tree_util.register_pytree_node_class
 class QuantContainer:
     """Resident quantized weight: arrays are pytree children; ``kind`` plus
-    the quantization metadata (``bits``, ``fmt``, logical ``n_in``) are
-    static aux data, so jit specializes on the container format."""
+    the quantization metadata (``bits``, ``fmt``, logical ``n_in``, the
+    grouped-projection ``splits``) are static aux data, so jit specializes
+    on the container format. ``shadow`` is the optional load-time int8
+    resident for the MXU lowering (None on TPU, where the packed planes
+    are the native operand)."""
 
     def __init__(self, kind: str, wq, scale, *, bits: Optional[int] = None,
-                 fmt: Optional[str] = None, n_in: Optional[int] = None):
+                 fmt: Optional[str] = None, n_in: Optional[int] = None,
+                 shadow=None, splits: Optional[Tuple[int, ...]] = None):
         self.kind = kind
         self.wq = wq
         self.scale = scale
         self.bits = bits
         self.fmt = fmt
         self.n_in = n_in
+        self.shadow = shadow
+        self.splits = tuple(splits) if splits else None
 
     def tree_flatten(self):
-        return (self.wq, self.scale), (self.kind, self.bits, self.fmt,
-                                       self.n_in)
+        return (self.wq, self.scale, self.shadow), (self.kind, self.bits,
+                                                    self.fmt, self.n_in,
+                                                    self.splits)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        kind, bits, fmt, n_in = aux
-        return cls(kind, *children, bits=bits, fmt=fmt, n_in=n_in)
+        kind, bits, fmt, n_in, splits = aux
+        wq, scale, shadow = children
+        return cls(kind, wq, scale, bits=bits, fmt=fmt, n_in=n_in,
+                   shadow=shadow, splits=splits)
 
-    def with_children(self, wq, scale) -> "QuantContainer":
+    def with_children(self, wq, scale, shadow=None) -> "QuantContainer":
         """Same kind/metadata, different payloads (sharding specs etc.)."""
         return QuantContainer(self.kind, wq, scale, bits=self.bits,
-                              fmt=self.fmt, n_in=self.n_in)
+                              fmt=self.fmt, n_in=self.n_in, shadow=shadow,
+                              splits=self.splits)
 
     def __repr__(self):
         return (f"QuantContainer({self.kind}, bits={self.bits}, "
-                f"wq={getattr(self.wq, 'shape', None)})")
+                f"wq={getattr(self.wq, 'shape', None)}"
+                + (f", splits={self.splits}" if self.splits else "")
+                + (", shadow" if self.shadow is not None else "") + ")")
 
 
 def qat_dense(x, w, *, weight_bits: int, act_bits: int,
@@ -84,39 +108,69 @@ def qat_dense(x, w, *, weight_bits: int, act_bits: int,
     return jnp.einsum("...i,io->...o", xq, wq).astype(x.dtype)
 
 
+def _want_shadow(store_shadow: Optional[bool]) -> bool:
+    """Shadow policy: explicit wins; default stores the int8 resident only
+    off-TPU (on TPU the packed planes are what the kernels eat)."""
+    if store_shadow is not None:
+        return store_shadow
+    return jax.default_backend() != "tpu"
+
+
+def _format_has_offset(weight_format: str) -> bool:
+    from ..kernels.bitserial_mvp.ops import format_needs_mask
+    return format_needs_mask(_fmt(weight_format))
+
+
 def pack_weight_for_serving(w, *, weight_bits: int,
-                            weight_format: str = "int") -> QuantContainer:
+                            weight_format: str = "int",
+                            splits: Optional[Sequence[int]] = None,
+                            store_shadow: Optional[bool] = None
+                            ) -> QuantContainer:
     """Offline conversion of a float [in, out] weight to a resident
     quantized container (run once at model load, like writing the PPAC
     latch array).
 
-    1-bit weights become one packed XNOR plane; 2..4-bit weights become K
+    1-bit weights become one packed ±1 plane; 2..4-bit weights become K
     packed logical bitplanes [K, out, in/32] — the exact operand layout of
-    the fused bit-serial kernel, so serving streams activations against
-    the resident planes with no per-call weight reshaping. 5..8 bits fall
-    back to int8 rows (MXU dot); wider requests keep bf16.
+    the fused bit-serial kernel — plus a constant all-ones mask plane when
+    the format carries an affine offset (oddint), so the serving kernels
+    never synthesize one at call time. Off-TPU an int8 shadow of the same
+    integers is stored for the MXU lowering (zero per-call unpacking on
+    every backend). 5..8 bits fall back to int8 rows (MXU dot); wider
+    requests keep bf16. ``splits`` records grouped-projection output
+    widths (see ``serve_dense_grouped``).
     """
     n_in = w.shape[0]
+    splits = tuple(splits) if splits else None
     w = w.astype(jnp.float32)
     if weight_bits == 1:
         q, s = binarize_pm1(w, axis=0)              # q in {±1}, s [1, out]
         bits = ((q + 1) / 2).astype(jnp.uint8)      # logical levels
         packed = pack_bits(bits.T)                  # [out, in/32] u32
+        shadow = q.astype(jnp.int8) if _want_shadow(store_shadow) else None
         return QuantContainer("packed1", packed, s[0], bits=1, fmt="pm1",
-                              n_in=n_in)
+                              n_in=n_in, shadow=shadow, splits=splits)
     if weight_bits > 8:
         return QuantContainer("bf16", w.astype(jnp.bfloat16),
                               jnp.ones((w.shape[1],), jnp.float32),
-                              bits=16, fmt="float", n_in=n_in)
+                              bits=16, fmt="float", n_in=n_in, splits=splits)
     q, s = quantize(w, weight_bits, weight_format, axis=0)  # s [1, out]
     if weight_bits <= 4:
         a_int = q.T.astype(jnp.int32)               # [out, in] exact ints
         planes = to_bitplanes(a_int, weight_bits, weight_format)
-        packed = pack_bits(planes)                  # [K, out, in/32] u32
+        if _format_has_offset(weight_format):
+            # resident all-ones mask plane: the affine-offset cross terms
+            # (eqs. (2)/(3) generalized) ride an ordinary K+1-th plane
+            # instead of a per-call concatenation
+            mask = jnp.ones((1,) + a_int.shape, jnp.uint8)
+            planes = jnp.concatenate([planes, mask], axis=0)
+        packed = pack_bits(planes)                  # [K1, out, in/32] u32
+        shadow = q.astype(jnp.int8) if _want_shadow(store_shadow) else None
         return QuantContainer("packed4", packed, s[0], bits=weight_bits,
-                              fmt=weight_format, n_in=n_in)
+                              fmt=weight_format, n_in=n_in, shadow=shadow,
+                              splits=splits)
     return QuantContainer("int8", q.astype(jnp.int8), s[0], bits=weight_bits,
-                          fmt=weight_format, n_in=n_in)
+                          fmt=weight_format, n_in=n_in, splits=splits)
 
 
 def serve_dense_acc(xf, container: QuantContainer, *, act_bits: int,
@@ -126,21 +180,28 @@ def serve_dense_acc(xf, container: QuantContainer, *, act_bits: int,
     xf: [B, in] float32 activations. Returns (acc [B, out] int32,
     act_scale [B, 1] float32) — the raw PPAC row-ALU results before
     dequantization, bit-identical across backends for the packed kinds.
+    Packed kinds run the zero-repack resident mode: in-kernel activation
+    bit-slicing on 'pallas', the load-time int8 shadow on 'mxu'.
     """
     kind = container.kind
+    n = xf.shape[-1]
     if kind == "packed1":
         xq, xs = binarize_pm1(xf, axis=-1)          # {±1} activations
-        xbits = ((xq + 1) / 2).astype(jnp.uint8)
-        xp = pack_bits(xbits)
-        acc = ppac_matmul(xp, container.wq, mode="mvp_1bit",
-                          n=xf.shape[-1], backend=backend)  # [B, out] int32
+        # ±1 ≡ oddint(1): the packed1 plane serves through the same fused
+        # resident kernel as packed4, with a 1x1 plane-pair schedule
+        acc = ppac_matmul(xq.astype(jnp.int32), container.wq[None],
+                          mode="mvp_multibit_resident", n=n, k_bits=1,
+                          l_bits=1, fmt_a="oddint", fmt_x="oddint",
+                          a_int8=container.shadow, backend=backend)
         return acc, xs
     xq, xs = quantize(xf, act_bits, act_format, axis=-1)
     if kind == "packed4":
+        a_has_mask = container.wq.shape[-3] == (container.bits or 0) + 1
         acc = ppac_matmul(xq.astype(jnp.int32), container.wq,
-                          mode="mvp_multibit_planes", n=xf.shape[-1],
+                          mode="mvp_multibit_resident", n=n,
                           k_bits=container.bits, l_bits=act_bits,
                           fmt_a=container.fmt, fmt_x=act_format,
+                          a_has_mask=a_has_mask, a_int8=container.shadow,
                           backend=backend)
         return acc, xs
     if kind == "int8":
@@ -166,3 +227,25 @@ def serve_dense(x, container: QuantContainer, *, act_bits: int,
                                   act_format=act_format, backend=backend)
         y = acc.astype(jnp.float32) * xs * scale[None, :]
     return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
+
+
+def serve_dense_grouped(x, container: QuantContainer, *, act_bits: int,
+                        act_format: str = "int", backend: str = "mxu"):
+    """One fused projection for a grouped container, split back into the
+    member projections' outputs.
+
+    The container stacks several same-input projections column-wise
+    (``splits`` records the member output widths): activations quantize
+    ONCE and one fat kernel launch covers the whole group — halving decode
+    launches for wq/wk/wv (+ wi/wg) — while per-output-channel scales keep
+    each slice bit-identical to its standalone projection.
+    """
+    if not container.splits:
+        raise ValueError("serve_dense_grouped needs a container with splits")
+    y = serve_dense(x, container, act_bits=act_bits, act_format=act_format,
+                    backend=backend)
+    outs, off = [], 0
+    for width in container.splits:
+        outs.append(jax.lax.slice_in_dim(y, off, off + width, axis=-1))
+        off += width
+    return tuple(outs)

@@ -60,12 +60,14 @@ def representable(f: NumberFormat, bits: int, x) -> jnp.ndarray:
     return ok
 
 
-def to_bitplanes(x, bits: int, f: NumberFormat = NumberFormat.INT) -> jnp.ndarray:
-    """Decompose integer array ``x`` into logical bitplanes.
+def to_levels(x, bits: int, f: NumberFormat = NumberFormat.INT) -> jnp.ndarray:
+    """Integer values -> L-bit logical level codes u (plane l = (u >> l) & 1).
 
-    Returns uint8 array of shape ``(bits,) + x.shape`` with plane 0 = LSB.
-    Planes hold the *logical levels* (0/1), which for oddint means
-    level 1 encodes +1 and level 0 encodes -1 in that plane.
+    The level code is the nonnegative integer whose binary digits are the
+    logical plane levels of Table I; it is what the in-kernel bit-slicing
+    path streams (uint32, one shift/AND per plane inside the kernel).
+    Note a *value* of 0 does not map to a zero level code for oddint —
+    zero-padding must happen in the level-code domain.
     """
     f = fmt(f)
     x = jnp.asarray(x, jnp.int32)
@@ -77,6 +79,17 @@ def to_bitplanes(x, bits: int, f: NumberFormat = NumberFormat.INT) -> jnp.ndarra
         u = jnp.where(x < 0, x + 2**bits, x)  # 2's complement bits
     else:
         u = x
+    return u.astype(jnp.uint32)
+
+
+def to_bitplanes(x, bits: int, f: NumberFormat = NumberFormat.INT) -> jnp.ndarray:
+    """Decompose integer array ``x`` into logical bitplanes.
+
+    Returns uint8 array of shape ``(bits,) + x.shape`` with plane 0 = LSB.
+    Planes hold the *logical levels* (0/1), which for oddint means
+    level 1 encodes +1 and level 0 encodes -1 in that plane.
+    """
+    u = to_levels(x, bits, f)
     planes = [(u >> l) & 1 for l in range(bits)]
     return jnp.stack(planes).astype(jnp.uint8)
 

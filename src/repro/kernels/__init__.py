@@ -7,7 +7,9 @@ tiling        — shared machinery: pad-to-tile planning, lane-tile
                 streaming, ``row_chunk`` subrow chunking
 binary_mvp    — packed 1-bit XNOR/AND popcount matmul (modes III-A/B/D/E)
 bitserial_mvp — fused multi-bitplane MVP (mode III-C, all Table-I formats;
-                ``ppac_matmul_planes`` serves pre-packed resident weights)
+                ``ppac_matmul_planes`` serves pre-packed resident weights,
+                ``ppac_matmul_resident`` is the zero-repack decode fast
+                path with in-kernel activation bit-slicing)
 hamming_topk  — fused streaming Hamming top-k / CAM δ-match (mode III-A
                 associative retrieval at scale; never materializes [B, M])
 gf2_tiled     — tiled GF(2) matmul with XOR-parity accumulation across
@@ -24,6 +26,7 @@ from .binary_mvp.ops import (  # noqa: F401
 from .bitserial_mvp.ops import (  # noqa: F401
     ppac_cycles,
     ppac_matmul_planes,
+    ppac_matmul_resident,
 )
 from .bitserial_mvp.ops import ppac_matmul as multibit_matmul  # noqa: F401
 from .engine import MODES, modes, ppac_matmul  # noqa: F401

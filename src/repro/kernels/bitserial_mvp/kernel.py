@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused multi-bitplane (bit-serial) MVP — paper §III-C.
+"""Pallas TPU kernels: fused multi-bitplane (bit-serial) MVP — paper §III-C.
 
 PPAC computes a K-bit-matrix × L-bit-vector MVP over K*L clock cycles of
 1-bit AND/XNOR popcounts with shift-add accumulation in the two row-ALU
@@ -9,10 +9,28 @@ accumulator lives in VMEM across the lane-tile grid dimension, and each
     y[b, m] = sum_{k<K1} sum_{l<L1} W[k, l] * sum_w popcount(a[k,m,w] & x[l,b,w])
 
 The plane-pair weight matrix W encodes the entire number-format algebra
-(Table I + eqs. (2)/(3) offsets): signed (int) MSB planes get negative
-weights, and oddint's affine offset is folded in by appending a constant
-"mask" plane (the all-valid-bits vector) — the exact generalization of the
-paper's h̄(a, 1)/h̄(a, 0) offset trick. See ops.py for the construction.
+(Table I + eqs. (2)/(3) offsets). Affine offsets (oddint's -(2^L - 1), the
+eq. (2)/(3) precompute) ride in an *extended* [K1+1, L1+1] weight matrix
+instead of concatenated mask planes:
+
+    W_ext[k, L1]   weights popcount(a_k)[m]   (x-side all-ones mask folded
+                                               into the resident planes —
+                                               padding lanes are zero, so
+                                               popcount(a & 1...1) == popcount(a))
+    W_ext[K1, l]   weights popcount(x_l)[b]   (a-side mask, same argument)
+    W_ext[K1, L1]  a constant added once per output block
+
+so no kernel launch ever concatenates or broadcasts onto the resident
+[K, M, W] weight — the zero-repack invariant of the serving fast path.
+A resident weight *may* carry a stored mask plane (packed at load time by
+``core.engine.pack_weight_for_serving`` for offset formats); it is just an
+ordinary K1-th plane here.
+
+``bitserial_matmul_sliced`` is the decode fast path: the streaming operand
+arrives as L-bit *level codes* (uint32, bit-transposed to [32, B, W]) and
+the per-plane packed words are built inside the kernel body with one
+shift/AND per plane — no ``to_bitplanes``/``pack_bits`` XLA round trip
+around the launch.
 
 Tiling, padding, lane streaming and the ``row_chunk`` subrow chunking all
 come from :mod:`repro.kernels.tiling`: the plane stacks ride along as
@@ -25,64 +43,186 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from jax import lax
 from jax.experimental import pallas as pl
 
-from ..tiling import lane_stream_call, plan_tiles, subrow_popcount_sum
+from ..tiling import lane_stream_call, plan_for, subrow_popcount_sum
 
 
-def _bitserial_kernel(x_ref, a_ref, w_ref, o_ref, *, k1: int, l1: int,
-                      row_chunk: int):
-    """x_ref [l1, tb, tw] u32; a_ref [k1, tm, tw] u32; w_ref [k1, l1] i32;
-    o_ref [tb, tm] i32 (accumulated over the lane grid dim)."""
-    _, tb, _ = x_ref.shape
-    tm = a_ref.shape[1]
+def _lane_popcount_rows(tile):
+    """[rows, tw] uint32 -> [rows] int32 total set bits of this lane tile."""
+    return jnp.sum(lax.population_count(tile).astype(jnp.int32), axis=-1)
+
+
+def _accumulate_bitserial(x_of, a_ref, w_ref, o_ref, *, k1: int, l1: int,
+                          row_chunk: int, pop_a: bool, pop_x: bool,
+                          const: bool):
+    """Shared body: x plane ``l`` is ``x_of(l)`` [tb, tw]; a_ref holds the
+    resident [k1, tm, tw] plane stack; w_ref is the extended [k1+1, l1+1]
+    weight matrix (see module docstring)."""
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        if const:
+            # the offset·offset constant lands once per output block
+            o_ref[...] = jnp.full(o_ref.shape, w_ref[k1, l1], jnp.int32)
+        else:
+            o_ref[...] = jnp.zeros_like(o_ref)
 
+    tb = x_of(0).shape[0]
+    tm = a_ref.shape[1]
     acc = jnp.zeros((tb, tm), jnp.int32)
     for k in range(k1):          # static unroll: K1*L1 <= ~36 "cycles"
         a_k = a_ref[k]           # [tm, tw]
+        if pop_a:
+            acc = acc + w_ref[k, l1] * _lane_popcount_rows(a_k)[None, :]
         for l in range(l1):
-            s_kl = subrow_popcount_sum(x_ref[l], a_k,
+            s_kl = subrow_popcount_sum(x_of(l), a_k,
                                        bit_op=jnp.bitwise_and,
                                        row_chunk=row_chunk)
             acc = acc + w_ref[k, l] * s_kl
+    if pop_x:
+        for l in range(l1):
+            acc = acc + w_ref[k1, l] * _lane_popcount_rows(x_of(l))[:, None]
     o_ref[...] += acc
+
+
+def _bitserial_kernel(x_ref, a_ref, w_ref, o_ref, *, k1: int, l1: int,
+                      row_chunk: int, pop_a: bool, pop_x: bool, const: bool):
+    """x_ref [l1, tb, tw] u32 packed planes; a_ref [k1, tm, tw] u32;
+    w_ref [k1+1, l1+1] i32; o_ref [tb, tm] i32 (lane-grid accumulated)."""
+    _accumulate_bitserial(lambda l: x_ref[l], a_ref, w_ref, o_ref,
+                          k1=k1, l1=l1, row_chunk=row_chunk,
+                          pop_a=pop_a, pop_x=pop_x, const=const)
+
+
+def _bitserial_sliced_kernel(u_ref, a_ref, w_ref, o_ref, *, k1: int, l1: int,
+                             row_chunk: int, pop_a: bool, pop_x: bool,
+                             const: bool):
+    """In-kernel bit-slicing body. u_ref [32, tb, tw] u32 holds level codes
+    bit-transposed (u_ref[t, b, w] = level code of logical bit 32w+t); each
+    of the l1 packed activation planes is built with one shift/AND and a
+    shift-weighted reduce over the 32 bit positions — the streaming operand
+    never round-trips through XLA bitplanes."""
+    shifts = (jnp.uint32(1) << lax.broadcasted_iota(jnp.uint32, (32, 1, 1), 0))
+    u = u_ref[...]
+    x_planes = [
+        jnp.sum(((u >> jnp.uint32(l)) & jnp.uint32(1)) * shifts,
+                axis=0, dtype=jnp.uint32)
+        for l in range(l1)
+    ]
+    _accumulate_bitserial(lambda l: x_planes[l], a_ref, w_ref, o_ref,
+                          k1=k1, l1=l1, row_chunk=row_chunk,
+                          pop_a=pop_a, pop_x=pop_x, const=const)
+
+
+def _normalize_weights(weights, k1: int, l1: int, pop_a, pop_x, const):
+    """Accept a plain [k1, l1] plane-pair matrix (pad a zero mask row/col)
+    or an extended [k1+1, l1+1] one. Returns (w_ext, pop_a, pop_x, const)
+    with unspecified flags resolved conservatively."""
+    weights = jnp.asarray(weights, jnp.int32)
+    if weights.shape == (k1, l1):
+        weights = jnp.pad(weights, ((0, 1), (0, 1)))
+        flags = (False, False, False)
+    elif weights.shape == (k1 + 1, l1 + 1):
+        flags = (True, True, True)  # unknown contents: keep every term
+    else:
+        raise ValueError(f"weights shape {weights.shape} matches neither "
+                         f"[{k1},{l1}] nor [{k1 + 1},{l1 + 1}]")
+    pop_a = flags[0] if pop_a is None else pop_a
+    pop_x = flags[1] if pop_x is None else pop_x
+    const = flags[2] if const is None else const
+    return weights, pop_a, pop_x, const
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_b", "block_m", "block_w", "row_chunk", "interpret"),
+    static_argnames=("pop_a", "pop_x", "const", "block_b", "block_m",
+                     "block_w", "row_chunk", "interpret"),
 )
 def bitserial_matmul_packed(
     x_planes,
     a_planes,
     weights,
     *,
-    block_b: int = 64,
-    block_m: int = 128,
-    block_w: int = 32,
-    row_chunk: int = 8,
+    pop_a=None,
+    pop_x=None,
+    const=None,
+    block_b=None,
+    block_m=None,
+    block_w=None,
+    row_chunk=None,
     interpret: bool = False,
 ):
-    """y[b,m] = sum_{k,l} W[k,l] * sum_w popcount(a[k,m,w] & x[l,b,w]).
+    """y[b,m] = sum_{k,l} W[k,l] * sum_w popcount(a[k,m,w] & x[l,b,w])
+    (+ the extended popcount/constant terms when W is [K1+1, L1+1]).
 
-    x_planes: [L1, B, W] uint32; a_planes: [K1, M, W] uint32;
-    weights: [K1, L1] int32. Returns [B, M] int32. Padding lanes must be 0
-    in every plane (AND with 0 contributes nothing).
+    x_planes: [L1, B, W] uint32; a_planes: [K1, M, W] uint32; weights:
+    [K1, L1] int32 (plain) or [K1+1, L1+1] (extended; ``pop_a``/``pop_x``/
+    ``const`` switch the mask-row/col/corner terms on). Returns [B, M]
+    int32. Padding lanes must be 0 in every plane. Blocks default to the
+    plan cache / decode-aware heuristics (:func:`repro.kernels.tiling.plan_for`).
     """
     l1, b, w = x_planes.shape
     k1, m, w2 = a_planes.shape
-    assert w == w2 and weights.shape == (k1, l1)
+    assert w == w2
+    weights, pop_a, pop_x, const = _normalize_weights(
+        weights, k1, l1, pop_a, pop_x, const)
 
-    plan = plan_tiles(b, m, w, block_b=block_b, block_m=block_m,
-                      block_w=block_w, row_chunk=row_chunk)
+    plan = plan_for("bitserial", b, m, w, block_b=block_b, block_m=block_m,
+                    block_w=block_w, row_chunk=row_chunk)
     return lane_stream_call(
-        functools.partial(_bitserial_kernel, k1=k1, l1=l1, row_chunk=plan.rc),
+        functools.partial(_bitserial_kernel, k1=k1, l1=l1, row_chunk=plan.rc,
+                          pop_a=pop_a, pop_x=pop_x, const=const),
         x_planes, a_planes, plan,
         x_leading=l1, a_leading=k1,
-        extra_inputs=(jnp.asarray(weights, jnp.int32),),
-        extra_specs=(pl.BlockSpec((k1, l1), lambda i, j, k: (0, 0)),),
+        extra_inputs=(weights,),
+        extra_specs=(pl.BlockSpec((k1 + 1, l1 + 1), lambda i, j, k: (0, 0)),),
+        interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("l_bits", "pop_a", "pop_x", "const", "block_b",
+                     "block_m", "block_w", "row_chunk", "interpret"),
+)
+def bitserial_matmul_sliced(
+    u_stack,
+    a_planes,
+    weights,
+    *,
+    l_bits: int,
+    pop_a=None,
+    pop_x=None,
+    const=None,
+    block_b=None,
+    block_m=None,
+    block_w=None,
+    row_chunk=None,
+    interpret: bool = False,
+):
+    """Decode fast path: same contract as :func:`bitserial_matmul_packed`
+    but the streaming operand is ``u_stack`` [32, B, W] uint32 — L-bit
+    level codes bit-transposed so u_stack[t, b, w] codes logical bit
+    32w+t — and the per-plane packed words are built inside the kernel.
+    Zero-padded entries (level code 0) contribute no set bits.
+    """
+    _, b, w = u_stack.shape
+    k1, m, w2 = a_planes.shape
+    assert w == w2
+    weights, pop_a, pop_x, const = _normalize_weights(
+        weights, k1, l_bits, pop_a, pop_x, const)
+
+    plan = plan_for("bitserial_sliced", b, m, w, block_b=block_b,
+                    block_m=block_m, block_w=block_w, row_chunk=row_chunk)
+    return lane_stream_call(
+        functools.partial(_bitserial_sliced_kernel, k1=k1, l1=l_bits,
+                          row_chunk=plan.rc, pop_a=pop_a, pop_x=pop_x,
+                          const=const),
+        u_stack, a_planes, plan,
+        x_leading=32, a_leading=k1,
+        extra_inputs=(weights,),
+        extra_specs=(pl.BlockSpec((k1 + 1, l_bits + 1),
+                                  lambda i, j, k: (0, 0)),),
         interpret=interpret)

@@ -38,6 +38,7 @@ from ..core.backend import resolve_backend
 from .binary_mvp.ops import and_dot, hamming_similarity, inner_product_pm1
 from .bitserial_mvp.ops import ppac_matmul as _multibit_matmul
 from .bitserial_mvp.ops import ppac_matmul_planes as _multibit_matmul_planes
+from .bitserial_mvp.ops import ppac_matmul_resident as _multibit_matmul_resident
 from .gf2_tiled.ops import gf2_matmul_tiled
 from .hamming_topk.ops import hamming_threshold_match, hamming_topk
 
@@ -93,9 +94,20 @@ def _mode_mvp_multibit(x, a, *, backend, k_bits: int, l_bits: int,
 
 
 def _mode_mvp_multibit_planes(x, a, *, backend, n: int, k_bits: int,
-                              l_bits: int, fmt_a="int", fmt_x="int"):
+                              l_bits: int, fmt_a="int", fmt_x="int",
+                              a_has_mask: bool = False):
     return _multibit_matmul_planes(x, a, n=n, k_bits=k_bits, l_bits=l_bits,
-                                   fmt_a=fmt_a, fmt_x=fmt_x, backend=backend)
+                                   fmt_a=fmt_a, fmt_x=fmt_x,
+                                   a_has_mask=a_has_mask, backend=backend)
+
+
+def _mode_mvp_multibit_resident(x, a, *, backend, n: int, k_bits: int,
+                                l_bits: int, fmt_a="int", fmt_x="int",
+                                a_has_mask: bool = False, a_int8=None):
+    return _multibit_matmul_resident(x, a, n=n, k_bits=k_bits, l_bits=l_bits,
+                                     fmt_a=fmt_a, fmt_x=fmt_x,
+                                     a_has_mask=a_has_mask, a_int8=a_int8,
+                                     backend=backend)
 
 
 def _mode_gf2(x, a, *, backend, n: int):
@@ -127,6 +139,11 @@ MODES: Dict[str, ModeSpec] = {
         _mode_mvp_multibit_planes,
         "multi-bit MVP against a pre-packed K-plane resident matrix",
         "III-C"),
+    "mvp_multibit_resident": ModeSpec(
+        _mode_mvp_multibit_resident,
+        "decode fast path: resident planes, in-kernel activation "
+        "bit-slicing, zero per-call repack",
+        "III-C/IV-A"),
     "gf2": ModeSpec(_mode_gf2, "GF(2) MVP (XOR-parity accumulation)", "III-D"),
 }
 

@@ -18,6 +18,13 @@ zero-padding (:func:`pad_lanes`), the chunked popcount inner loop
 ``hamming_topk`` reuses the planning + inner loop with its own 2-D grid
 (its output is a running top-k, not a revisited matmul block).
 
+Tile-plan selection (:func:`plan_for`) is three-tiered: an explicit block
+override always wins; otherwise a measured autotune result from the
+persisted JSON cache (keyed on mode × logical shape × platform, refreshed
+via :func:`autotune_plan`); otherwise shape-aware defaults — decode steps
+have tiny batches, so small-B launches get a thin batch tile and a fatter
+row/lane tile instead of the generic 64-row batch block.
+
 Padding is always with zero lanes, which every mode tolerates by
 construction: XOR of equal zeros and AND against zero both popcount to 0,
 so padded bit-cells never change a sum or flip a parity.
@@ -25,16 +32,30 @@ so padded bit-cells never change a sum or flip a parity.
 from __future__ import annotations
 
 import dataclasses
+import json
+import math
+import os
+import time
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+try:  # TPU compiler hints (grid dimension semantics); absent on old jax
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
 # TPU layout friendliness: lane (last) dims in multiples of 128, sublane
 # (second-to-last) dims in multiples of 8.
 LANE_MULTIPLE = 128
 SUBLANE_MULTIPLE = 8
+
+# Batch/row/lane tiles stream independently; only the lane (accumulation)
+# dimension carries a loop dependence through the revisited output block.
+GRID_SEMANTICS = ("parallel", "parallel", "arbitrary")
 
 
 def round_up(x: int, mult: int) -> int:
@@ -61,22 +82,209 @@ class TilePlan:
         """(batch tiles, row tiles, lane tiles) — lane dim innermost."""
         return (self.bp // self.bb, self.mp // self.bm, self.wp // self.bw)
 
+    @property
+    def blocks(self) -> Dict[str, int]:
+        """The four tunable knobs, as kwargs for the kernel wrappers."""
+        return dict(block_b=self.bb, block_m=self.bm, block_w=self.bw,
+                    row_chunk=self.rc)
+
 
 def plan_tiles(b: int, m: int, w: int, *, block_b: int = 64,
                block_m: int = 128, block_w: int = 64,
                row_chunk: int = 8) -> TilePlan:
     """Clamp requested block sizes to the (rounded-up) operand shape and
-    derive the padded geometry. ``row_chunk`` is shrunk until it divides
-    the row tile."""
+    derive the padded geometry. The row tile is rounded *up* to a multiple
+    of ``row_chunk`` so the requested chunk is honored verbatim (shrinking
+    the chunk instead used to silently degrade prime row tiles to
+    ``row_chunk=1`` — a 8x fatter popcount loop)."""
     bb = min(block_b, round_up(b, SUBLANE_MULTIPLE))
     bm = min(block_m, round_up(m, SUBLANE_MULTIPLE))
     bw = min(block_w, round_up(w, LANE_MULTIPLE))
-    rc = min(row_chunk, bm)
-    while bm % rc:
-        rc -= 1
+    rc = max(1, min(row_chunk, bm))
+    # honor both the chunk and the sublane layout rule at once
+    bm = round_up(bm, math.lcm(rc, SUBLANE_MULTIPLE))
     return TilePlan(b, m, w, bb, bm, bw, rc,
                     round_up(b, bb), round_up(m, bm), round_up(w, bw))
 
+
+# ---------------------------------------------------------------------------
+# Decode-aware defaults + persisted autotune cache
+# ---------------------------------------------------------------------------
+
+CACHE_ENV = "PPAC_TILE_CACHE"
+_DEFAULT_CACHE = "~/.cache/ppac/tile_plans.json"
+
+
+def default_blocks(b: int, m: int, w: int) -> Dict[str, int]:
+    """Shape-aware default blocks. Decode steps stream a tiny batch (a few
+    tokens) against a large resident matrix: an 8-row batch tile frees
+    VMEM for a fatter row tile, so the K·L popcount schedule amortizes
+    over more resident rows per grid step."""
+    if b <= 8:
+        return dict(block_b=SUBLANE_MULTIPLE, block_m=256, block_w=64,
+                    row_chunk=8)
+    if b <= 32:
+        return dict(block_b=32, block_m=192, block_w=64, row_chunk=8)
+    return dict(block_b=64, block_m=128, block_w=64, row_chunk=8)
+
+
+class PlanCache:
+    """Persisted (mode, shape, platform) -> block-dict autotune cache.
+
+    One tiny JSON file (``PPAC_TILE_CACHE`` env var, default
+    ``~/.cache/ppac/tile_plans.json``); loaded lazily once per process,
+    rewritten atomically on every :meth:`put`.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = os.path.expanduser(
+            path or os.environ.get(CACHE_ENV, _DEFAULT_CACHE))
+        self._data: Optional[Dict[str, Dict[str, int]]] = None
+
+    @staticmethod
+    def key(mode: str, b: int, m: int, w: int,
+            platform: Optional[str] = None) -> str:
+        platform = platform or jax.default_backend()
+        return f"{mode}|b{b}|m{m}|w{w}|{platform}"
+
+    def _load(self) -> Dict[str, Dict[str, int]]:
+        if self._data is None:
+            try:
+                with open(self.path) as f:
+                    self._data = json.load(f)
+            except (OSError, ValueError):
+                self._data = {}
+        return self._data
+
+    def get(self, mode: str, b: int, m: int, w: int) -> Optional[Dict[str, int]]:
+        hit = self._load().get(self.key(mode, b, m, w))
+        if hit is None:
+            return None
+        return {k: int(hit[k])
+                for k in ("block_b", "block_m", "block_w", "row_chunk")
+                if k in hit}
+
+    def put(self, mode: str, b: int, m: int, w: int,
+            blocks: Dict[str, int], *, us: Optional[float] = None) -> None:
+        data = self._load()
+        entry = dict(blocks)
+        if us is not None:
+            entry["us"] = round(float(us), 2)
+        data[self.key(mode, b, m, w)] = entry
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+
+_CACHES: Dict[str, PlanCache] = {}
+
+
+def plan_cache() -> PlanCache:
+    """Process-wide cache for the path currently selected by the env."""
+    path = os.path.expanduser(os.environ.get(CACHE_ENV, _DEFAULT_CACHE))
+    if path not in _CACHES:
+        _CACHES[path] = PlanCache(path)
+    return _CACHES[path]
+
+
+def plan_for(mode: str, b: int, m: int, w: int, *,
+             block_b: Optional[int] = None, block_m: Optional[int] = None,
+             block_w: Optional[int] = None, row_chunk: Optional[int] = None,
+             use_cache: bool = True) -> TilePlan:
+    """Resolve the tile plan for one launch: explicit overrides win, then
+    the autotune cache, then the decode-aware defaults."""
+    blocks = default_blocks(b, m, w)
+    if use_cache:
+        cached = plan_cache().get(mode, b, m, w)
+        if cached:
+            blocks.update(cached)
+    for name, val in (("block_b", block_b), ("block_m", block_m),
+                      ("block_w", block_w), ("row_chunk", row_chunk)):
+        if val is not None:
+            blocks[name] = val
+    return plan_tiles(b, m, w, **blocks)
+
+
+def candidate_blocks(b: int, m: int, w: int):
+    """Small measured-search space around the defaults, deduplicated by
+    resolved geometry (clamping makes many candidates collapse on small
+    shapes)."""
+    seen, out = set(), []
+    for bb in (SUBLANE_MULTIPLE, 32, 64):
+        for bm in (64, 128, 256, 512):
+            for bw in (32, 64, 128):
+                for rc in (4, 8, 16):
+                    plan = plan_tiles(b, m, w, block_b=bb, block_m=bm,
+                                      block_w=bw, row_chunk=rc)
+                    sig = (plan.bb, plan.bm, plan.bw, plan.rc)
+                    if sig in seen:
+                        continue
+                    seen.add(sig)
+                    out.append(dict(block_b=bb, block_m=bm, block_w=bw,
+                                    row_chunk=rc))
+    return out
+
+
+def quick_candidates(b: int, m: int, w: int):
+    """A handful of variations around the shape defaults — the compile
+    cost per candidate dominates off-TPU, so the serving autotune sweeps
+    this trimmed set by default (full sweep: :func:`candidate_blocks`)."""
+    base = default_blocks(b, m, w)
+    trial = [base,
+             {**base, "block_m": 128}, {**base, "block_m": 512},
+             {**base, "block_w": 32}, {**base, "row_chunk": 16}]
+    seen, out = set(), []
+    for blocks in trial:
+        plan = plan_tiles(b, m, w, **blocks)
+        sig = (plan.bb, plan.bm, plan.bw, plan.rc)
+        if sig not in seen:
+            seen.add(sig)
+            out.append(blocks)
+    return out
+
+
+def autotune_plan(mode: str, b: int, m: int, w: int,
+                  run: Callable[[TilePlan], object], *,
+                  candidates=None, reps: int = 3,
+                  cache: Optional[PlanCache] = None) -> TilePlan:
+    """Measure ``run(plan)`` over candidate block geometries, persist the
+    winner in the plan cache, and return its plan.
+
+    ``run`` must execute the kernel under test with the plan's blocks and
+    return the jax result (blocked on for timing). The first call per
+    candidate compiles and is discarded; the best median-of-``reps`` wins.
+    """
+    cache = cache or plan_cache()
+    best_blocks, best_us, last_err = None, None, None
+    for blocks in (candidates or candidate_blocks(b, m, w)):
+        plan = plan_tiles(b, m, w, **blocks)
+        try:
+            jax.block_until_ready(run(plan))  # compile + warm
+        except Exception as e:  # geometry rejected by the backend: skip
+            last_err = e
+            continue
+        samples = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(plan))
+            samples.append((time.perf_counter() - t0) * 1e6)
+        us = sorted(samples)[len(samples) // 2]
+        if best_us is None or us < best_us:
+            best_blocks, best_us = blocks, us
+    if best_blocks is None:
+        # every candidate failed -> the problem is the run callable, not
+        # the geometry; surface the real error
+        raise RuntimeError(f"no viable tile candidate for {mode} "
+                           f"b={b} m={m} w={w}") from last_err
+    cache.put(mode, b, m, w, best_blocks, us=best_us)
+    return plan_tiles(b, m, w, **best_blocks)
+
+
+# ---------------------------------------------------------------------------
+# Kernel plumbing
+# ---------------------------------------------------------------------------
 
 def pad_lanes(arr, rows_to: int, lanes_to: int) -> jnp.ndarray:
     """Zero-pad the trailing [rows, lanes] dims of a packed uint32 operand;
@@ -143,9 +351,18 @@ def lane_stream_call(kernel_body, x_packed, a_packed, plan: TilePlan, *,
     ``x_leading``/``a_leading`` carry a bit-plane stack (bitserial MVP):
     nonzero values make the operand [leading, rows, lanes] with the whole
     plane stack resident per tile.
+
+    On the native TPU lowering, the grid is annotated with
+    ``GRID_SEMANTICS``: batch/row tiles are parallel, only the lane
+    (accumulation) dim is order-dependent — letting Mosaic reorder and
+    pipeline the independent output tiles.
     """
     x_p = pad_lanes(x_packed, plan.bp, plan.wp)
     a_p = pad_lanes(a_packed, plan.mp, plan.wp)
+    extra = {}
+    if pltpu is not None and not interpret:
+        extra["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=GRID_SEMANTICS)
     out = pl.pallas_call(
         kernel_body,
         grid=plan.grid,
@@ -154,5 +371,6 @@ def lane_stream_call(kernel_body, x_packed, a_packed, plan: TilePlan, *,
         out_specs=pl.BlockSpec((plan.bb, plan.bm), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((plan.bp, plan.mp), jnp.int32),
         interpret=interpret,
+        **extra,
     )(x_p, a_p, *extra_inputs)
     return out[:plan.b, :plan.m]

@@ -28,7 +28,11 @@ import numpy as np
 
 from ..configs.base import ModelConfig, load_arch
 from ..models import lm
-from ..serve.step import convert_params_for_serving, serving_cycle_report
+from ..serve.step import (
+    autotune_serving_plans,
+    convert_params_for_serving,
+    serving_cycle_report,
+)
 
 
 @dataclasses.dataclass
@@ -133,6 +137,10 @@ def main():
                          "1/2..4 run the fused PPAC kernels, 8 the int8 "
                          "MXU fallback")
     ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure + persist tile plans for every packed "
+                         "projection shape before serving (refreshes the "
+                         "PPAC_TILE_CACHE json; meaningful on TPU)")
     args = ap.parse_args()
 
     cfg = load_arch(args.arch).smoke()
@@ -149,6 +157,12 @@ def main():
                                           backend="auto"))
         params = convert_params_for_serving(params, cfg)
         mode = "serve"
+        if args.autotune:
+            from ..kernels.tiling import plan_cache
+            tuned = autotune_serving_plans(params, cfg, batch=args.slots,
+                                           verbose=True)
+            print(f"autotuned {len(tuned)} tile plans -> "
+                  f"{plan_cache().path}")
         report = serving_cycle_report(params, cfg)
         est = report.est_us_per_token()
         # K/L from the accounting itself: packed1 binarizes activations, so

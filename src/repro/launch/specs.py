@@ -111,8 +111,12 @@ def build_cell(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
         if not cfg.ppac.enabled:  # serve_quant implies the PPAC engine
             cfg = dataclasses.replace(
                 cfg, ppac=dataclasses.replace(cfg.ppac, enabled=True))
+        # group=False: the sharding-spec tree below mirrors the init-time
+        # param structure; the grouped (wqkv/wig) fast path is a
+        # single-host serving layout
         pshapes = jax.eval_shape(
-            lambda p: convert_params_for_serving(p, cfg), pshapes)
+            lambda p: convert_params_for_serving(p, cfg, group=False),
+            pshapes)
     psh = _param_shardings(mesh, rules, pshapes, paxes)
 
     cache_shapes, cache_axes = _abstract_cache(cfg, b, shape.seq_len)
@@ -176,9 +180,12 @@ def _param_shardings(mesh, rules, pshapes, paxes):
                 wq_ax = lead + (None, a_out, None)
             else:
                 wq_ax = lead + (a_in, a_out)
+            shadow_sh = (spec_or_rep(lead + (a_in, a_out), leaf.shadow)
+                         if leaf.shadow is not None else None)
             return leaf.with_children(
                 spec_or_rep(wq_ax, leaf.wq),
-                spec_or_rep(lead + (a_out,), leaf.scale))
+                spec_or_rep(lead + (a_out,), leaf.scale),
+                shadow_sh)
         return spec_or_rep(ax, leaf)
 
     is_ax = lambda x: x is None or (isinstance(x, tuple) and all(

@@ -22,7 +22,14 @@ from jax import lax
 
 from ..configs.base import ModelConfig
 from ..sharding.rules import constrain
-from .layers import dense_apply, dense_init, rmsnorm_apply, rmsnorm_init, rope
+from .layers import (
+    dense_apply,
+    dense_init,
+    grouped_dense_apply,
+    rmsnorm_apply,
+    rmsnorm_init,
+    rope,
+)
 
 NEG_INF = -1e9
 
@@ -245,9 +252,12 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
     dtype = jnp.dtype(cfg.dtype)
     b, s, d = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q = dense_apply(p["wq"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
-    k = dense_apply(p["wk"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
-    v = dense_apply(p["wv"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
+    if "wqkv" in p:  # fused q/k/v group (serving fast path)
+        q, k, v = grouped_dense_apply(p["wqkv"], x, ppac=cfg.ppac)
+    else:
+        q = dense_apply(p["wq"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
+        k = dense_apply(p["wk"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
+        v = dense_apply(p["wv"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
     q = q.reshape(b, s, h, hd)
     k = k.reshape(b, s, hkv, hd)
     v = v.reshape(b, s, hkv, hd)

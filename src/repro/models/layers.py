@@ -14,7 +14,12 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.engine import QuantContainer, qat_dense, serve_dense
+from ..core.engine import (
+    QuantContainer,
+    qat_dense,
+    serve_dense,
+    serve_dense_grouped,
+)
 from ..configs.base import ModelConfig, PPACModeConfig
 
 
@@ -59,6 +64,19 @@ def dense_apply(p, x, *, ppac: Optional[PPACModeConfig] = None,
     if "b" in p:
         y = y + p["b"].astype(dtype)
     return y
+
+
+def grouped_dense_apply(p, x, *, ppac: Optional[PPACModeConfig] = None):
+    """Serving fast path for a fused projection group: one resident
+    container covers several same-input projections (wq/wk/wv, wi/wg);
+    returns the tuple of member outputs. Only exists post-conversion —
+    ``convert_params_for_serving`` creates these nodes."""
+    w = p["w"]
+    assert isinstance(w, QuantContainer) and w.splits, w
+    return serve_dense_grouped(x, w,
+                               act_bits=ppac.act_bits if ppac else 8,
+                               act_format=ppac.act_format if ppac else "int",
+                               backend=ppac.backend if ppac else "mxu")
 
 
 # -- norm --------------------------------------------------------------------
@@ -126,7 +144,10 @@ def mlp_init(key, d: int, d_ff: int):
 
 def mlp_apply(p, x, cfg: ModelConfig, *, mode: str = "float"):
     dtype = jnp.dtype(cfg.dtype)
-    h = dense_apply(p["wi"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
-    g = dense_apply(p["wg"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
+    if "wig" in p:  # fused up+gate group (serving fast path)
+        h, g = grouped_dense_apply(p["wig"], x, ppac=cfg.ppac)
+    else:
+        h = dense_apply(p["wi"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
+        g = dense_apply(p["wg"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * h
     return dense_apply(p["wo"], h, ppac=cfg.ppac, mode=mode, dtype=dtype)

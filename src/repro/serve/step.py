@@ -65,13 +65,29 @@ def greedy_generate(params, cfg: ModelConfig, batch, *, steps: int,
 _PPAC_ELIGIBLE = ("wq", "wk", "wv", "wo", "wi", "wg", "w_q", "w_uk", "w_uv",
                   "in_proj", "out_proj")
 
+# Same-input projections fused into ONE resident container per layer (the
+# grouped serving fast path): attention's q/k/v and the SwiGLU up/gate pair.
+_PPAC_GROUPS = (("wqkv", ("wq", "wk", "wv")), ("wig", ("wi", "wg")))
 
-def convert_params_for_serving(params, cfg: ModelConfig):
+
+def convert_params_for_serving(params, cfg: ModelConfig, *,
+                               group: bool = True,
+                               store_shadow: Optional[bool] = None):
     """Replace large projection weights with resident PPAC containers.
 
     Only 2-D weight leaves under eligible projection names are converted
     (embeddings, norms, SSD internals stay float). Works on stacked
     (scan) params by vmapping the packer over the layer axis.
+
+    With ``group`` (the default), same-input projection trios/pairs
+    (wq/wk/wv -> ``wqkv``, wi/wg -> ``wig``) whose members are ALL
+    individually eligible and bias-free are column-concatenated and packed
+    as one grouped container (``splits`` records the member widths) —
+    halving decode-step kernel launches while staying bit-identical to the
+    per-projection containers (quantization scales are per output
+    channel). ``group=False`` keeps the per-projection layout, e.g. for
+    sharding-spec trees that must mirror the init-time param structure.
+    ``store_shadow`` forwards to :func:`pack_weight_for_serving`.
     """
     ppac = cfg.ppac
     if not ppac.enabled:
@@ -79,26 +95,111 @@ def convert_params_for_serving(params, cfg: ModelConfig):
 
     pack = functools.partial(pack_weight_for_serving,
                              weight_bits=ppac.weight_bits,
-                             weight_format=ppac.weight_format)
+                             weight_format=ppac.weight_format,
+                             store_shadow=store_shadow)
 
-    def convert(path, leaf):
-        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
-        if "w" not in names[-1:]:
-            return leaf
-        parent = names[-2] if len(names) > 1 else ""
-        if parent not in _PPAC_ELIGIBLE:
-            return leaf
-        if leaf.ndim == 2:
-            if min(leaf.shape) < ppac.min_features:
-                return leaf
-            return pack(leaf)
-        if leaf.ndim == 3:  # stacked over layers
-            if min(leaf.shape[1:]) < ppac.min_features:
-                return leaf
-            return jax.vmap(pack)(leaf)
-        return leaf
+    def eligible(leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        if ndim == 2:
+            return min(leaf.shape) >= ppac.min_features
+        if ndim == 3:  # stacked over layers
+            return min(leaf.shape[1:]) >= ppac.min_features
+        return False
 
-    return jax.tree_util.tree_map_with_path(convert, params)
+    def pack_leaf(leaf, splits=None):
+        p = functools.partial(pack, splits=splits)
+        return p(leaf) if leaf.ndim == 2 else jax.vmap(p)(leaf)
+
+    def groupable(sub):
+        """A bias-free {'w': float leaf} projection dict."""
+        return (isinstance(sub, dict) and set(sub) == {"w"}
+                and not isinstance(sub["w"], QuantContainer)
+                and eligible(sub["w"]))
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {k: walk(v) for k, v in node.items()}
+        if group:
+            for gname, members in _PPAC_GROUPS:
+                subs = [out.get(m) for m in members]
+                if not all(groupable(s) for s in subs):
+                    continue
+                ws = [s["w"] for s in subs]
+                if (len({w.ndim for w in ws}) != 1
+                        or len({w.shape[:-1] for w in ws}) != 1):
+                    continue  # mismatched in-dims / stacking: keep separate
+                splits = tuple(int(w.shape[-1]) for w in ws)
+                wcat = jnp.concatenate(ws, axis=-1)
+                out[gname] = {"w": pack_leaf(wcat, splits=splits)}
+                for m in members:
+                    del out[m]
+        for k, v in out.items():
+            if (k in _PPAC_ELIGIBLE and isinstance(v, dict)
+                    and not isinstance(v.get("w"), QuantContainer)
+                    and eligible(v.get("w"))):
+                out[k] = {**v, "w": pack_leaf(v["w"])}
+        return out
+
+    return walk(params)
+
+
+# -- tile-plan autotuning ------------------------------------------------------
+
+def autotune_serving_plans(params, cfg: ModelConfig, *, batch: int,
+                           verbose: bool = False):
+    """Measure-and-persist tile plans for every distinct packed projection
+    shape of a converted model (refresh with a different decode batch by
+    re-running; keyed on shape × platform in the plan cache).
+
+    Only the 'pallas' lowering consults tile plans, so this is meaningful
+    on TPU (off-TPU it still runs — interpret-mode timings — and exercises
+    the cache plumbing). Returns {(mode, b, m, w): blocks}.
+    """
+    from ..core.formats import packed_width
+    from ..kernels import tiling
+    from ..kernels.bitserial_mvp.ops import ppac_matmul_resident
+
+    flat, _ = jax.tree_util.tree_flatten(
+        params, is_leaf=lambda x: isinstance(x, QuantContainer))
+    shapes = {}
+    for leaf in flat:
+        if not isinstance(leaf, QuantContainer) \
+                or leaf.kind not in ("packed1", "packed4"):
+            continue
+        base, d_out, d_in = _container_geometry(leaf)
+        if leaf.kind == "packed1":
+            k_bits, l_bits, fa, fx = 1, 1, "oddint", "oddint"
+        else:
+            k_bits, l_bits = leaf.bits, cfg.ppac.act_bits
+            fa, fx = leaf.fmt, cfg.ppac.act_format
+        has_mask = leaf.kind == "packed4" and \
+            leaf.wq.shape[-3] == (leaf.bits or 0) + 1
+        shapes[(d_out, d_in, k_bits, l_bits, fa, fx, has_mask)] = None
+
+    tuned = {}
+    for (d_out, d_in, k_bits, l_bits, fa, fx, has_mask) in shapes:
+        w = packed_width(d_in)
+        key = ("bitserial_sliced", batch, d_out, w)
+        if key in tuned:
+            continue
+        x = jnp.zeros((batch, d_in), jnp.int32)
+        planes = jnp.zeros((k_bits + has_mask, d_out, w), jnp.uint32)
+
+        def run(plan, x=x, planes=planes, n=d_in, k=k_bits, l=l_bits,
+                fa=fa, fx=fx, hm=has_mask):
+            return ppac_matmul_resident(
+                x, planes, n=n, k_bits=k, l_bits=l, fmt_a=fa, fmt_x=fx,
+                a_has_mask=hm, backend="pallas", **plan.blocks)
+
+        plan = tiling.autotune_plan(
+            "bitserial_sliced", batch, d_out, w, run,
+            candidates=tiling.quick_candidates(batch, d_out, w), reps=2)
+        tuned[key] = plan.blocks
+        if verbose:
+            print(f"autotuned bitserial_sliced b={batch} m={d_out} w={w} "
+                  f"-> {plan.blocks}")
+    return tuned
 
 
 # -- PPAC cycle accounting -----------------------------------------------------
@@ -127,8 +228,12 @@ def serving_cycle_report(params, cfg: ModelConfig, *,
     Each K-bit container costs K·L tile-grid cycles per streamed token
     (packed1: K=L=1, one XNOR pass), aggregated across (possibly
     layer-stacked) projections — a full LM decode step priced in the
-    paper's §III-C accounting. int8 containers run on the MXU fallback,
-    not the fused kernels; they are reported with ``fused=False`` at their
+    paper's §III-C accounting. Grouped containers (wqkv/wig) are priced
+    at their *fused* [sum(out), in] shape — one virtualized tile-grid
+    scan for the whole group, which is exactly what the fast path
+    launches (and ≤ the per-projection sum, since row tiles amortize
+    across members). int8 containers run on the MXU fallback, not the
+    fused kernels; they are reported with ``fused=False`` at their
     would-be K=8 bit-serial cost. bf16 containers are not PPAC-executable
     and are skipped.
     """

@@ -107,6 +107,32 @@ def test_mvp_multibit_planes_matches_int_mode(rng, backend, fmt_a, fmt_x):
     assert np.array_equal(got, x @ a.T), (fmt_a, fmt_x)
 
 
+@pytest.mark.parametrize("fmt_a,fmt_x", [("int", "int"), ("uint", "uint"),
+                                         ("oddint", "int"),
+                                         ("oddint", "oddint")])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mvp_multibit_resident_matches_planes_mode(rng, backend, fmt_a,
+                                                   fmt_x):
+    """The zero-repack decode fast path (in-kernel activation bit-slicing)
+    is bit-identical to the planes mode and exact on every format pair."""
+    m, n, k, l = 20, 51, 4, 3
+    la, ha = F.value_range(fmt_a, k)
+    lx, hx = F.value_range(fmt_x, l)
+    a = rng.choice(np.arange(la, ha + 1, 2 if fmt_a == "oddint" else 1),
+                   size=(m, n))
+    x = rng.choice(np.arange(lx, hx + 1, 2 if fmt_x == "oddint" else 1),
+                   size=(4, n))
+    a_planes = F.pack_planes(a, k, F.fmt(fmt_a))
+    kw = dict(n=n, k_bits=k, l_bits=l, fmt_a=fmt_a, fmt_x=fmt_x,
+              backend=backend)
+    got = np.asarray(ppac_matmul(x, a_planes,
+                                 mode="mvp_multibit_resident", **kw))
+    via_planes = np.asarray(ppac_matmul(x, a_planes,
+                                        mode="mvp_multibit_planes", **kw))
+    assert np.array_equal(got, via_planes), (fmt_a, fmt_x)
+    assert np.array_equal(got, x @ a.T), (fmt_a, fmt_x)
+
+
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_topk_mode_agrees_with_cam_scores(rng, backend):
     n, m = 64, 40

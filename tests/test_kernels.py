@@ -143,9 +143,18 @@ def test_binary_kernel_hypothesis(b, m, n, seed):
 
 
 def test_plane_weight_construction_offsets(rng):
-    """oddint offsets fold into appended mask planes (eqs. 2/3 analogue)."""
-    x = rng.choice([-3, -1, 1, 3], size=(2, 10))
-    a = rng.choice([-3, -1, 1, 3], size=(4, 10))
-    xp, ap, w = build_planes_and_weights(x, a, 2, 2, "oddint", "oddint")
-    assert xp.shape[0] == 3 and ap.shape[0] == 3  # 2 planes + mask
-    assert w.shape == (3, 3)
+    """oddint offsets fold into the extended weight matrix (eqs. 2/3
+    analogue as in-kernel popcount coefficients + a constant) — the
+    operands themselves never grow mask planes (zero-repack invariant)."""
+    n = 10
+    x = rng.choice([-3, -1, 1, 3], size=(2, n))
+    a = rng.choice([-3, -1, 1, 3], size=(4, n))
+    xp, ap, w, (pop_a, pop_x, const) = build_planes_and_weights(
+        x, a, 2, 2, "oddint", "oddint")
+    assert xp.shape[0] == 2 and ap.shape[0] == 2  # value planes only
+    assert w.shape == (3, 3)                      # extended [K+1, L+1]
+    assert pop_a and pop_x and const
+    # oddint(2): w_l = {2, 4}, c = -3  ->  corner = c*c*n
+    assert int(w[2, 2]) == 9 * n
+    assert np.array_equal(np.asarray(w[:2, 2]), [-6, -12])  # wa_k * cx
+    assert np.array_equal(np.asarray(w[2, :2]), [-6, -12])  # ca * wx_l

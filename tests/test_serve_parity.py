@@ -5,7 +5,16 @@ execute on the fused tiled PPAC kernels with bit-identical results across
 'pallas'/'ref'/'mxu' (integer accumulation is exact, so even the float
 outputs must agree bitwise), and the raw accumulations match the
 cycle-exact ``PPACArray`` oracle for small cases.
+
+The zero-repack fast path rides the same matrix: grouped (wqkv/wig-style)
+containers and the in-kernel-sliced resident mode must stay bit-identical
+to the per-projection path on int32 accumulators, offset formats must
+serve off their load-time resident mask plane, and the lowered HLO of a
+packed serving call must contain no weight-side concatenation/broadcast.
 """
+import re
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -14,6 +23,7 @@ from repro.core.engine import (
     pack_weight_for_serving,
     serve_dense,
     serve_dense_acc,
+    serve_dense_grouped,
 )
 from repro.core.formats import from_bitplanes, unpack_bits
 from repro.core.ppac import PPACArray, PPACConfig
@@ -99,3 +109,116 @@ def test_packed4_acc_equals_exact_integer_product(rng):
     x_int = np.asarray(xq).astype(np.int64)
     acc, _ = serve_dense_acc(x, c, act_bits=6, backend="ref")
     assert np.array_equal(np.asarray(acc), x_int @ a_int.T.astype(np.int64))
+
+
+# -- the zero-repack fast path -------------------------------------------------
+
+@pytest.mark.parametrize("bits", [3, 4])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_oddint_weights_serve_off_resident_mask_plane(rng, bits, backend):
+    """Offset formats pack their all-ones mask plane at load time (K+1
+    resident planes) and stay exact + backend-identical at serve time."""
+    d_in, d_out = 51, 40  # odd n: the mask plane's padding bits matter
+    w = jnp.asarray(rng.standard_normal((d_in, d_out)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((5, d_in)), jnp.float32)
+    c = pack_weight_for_serving(w, weight_bits=bits, weight_format="oddint")
+    assert c.kind == "packed4" and c.wq.shape == (bits + 1, d_out, 2)
+    # reconstruct the resident integers from the value planes only
+    a_int = np.asarray(from_bitplanes(unpack_bits(c.wq[:bits], d_in), c.fmt),
+                       np.int64)
+    xq, _ = quantize(x, 5, "int", axis=-1)
+    acc, _ = serve_dense_acc(x, c, act_bits=5, backend=backend)
+    want = np.asarray(xq, np.int64).astype(np.int64) @ a_int.T
+    assert np.array_equal(np.asarray(acc), want)
+
+
+@pytest.mark.parametrize("d_in,outs", [(96, (56, 24, 24)), (100, (30, 30))])
+@pytest.mark.parametrize("bits,kind", KINDS)
+def test_grouped_container_bit_identical_to_per_projection(rng, d_in, outs,
+                                                           bits, kind):
+    """A fused projection group == the member projections, bitwise, for
+    every container kind × backend (per-output-channel quantization makes
+    the column-stacked resident container exactly the concatenation)."""
+    ws = [jnp.asarray(rng.standard_normal((d_in, o)), jnp.float32) * 0.1
+          for o in outs]
+    x = jnp.asarray(rng.standard_normal((5, d_in)), jnp.float32)
+    cg = pack_weight_for_serving(jnp.concatenate(ws, axis=-1),
+                                 weight_bits=bits, splits=outs)
+    assert cg.kind == kind and cg.splits == tuple(outs)
+    singles = [pack_weight_for_serving(w, weight_bits=bits) for w in ws]
+    for backend in BACKENDS:
+        got = serve_dense_grouped(x, cg, act_bits=6, backend=backend)
+        assert len(got) == len(outs)
+        for g, c in zip(got, singles):
+            want = serve_dense(x, c, act_bits=6, backend=backend)
+            assert np.array_equal(np.asarray(g), np.asarray(want)), backend
+
+
+@pytest.mark.parametrize("bits", [1, 4])
+def test_grouped_acc_int32_identical_across_backends(rng, bits):
+    """Raw int32 accumulators of a grouped container agree bitwise across
+    backends and equal the column-concat of the member accumulators."""
+    d_in, outs = 77, (40, 24)
+    ws = [jnp.asarray(rng.standard_normal((d_in, o)), jnp.float32)
+          for o in outs]
+    x = jnp.asarray(rng.standard_normal((3, d_in)), jnp.float32)
+    cg = pack_weight_for_serving(jnp.concatenate(ws, axis=-1),
+                                 weight_bits=bits, splits=outs)
+    accs = []
+    for backend in BACKENDS:
+        acc, _ = serve_dense_acc(x, cg, act_bits=6, backend=backend)
+        assert acc.dtype == jnp.int32
+        accs.append(np.asarray(acc))
+    assert np.array_equal(accs[0], accs[1])
+    assert np.array_equal(accs[1], accs[2])
+    member = [np.asarray(serve_dense_acc(
+        x, pack_weight_for_serving(w, weight_bits=bits), act_bits=6,
+        backend="ref")[0]) for w in ws]
+    assert np.array_equal(accs[0], np.concatenate(member, axis=-1))
+
+
+def _broadcast_result_elems(hlo_text):
+    """Element counts of every broadcast result in a StableHLO module."""
+    out = []
+    for m in re.finditer(
+            r"broadcast_in_dim.*?->\s*tensor<([0-9x]+)x[a-z]", hlo_text):
+        dims = [int(d) for d in m.group(1).split("x") if d]
+        out.append(int(np.prod(dims)) if dims else 1)
+    return out
+
+
+@pytest.mark.parametrize("bits", [1, 4])
+@pytest.mark.parametrize("backend", ["pallas", "mxu"])
+def test_packed_serving_hlo_has_no_weight_repack(rng, bits, backend):
+    """The zero-repack invariant, asserted on the lowered HLO: a packed
+    serving call contains NO concatenate and no broadcast materializing a
+    weight-sized (or larger) tensor. The pre-PR path fails both ways
+    (mask-plane concat onto [K, M, W]; per-call unpack broadcasting the
+    resident planes to [K, M, n, 32] on the MXU lowering)."""
+    d_in, d_out = 96, 200
+    w = jnp.asarray(rng.standard_normal((d_in, d_out)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4, d_in)), jnp.float32)
+    c = pack_weight_for_serving(w, weight_bits=bits, store_shadow=True)
+
+    def f(x, c):
+        return serve_dense_acc(x, c, act_bits=8, backend=backend)[0]
+
+    txt = jax.jit(f).lower(x, c).as_text()
+    assert "concatenate" not in txt
+    weight_elems = d_in * d_out
+    too_big = [e for e in _broadcast_result_elems(txt) if e >= weight_elems]
+    assert not too_big, too_big
+
+
+def test_prepack_mxu_path_does_repack(rng):
+    """Sanity for the assertion above: the legacy shadow-less container
+    really does broadcast weight-sized tensors per call (what the fast
+    path removed)."""
+    d_in, d_out = 96, 200
+    w = jnp.asarray(rng.standard_normal((d_in, d_out)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4, d_in)), jnp.float32)
+    c = pack_weight_for_serving(w, weight_bits=4, store_shadow=False)
+    txt = jax.jit(
+        lambda x, c: serve_dense_acc(x, c, act_bits=8, backend="mxu")[0]
+    ).lower(x, c).as_text()
+    assert any(e >= d_in * d_out for e in _broadcast_result_elems(txt))

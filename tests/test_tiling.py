@@ -11,11 +11,22 @@ import pytest
 from repro.core import formats as F
 from repro.kernels.binary_mvp.kernel import binary_matmul_packed
 from repro.kernels.binary_mvp.ref import binary_matmul_packed_ref
-from repro.kernels.bitserial_mvp.kernel import bitserial_matmul_packed
+from repro.kernels.bitserial_mvp.kernel import (
+    bitserial_matmul_packed,
+    bitserial_matmul_sliced,
+)
+from repro.kernels.bitserial_mvp.ops import levels_to_stack
 from repro.kernels.bitserial_mvp.ref import bitserial_matmul_packed_ref
 from repro.kernels.gf2_tiled.kernel import gf2_matmul_packed
 from repro.kernels.gf2_tiled.ref import gf2_matmul_packed_ref
-from repro.kernels.tiling import plan_tiles, round_up
+from repro.kernels.tiling import (
+    PlanCache,
+    autotune_plan,
+    plan_cache,
+    plan_for,
+    plan_tiles,
+    round_up,
+)
 
 # b=70 > block_b=64, m=300 > block_m=128, n=6000 -> W=188 > block_w -> the
 # default plans stream several tiles along every grid dimension.
@@ -82,6 +93,92 @@ def test_gf2_streamed_vs_whole_matrix(rng):
     ref = np.asarray(gf2_matmul_packed_ref(x, a))
     assert np.array_equal(streamed, whole)
     assert np.array_equal(streamed, ref)
+
+
+def test_plan_tiles_rounds_row_tile_up_to_chunk():
+    """A prime requested row tile used to silently degrade row_chunk to 1
+    (an 8x fatter popcount loop); now the tile rounds UP to honor the
+    requested chunk verbatim."""
+    p = plan_tiles(8, 100, 4, block_m=13, row_chunk=8)
+    assert p.rc == 8
+    assert p.bm == 16 and p.bm % p.rc == 0
+    # the rounded-up geometry still tiles cleanly and covers the rows
+    assert p.mp % p.bm == 0 and p.mp >= 100
+    # a chunk larger than the tile clamps to it, never to 1
+    p2 = plan_tiles(8, 4, 4, block_m=8, row_chunk=16)
+    assert p2.rc == p2.bm == 8
+    # chunks that don't divide 8 keep BOTH the chunk and the TPU sublane
+    # rule: the row tile lands on lcm(rc, 8)
+    p3 = plan_tiles(8, 100, 4, block_m=8, row_chunk=3)
+    assert p3.rc == 3 and p3.bm == 24
+    assert p3.bm % p3.rc == 0 and p3.bm % 8 == 0
+
+
+def test_prime_row_tile_result_unchanged(rng):
+    """Tiling geometry is invisible: the rounded-up prime-tile plan still
+    reproduces the oracle bitwise."""
+    x = F.pack_bits(rng.integers(0, 2, (13, 700)))
+    a = F.pack_bits(rng.integers(0, 2, (37, 700)))
+    ref = np.asarray(binary_matmul_packed_ref(x, a, op="xor"))
+    got = np.asarray(binary_matmul_packed(x, a, op="xor", block_m=13,
+                                          row_chunk=8, interpret=True))
+    assert np.array_equal(got, ref)
+
+
+def test_bitserial_sliced_matches_packed(rng):
+    """The in-kernel bit-slicing variant == the packed-plane kernel ==
+    the oracle, on a multi-tile lane-streamed shape."""
+    k1, b, m, n, l_bits = 2, 20, 140, 2201, 3  # wl=69 > default lane tile
+    ap = rng.integers(0, 2**32, (k1, m, F.packed_width(n)), dtype=np.uint32)
+    x = rng.integers(-(2 ** (l_bits - 1)), 2 ** (l_bits - 1), (b, n))
+    u = levels_to_stack(F.to_levels(x, l_bits, "int"), F.packed_width(n))
+    xp = F.pack_bits(F.to_bitplanes(x, l_bits, "int"))
+    w = rng.integers(-8, 8, (k1, l_bits)).astype(np.int32)
+    sliced = np.asarray(bitserial_matmul_sliced(u, ap, w, l_bits=l_bits,
+                                                interpret=True))
+    packed = np.asarray(bitserial_matmul_packed(xp, ap, w, interpret=True))
+    ref = np.asarray(bitserial_matmul_packed_ref(xp, ap, w))
+    assert np.array_equal(sliced, packed)
+    assert np.array_equal(sliced, ref)
+
+
+def test_autotune_cache_roundtrip(rng, tmp_path, monkeypatch):
+    """autotune_plan persists the winning blocks; plan_for and a fresh
+    PlanCache instance both read them back."""
+    monkeypatch.setenv("PPAC_TILE_CACHE", str(tmp_path / "plans.json"))
+    b, m, n = 4, 24, 300
+    wl = F.packed_width(n)
+    xp = F.pack_bits(rng.integers(0, 2, (2, b, n)))
+    ap = F.pack_bits(rng.integers(0, 2, (2, m, n)))
+    w = rng.integers(-4, 4, (2, 2)).astype(np.int32)
+    candidates = [dict(block_b=8, block_m=8, block_w=32, row_chunk=4),
+                  dict(block_b=8, block_m=24, block_w=32, row_chunk=8)]
+
+    def run(plan):
+        return bitserial_matmul_packed(xp, ap, w, interpret=True,
+                                       **plan.blocks)
+
+    tuned = autotune_plan("bitserial", b, m, wl, run, candidates=candidates,
+                          reps=1)
+    resolved = [plan_tiles(b, m, wl, **c).blocks for c in candidates]
+    assert tuned.blocks in resolved  # winner is one of the candidates
+    # plan_for (same process) returns the tuned geometry, not the default
+    assert plan_for("bitserial", b, m, wl).blocks == tuned.blocks
+    # a fresh cache object re-reads the persisted JSON
+    fresh = PlanCache(str(tmp_path / "plans.json"))
+    stored = fresh.get("bitserial", b, m, wl)
+    assert stored is not None
+    assert plan_tiles(b, m, wl, **stored).blocks == tuned.blocks
+    # explicit overrides still beat the cache
+    assert plan_for("bitserial", b, m, wl, row_chunk=2).rc == 2
+
+
+def test_decode_defaults_use_thin_batch_tile():
+    p = plan_for("bitserial", 2, 512, 64, use_cache=False)
+    assert p.bb == 8          # decode-shaped: tiny batch tile
+    assert p.bm >= 128        # ... traded for a fatter row tile
+    big = plan_for("bitserial", 128, 512, 64, use_cache=False)
+    assert big.bb == 64
 
 
 def test_binary_block_sweep_agrees(rng):
