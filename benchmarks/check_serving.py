@@ -1,7 +1,7 @@
 """CI gate on the serving-benchmark JSON: the zero-repack fast path must
-actually be fast.
+actually be fast, and scan-fused generation must beat the per-step loop.
 
-Two checks over the ``serving`` rows of a ``benchmarks.run --json`` file:
+Three checks over the ``serving`` rows of a ``benchmarks.run --json`` file:
 
   1. fused <= tol * int8 — the packed containers routed through the PPAC
      engine must not lose to the plain int8 MXU fallback at smoke scale
@@ -10,10 +10,16 @@ Two checks over the ``serving`` rows of a ``benchmarks.run --json`` file:
      row-to-row timing drift on shared CI runners while still catching
      that class of regression);
   2. prepack >= speedup * fast — the fast path must beat the pre-PR
-     per-projection / per-call-repack layout by the acceptance margin.
+     per-projection / per-call-repack layout by the acceptance margin;
+  3. gen_loop >= gen_speedup * gen_scan, per (kind, batch) pair present
+     in both — the device-resident ``lax.scan`` generation (donated
+     cache, fused sampling, one dispatch for N tokens) must beat the
+     per-step python decode loop at smoke scale. A regression here means
+     either the scan stopped fusing or the cache donation broke (copies
+     per token dominate at small model scale).
 
 Usage: python -m benchmarks.check_serving BENCH.json [--tol 1.6]
-       [--speedup 1.5]
+       [--speedup 1.5] [--gen-speedup 2.0]
 """
 from __future__ import annotations
 
@@ -30,15 +36,18 @@ def _rows(path):
             if r.get("module", "serving") == "serving"}
 
 
-def check(path: str, *, tol: float = 1.6, speedup: float = 1.5) -> int:
+def check(path: str, *, tol: float = 1.6, speedup: float = 1.5,
+          gen_speedup: float = 2.0) -> int:
     rows = _rows(path)
 
     def find(tag):
-        pat = re.compile(rf"_{re.escape(tag)}_b\d+$")
-        hits = [us for name, us in rows.items() if pat.search(name)]
+        hits = [us for name, us in rows.items()
+                if re.fullmatch(rf"serve_decode_{re.escape(tag)}_b\d+",
+                                name)]
         if not hits:
-            raise SystemExit(f"no serving row matching '_{tag}_b*' in "
-                             f"{path}; have {sorted(rows)}")
+            raise SystemExit(f"no serving row matching "
+                             f"'serve_decode_{tag}_b*' in {path}; "
+                             f"have {sorted(rows)}")
         return hits[0]
 
     int8 = find("int8")
@@ -58,6 +67,28 @@ def check(path: str, *, tol: float = 1.6, speedup: float = 1.5) -> int:
                 f"need >= {speedup:.2f}x)")
         print(f"{kind}: fast {fast:.1f}us, prepack {prepack:.1f}us "
               f"({ratio:.2f}x), int8 {int8:.1f}us")
+
+    # generation gate: scan-fused >= gen_speedup x the per-step loop,
+    # for every (kind, batch) pair benchmarked both ways
+    loop_rows = {m.group(1): us for name, us in rows.items()
+                 if (m := re.fullmatch(r"gen_loop_(.+)", name))}
+    scan_rows = {m.group(1): us for name, us in rows.items()
+                 if (m := re.fullmatch(r"gen_scan_(.+)", name))}
+    pairs = sorted(set(loop_rows) & set(scan_rows))
+    if not pairs:
+        failures.append("no gen_scan/gen_loop row pairs — the generation "
+                        "benchmark did not run")
+    for tag in pairs:
+        ratio = loop_rows[tag] / scan_rows[tag]
+        if ratio < gen_speedup:
+            failures.append(
+                f"gen {tag}: scan only {ratio:.2f}x faster than the "
+                f"per-step loop ({scan_rows[tag]:.1f}us vs "
+                f"{loop_rows[tag]:.1f}us/token; need >= "
+                f"{gen_speedup:.2f}x)")
+        print(f"gen {tag}: scan {scan_rows[tag]:.1f}us/tok, loop "
+              f"{loop_rows[tag]:.1f}us/tok ({ratio:.2f}x)")
+
     for f in failures:
         print(f"FAIL: {f}", file=sys.stderr)
     return 1 if failures else 0
@@ -72,8 +103,12 @@ def main(argv=None) -> int:
                          "absorbs shared-runner timing drift between rows)")
     ap.add_argument("--speedup", type=float, default=1.5,
                     help="required fast-vs-prepack speedup")
+    ap.add_argument("--gen-speedup", type=float, default=2.0,
+                    help="required scan-generation vs per-step-loop "
+                         "speedup (per (kind, batch) pair)")
     args = ap.parse_args(argv)
-    return check(args.json_path, tol=args.tol, speedup=args.speedup)
+    return check(args.json_path, tol=args.tol, speedup=args.speedup,
+                 gen_speedup=args.gen_speedup)
 
 
 if __name__ == "__main__":

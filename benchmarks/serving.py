@@ -1,4 +1,5 @@
-"""Serving-path benchmark: LM decode-step latency + emulated PPAC cycles.
+"""Serving-path benchmark: LM decode-step latency, end-to-end generation
+throughput, + emulated PPAC cycles.
 
 One decode step of a small LM is timed per resident weight container
 (bf16 float baseline, int8 MXU fallback, packed4 / packed1 fused PPAC
@@ -11,6 +12,15 @@ the pre-PR ``*_prepack`` path (per-projection containers, per-call weight
 unpacking on the MXU lowering) — the before/after pair the perf
 trajectory tracks. ``benchmarks.check_serving`` gates CI on the fast path
 beating the prepack path and staying at least level with int8.
+
+On top of the per-step rows, ``gen_*`` rows time *generation* end to end
+(prefill + N decoded tokens, reported as us/token with tokens/sec in the
+derived column) across a batch sweep (b1/b2/b8/b16) per weight kind:
+``gen_scan`` is the device-resident ``lax.scan`` program with donated
+ring caches and fused sampling (one dispatch for the whole tail),
+``gen_loop`` the per-step python loop it replaced (one dispatch per
+token). ``benchmarks.check_serving`` gates scan >= 2x loop at smoke
+scale — the dispatch/donation overhead the scan path deletes.
 
 Timing is a warmed, fixed-iteration, ``lax``-free python loop; the
 reported figure is the p50 over >= 5 repetitions (single-rep means on a
@@ -25,7 +35,12 @@ import jax.numpy as jnp
 
 from repro.configs import load_arch
 from repro.models import lm
-from repro.serve.step import convert_params_for_serving, serving_cycle_report
+from repro.serve.step import (
+    convert_params_for_serving,
+    generate_scan,
+    greedy_generate,
+    serving_cycle_report,
+)
 
 # (weight_bits, label, fast path?) — fast = grouped + resident shadow,
 # prepack = the pre-PR per-projection / per-call-unpack layout.
@@ -37,6 +52,14 @@ _CONTAINERS = [
     (4, "packed4_prepack", False),
     (1, "packed1_prepack", False),
 ]
+
+# generation sweep: every fast-path kind x decode batch; the python-loop
+# baseline rides once per kind (at _GEN_LOOP_BATCH) for the CI gate.
+_GEN_KINDS = [(0, "float_bf16"), (8, "int8"), (4, "packed4"), (1, "packed1")]
+_GEN_BATCHES = (1, 2, 8, 16)
+_GEN_LOOP_BATCH = 1
+_GEN_STEPS = 16
+_GEN_PROMPT = 8
 
 
 def _t(fn, *, iters: int = 10, reps: int = 7):
@@ -55,26 +78,28 @@ def _t(fn, *, iters: int = 10, reps: int = 7):
     return statistics.median(samples)
 
 
+def _serving_cfg_params(base, params0, wb, *, fast=True):
+    if wb == 0:
+        return base, params0, "float", None
+    cfg = dataclasses.replace(
+        base, ppac=dataclasses.replace(
+            base.ppac, enabled=True, weight_bits=wb, act_bits=8,
+            min_features=32))
+    # fast: grouped containers + platform-default shadow policy;
+    # prepack: per-projection, no shadow (per-call unpack — pre-PR)
+    params = convert_params_for_serving(
+        params0, cfg, group=fast, store_shadow=None if fast else False)
+    return cfg, params, "serve", serving_cycle_report(params, cfg)
+
+
 def run():
     rows = []
     base = load_arch("stablelm_12b").smoke()
     params0, _ = lm.init(base, jax.random.PRNGKey(0))
     slots, max_seq = 2, 32
     for wb, label, fast in _CONTAINERS:
-        if wb == 0:
-            cfg, params, mode, rep = base, params0, "float", None
-        else:
-            cfg = dataclasses.replace(
-                base, ppac=dataclasses.replace(
-                    base.ppac, enabled=True, weight_bits=wb, act_bits=8,
-                    min_features=32))
-            # fast: grouped containers + platform-default shadow policy;
-            # prepack: per-projection, no shadow (per-call unpack — pre-PR)
-            params = convert_params_for_serving(
-                params0, cfg, group=fast, store_shadow=None if fast else False)
-            mode = "serve"
-            rep = serving_cycle_report(params, cfg)
-
+        cfg, params, mode, rep = _serving_cfg_params(base, params0, wb,
+                                                     fast=fast)
         cache, _ = lm.init_cache(cfg, slots, max_seq)
         _, cache = jax.jit(
             lambda p, b, c, cfg=cfg, mode=mode: lm.prefill(p, cfg, b, c,
@@ -90,4 +115,40 @@ def run():
                    f"path={'fast' if fast else 'prepack'}" if rep
                    else "float baseline")
         rows.append((f"serve_decode_{label}_b{slots}", us, derived))
+    rows.extend(_generation_rows(base, params0))
+    return rows
+
+
+def _generation_rows(base, params0):
+    """End-to-end generation throughput: scan-fused vs per-step loop.
+
+    Each call is the full serving unit — cache init + prefill(b x 8) + 16
+    decoded tokens — so the row is honest end-to-end tokens/sec, and the
+    donated cache is freshly allocated per call (donation consumes it)."""
+    rows = []
+    gen_max_seq = _GEN_PROMPT + _GEN_STEPS + 1
+    for wb, label in _GEN_KINDS:
+        cfg, params, mode, _ = _serving_cfg_params(base, params0, wb)
+        for b in _GEN_BATCHES:
+            batch = {"tokens": jnp.ones((b, _GEN_PROMPT), jnp.int32)}
+
+            def scan_call(cfg=cfg, params=params, mode=mode, batch=batch):
+                return generate_scan(params, cfg, batch, steps=_GEN_STEPS,
+                                     max_seq=gen_max_seq, mode=mode)
+
+            us = _t(scan_call, iters=2, reps=5) / (_GEN_STEPS * b)
+            rows.append((f"gen_scan_{label}_b{b}", us,
+                         f"tok_s={1e6 / us:.0f};steps={_GEN_STEPS};"
+                         f"fused scan"))
+            if b == _GEN_LOOP_BATCH:
+                def loop_call(cfg=cfg, params=params, mode=mode,
+                              batch=batch):
+                    return greedy_generate(params, cfg, batch,
+                                           steps=_GEN_STEPS,
+                                           max_seq=gen_max_seq, mode=mode)
+
+                us = _t(loop_call, iters=2, reps=5) / (_GEN_STEPS * b)
+                rows.append((f"gen_loop_{label}_b{b}", us,
+                             f"tok_s={1e6 / us:.0f};steps={_GEN_STEPS};"
+                             f"per-step python loop"))
     return rows

@@ -15,9 +15,32 @@ batched compute, and the per-request retirement.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
+
+
+def bucket_for(count: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket holding ``count`` (largest bucket if none does)."""
+    for b in buckets:
+        if count <= b:
+            return b
+    return buckets[-1]
+
+
+def drain_take(queued: int, buckets: Sequence[int]) -> Tuple[int, int]:
+    """(take, bucket): whole buckets first, pad only the remainder.
+
+    Shared scheduling policy of every bucketed server (lookup, decode,
+    LM admission): while the queue fills a whole multi-row bucket, drain
+    it unpadded; only the final partial remainder is padded into the
+    smallest bucket that holds it."""
+    cap = min(queued, buckets[-1])
+    full = [b for b in buckets if 1 < b <= cap]
+    if full:
+        take = max(full)
+        return take, take
+    return cap, bucket_for(cap, buckets)
 
 
 class BucketedBatchServer:
@@ -54,19 +77,10 @@ class BucketedBatchServer:
         self.queue.append(req)
 
     def _bucket(self, count: int) -> int:
-        for b in self.buckets:
-            if count <= b:
-                return b
-        return self.buckets[-1]
+        return bucket_for(count, self.buckets)
 
     def _drain_size(self):
-        """(take, bucket): whole buckets first, pad only the remainder."""
-        cap = min(len(self.queue), self.buckets[-1])
-        full = [b for b in self.buckets if 1 < b <= cap]
-        if full:
-            take = max(full)
-            return take, take
-        return cap, self._bucket(cap)
+        return drain_take(len(self.queue), self.buckets)
 
     def step(self) -> List:
         """Drain one bucket; returns retired requests."""

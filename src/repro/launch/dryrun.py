@@ -123,7 +123,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     with mesh:
         cell = build_cell(cfg, shape, mesh, tcfg=tcfg, rules=rules,
                           serve_quant=serve_quant)
-        lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings).lower(
+        lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                          donate_argnums=cell.donate_argnums).lower(
             *cell.args)
         t_lower = time.time() - t0
         compiled = lowered.compile()

@@ -1,127 +1,36 @@
-"""Batched serving launcher: request queue -> prefill -> batched decode.
+"""Batched serving launcher (back-compat CLI over launch/serve_lm.py).
 
-A production-shaped (single-host scaled) server loop:
-  * requests arrive with different prompt lengths; they are left-padded
-    into fixed prefill buckets (compile-count bounded),
-  * decode runs as one fused batch step over all live requests,
-  * finished requests (EOS/length) retire and their slots are refilled
-    from the queue — a simple continuous-batching scheduler,
-  * optional PPAC quantized weights / int8 KV via flags; with
-    ``--serve-quant`` the decode matmuls run on the fused PPAC kernels
-    (packed bitplane weights) and the server reports the emulated PPAC
-    cycle cost per decoded token / per decode step (§III-C accounting).
+The server itself — slot-based continuous batching over a device-resident
+donated cache, bucketed right-padded prefill admission, per-sequence
+decode positions, fused on-device token selection — lives in
+:mod:`repro.launch.serve_lm`; this module keeps the original CLI (with
+the PPAC quantization / cycle-accounting / autotune flags) and the
+``BatchServer`` name for existing callers.
 
 CLI: PYTHONPATH=src python -m repro.launch.serve --arch smollm_360m \
         --requests 12 --max-new 16 [--serve-quant] [--weight-bits 4] \
-        [--kv-int8]
+        [--kv-int8] [--autotune]
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
-from typing import List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ModelConfig, load_arch
+from ..configs.base import load_arch
 from ..models import lm
 from ..serve.step import (
     autotune_serving_plans,
     convert_params_for_serving,
     serving_cycle_report,
 )
+from .serve_lm import LMServer, Request, run_and_report
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray
-    max_new: int
-    out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-class BatchServer:
-    """Slot-based continuous batching over a fixed decode batch."""
-
-    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_seq: int = 128, mode: str = "float"):
-        self.cfg, self.params, self.mode = cfg, params, mode
-        self.slots = slots
-        self.max_seq = max_seq
-        self.cache, _ = lm.init_cache(cfg, slots, max_seq)
-        self.live: List[Optional[Request]] = [None] * slots
-        self.queue: List[Request] = []
-        # one jitted decode step reused across the whole run
-        self._decode = jax.jit(
-            lambda p, t, c: lm.decode_step(p, cfg, t, c, mode=mode))
-        self._prefill_len = None
-
-    def submit(self, req: Request):
-        self.queue.append(req)
-
-    def _admit(self):
-        """Fill free slots. Single-slot prefill (padded to a bucket) keeps
-        the number of compiled prefill shapes bounded."""
-        for s in range(self.slots):
-            if self.live[s] is None and self.queue:
-                req = self.queue.pop(0)
-                plen = int(2 ** np.ceil(np.log2(max(8, len(req.prompt)))))
-                pad = plen - len(req.prompt)
-                toks = np.concatenate(
-                    [np.zeros(pad, np.int32), req.prompt]).astype(np.int32)
-                c1, _ = lm.init_cache(self.cfg, 1, self.max_seq)
-                logits, c1 = lm.prefill(
-                    self.params, self.cfg,
-                    {"tokens": jnp.asarray(toks[None, :])}, c1,
-                    mode=self.mode)
-                self.cache = self._merge_cache(c1, s)  # slot write
-                tok = int(jnp.argmax(logits[0, -1]))
-                req.out.append(tok)
-                self.live[s] = req
-
-    def _merge_cache(self, one_cache, s: int):
-        def merge(full, one):
-            if full.ndim >= 2 and one.ndim == full.ndim \
-                    and one.shape[0] == full.shape[0]:
-                # layer-stacked leaves: batch is axis 1
-                idx = (slice(None), slice(s, s + 1))
-                return full.at[idx].set(one)
-            return full
-        merged = jax.tree.map(merge, self.cache, one_cache)
-        # pos: single shared scalar — keep the max (prompts are bucketed)
-        merged["pos"] = jnp.maximum(self.cache["pos"], one_cache["pos"])
-        return merged
-
-    def step(self):
-        """One fused decode step over all slots."""
-        toks = np.zeros((self.slots, 1), np.int32)
-        for s, req in enumerate(self.live):
-            if req is not None and req.out:
-                toks[s, 0] = req.out[-1]
-        logits, self.cache = self._decode(self.params,
-                                          jnp.asarray(toks), self.cache)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
-        retired = []
-        for s, req in enumerate(self.live):
-            if req is None:
-                continue
-            req.out.append(int(nxt[s]))
-            if len(req.out) >= req.max_new:
-                req.done = True
-                retired.append(req)
-                self.live[s] = None
-        return retired
-
-    def run(self):
-        done = []
-        while self.queue or any(r is not None for r in self.live):
-            self._admit()
-            done.extend(self.step())
-        return done
+# Back-compat: the slot-based server moved to serve_lm and grew bucketed
+# admission + donated-cache residency; the old name stays importable.
+BatchServer = LMServer
 
 
 def main():
@@ -180,23 +89,13 @@ def main():
                  if est is not None else ""))
 
     rng = np.random.default_rng(0)
-    server = BatchServer(cfg, params, slots=args.slots, mode=mode)
-    t0 = time.time()
-    for i in range(args.requests):
-        plen = int(rng.integers(4, 24))
-        server.submit(Request(i, rng.integers(0, cfg.vocab, plen),
-                              args.max_new))
-    completed = server.run()
-    dt = time.time() - t0
-    toks = sum(len(r.out) for r in completed)
-    print(f"served {len(completed)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks / dt:.1f} tok/s, slots={args.slots})")
-    if report is not None:
-        print(f"PPAC compute: {toks * report.cycles_per_token} emulated "
-              f"cycles for {toks} decoded tokens "
-              f"({report.cycles_per_token}/token)")
-    for r in completed[:3]:
-        print(f"  req {r.rid}: {r.out[:8]}...")
+    server = LMServer(cfg, params, slots=args.slots, mode=mode)
+    run_and_report(
+        server,
+        [Request(i, rng.integers(0, cfg.vocab, int(rng.integers(4, 24))),
+                 args.max_new)
+         for i in range(args.requests)],
+        report=report)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,287 @@
+"""Continuous-batching LM decode server: device-resident ring/linear KV
+caches, slot-based admission/eviction, bucketed prefill.
+
+The serving loop the kernel work of PRs 3-4 was building toward — the LM
+itself served to many concurrent users:
+
+  * a resident cache pytree sized [slots, max_seq, ...] lives on device
+    for the whole server lifetime; every jitted entry point *donates* it
+    (``donate_argnums``), so per-token cache updates are in-place
+    scatters, never whole-cache copies,
+  * decode runs as ONE fused step over all slots with per-sequence
+    positions (``cache['pos']: [S]``) — sequences at different depths
+    (admitted mid-flight) share the step bit-exactly with solo decoding,
+  * new requests prefill into free slots while resident sequences keep
+    decoding: waiting prompts are drained in *batch buckets* (the shared
+    :func:`repro.launch.bucketed.drain_take` policy) and *right-padded*
+    into power-of-two length buckets — right padding + per-sequence
+    ``lengths`` keeps causal prefill bit-identical to the unpadded
+    prompt, and the number of compiled (batch, length) prefill shapes
+    stays bounded,
+  * per-slot retirement on EOS or length; the freed slot is refilled
+    from the queue on the next admission pass,
+  * token selection (greedy / temperature / top-k) is fused into the
+    prefill and decode programs — the host only ever sees the [S] int32
+    ids it needs for retirement decisions.
+
+CLI: PYTHONPATH=src python -m repro.launch.serve_lm --arch smollm_360m \
+        --requests 12 --max-new 16 [--serve-quant --weight-bits 4] \
+        [--kv-int8] [--temperature 0.8 --top-k 40] [--eos 0]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..configs.base import ModelConfig, load_arch
+from ..models import lm
+from ..serve.step import (
+    convert_params_for_serving,
+    make_decode_select_step,
+    sample_tokens,
+    serving_cycle_report,
+)
+from .bucketed import bucket_for, drain_take
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    eos: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    finish_reason: Optional[str] = None
+
+
+class LMServer:
+    """Slot-based continuous batching over a resident, donated cache."""
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_seq: int = 128, mode: str = "float", rules=None,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 admit_buckets: Sequence[int] = (1, 2, 4)):
+        assert tuple(admit_buckets) == tuple(sorted(admit_buckets))
+        if prefill_buckets is None:
+            # powers of two up to max_seq (any prompt that leaves room to
+            # decode is admissible; a bucket may not exceed the cache)
+            prefill_buckets, b = [], 8
+            while b < max_seq:
+                prefill_buckets.append(b)
+                b *= 2
+            prefill_buckets.append(max_seq)
+        assert tuple(prefill_buckets) == tuple(sorted(prefill_buckets))
+        assert prefill_buckets[-1] <= max_seq
+        self.cfg, self.params, self.mode = cfg, params, mode
+        self.slots, self.max_seq = slots, max_seq
+        self.prefill_buckets = tuple(prefill_buckets)
+        self.admit_buckets = tuple(admit_buckets)
+        # SSM state accumulation has no position mask: padded prefill
+        # would fold pad tokens into the recurrent state (wrong tokens,
+        # silently). SSM/hybrid prompts prefill at their exact length —
+        # batched only with same-length peers.
+        self.pad_prompts = cfg.family not in ("ssm", "hybrid")
+        self.live: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self.decode_steps = 0
+        self.admit_batches = 0
+        self._key = jax.random.PRNGKey(seed)
+        # the resident cache: allocated once, donated through every step
+        self.cache, _ = lm.init_cache(cfg, slots, max_seq)
+
+        # one fused decode+select step over all slots, cache donated
+        self._decode = make_decode_select_step(
+            cfg, rules, mode, temperature=temperature, top_k=top_k)
+
+        def prefill_select(params, tokens, lengths, cache, key):
+            logits, cache = lm.prefill(params, cfg, {"tokens": tokens},
+                                       cache, lengths=lengths, mode=mode,
+                                       rules=rules)
+            tok = sample_tokens(logits[:, -1], key, temperature=temperature,
+                                top_k=top_k)
+            return tok, cache
+        # compiles once per (batch-bucket, length-bucket) pair
+        self._prefill = jax.jit(prefill_select, donate_argnums=(3,))
+
+        def write_slot(cache, src, row, slot):
+            """Copy sequence ``row`` of a prefill cache into ``slot`` of
+            the resident cache — on device, resident cache donated."""
+            def leaf(full, one):
+                if full.ndim == 1:  # per-sequence pos vector
+                    return full.at[slot].set(
+                        lax.dynamic_index_in_dim(one, row, 0,
+                                                 keepdims=False))
+                r = lax.dynamic_slice_in_dim(one, row, 1, axis=1)
+                return lax.dynamic_update_slice_in_dim(
+                    full, r.astype(full.dtype), slot, axis=1)
+            return jax.tree.map(leaf, cache, src)
+        self._write = jax.jit(write_slot, donate_argnums=(0,))
+
+    # -- scheduling ----------------------------------------------------------
+
+    def submit(self, req: Request):
+        plen = len(req.prompt)
+        assert 0 < plen <= self.prefill_buckets[-1], plen
+        assert plen + req.max_new <= self.max_seq, \
+            f"prompt {plen} + max_new {req.max_new} exceeds max_seq " \
+            f"{self.max_seq}"
+        self.queue.append(req)
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _plen_bucket(self, plen: int) -> int:
+        """Padded prompt length for one request: a power-of-two bucket for
+        attention families (right-pad is bit-exact under causal masking),
+        the exact length for SSM/hybrid (padding would corrupt the state)."""
+        if self.pad_prompts:
+            return bucket_for(plen, self.prefill_buckets)
+        return plen
+
+    def _admit(self):
+        """Prefill waiting prompts into free slots, in bucketed batches.
+
+        FIFO groups share one padded-length bucket per batch; the batch
+        itself is padded to an admission bucket (``drain_take`` policy),
+        so compiled prefill shapes stay bounded at
+        len(prefill_buckets) x len(admit_buckets) (for SSM archs: one
+        shape per distinct prompt length instead)."""
+        free = [s for s in range(self.slots) if self.live[s] is None]
+        while free and self.queue:
+            plb = self._plen_bucket(len(self.queue[0].prompt))
+            cap, _ = drain_take(min(len(free), len(self.queue)),
+                                self.admit_buckets)
+            grp: List[Request] = []
+            while (self.queue and len(grp) < cap
+                   and self._plen_bucket(len(self.queue[0].prompt)) == plb):
+                grp.append(self.queue.pop(0))
+            blen = bucket_for(len(grp), self.admit_buckets)
+            toks = np.zeros((blen, plb), np.int32)
+            lens = np.ones((blen,), np.int32)
+            for i, r in enumerate(grp):
+                toks[i, :len(r.prompt)] = r.prompt  # RIGHT-pad: bit-exact
+                lens[i] = len(r.prompt)
+            c1, _ = lm.init_cache(self.cfg, blen, self.max_seq)
+            tok0, c1 = self._prefill(self.params, jnp.asarray(toks),
+                                     jnp.asarray(lens), c1,
+                                     self._next_key())
+            self.admit_batches += 1
+            tok0 = np.asarray(tok0)
+            for i, r in enumerate(grp):
+                s = free.pop(0)
+                self.cache = self._write(self.cache, c1,
+                                         jnp.int32(i), jnp.int32(s))
+                r.out.append(int(tok0[i]))
+                self.live[s] = r
+
+    def step(self) -> List[Request]:
+        """One fused decode step over all slots; returns retired requests."""
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s, r in enumerate(self.live):
+            if r is not None:
+                toks[s, 0] = r.out[-1]
+        nxt, self.cache = self._decode(self.params, jnp.asarray(toks),
+                                       self.cache, self._next_key())
+        self.decode_steps += 1
+        nxt = np.asarray(nxt)  # the only host transfer: [S] token ids
+        retired = []
+        for s, r in enumerate(self.live):
+            if r is None:
+                continue
+            t = int(nxt[s])
+            r.out.append(t)
+            hit_eos = r.eos is not None and t == r.eos
+            if hit_eos or len(r.out) >= r.max_new:
+                r.done = True
+                r.finish_reason = "eos" if hit_eos else "length"
+                retired.append(r)
+                self.live[s] = None  # evict: slot is free for re-admission
+        return retired
+
+    def run(self) -> List[Request]:
+        done = []
+        while self.queue or any(r is not None for r in self.live):
+            self._admit()
+            done.extend(self.step())
+        return done
+
+
+def run_and_report(server: LMServer, requests: List[Request], *,
+                   report=None) -> List[Request]:
+    """Submit, run to completion, and print the shared serving summary
+    (one copy for both the serve and serve_lm CLIs: identically-timed
+    tok/s, slot/bucket stats, optional PPAC cycle accounting)."""
+    for r in requests:
+        server.submit(r)
+    t0 = time.time()
+    completed = server.run()
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in completed)
+    print(f"served {len(completed)} requests, {toks} tokens in {dt:.1f}s "
+          f"({toks / dt:.1f} tok/s, slots={server.slots}, "
+          f"{server.decode_steps} decode steps, "
+          f"{server.admit_batches} prefill batches)")
+    if report is not None:
+        print(f"PPAC compute: {toks * report.cycles_per_token} emulated "
+              f"cycles for {toks} decoded tokens "
+              f"({report.cycles_per_token}/token)")
+    for r in completed[:3]:
+        print(f"  req {r.rid} [{r.finish_reason}]: {r.out[:8]}...")
+    return completed
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--eos", type=int, default=None)
+    ap.add_argument("--serve-quant", action="store_true")
+    ap.add_argument("--weight-bits", type=int, default=4,
+                    choices=(1, 2, 3, 4, 8))
+    ap.add_argument("--kv-int8", action="store_true")
+    args = ap.parse_args()
+
+    cfg = load_arch(args.arch).smoke()
+    if args.kv_int8:
+        cfg = dataclasses.replace(cfg, kv_dtype="int8")
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    mode, report = "float", None
+    if args.serve_quant:
+        cfg = dataclasses.replace(
+            cfg, ppac=dataclasses.replace(cfg.ppac, enabled=True,
+                                          weight_bits=args.weight_bits,
+                                          act_bits=8, min_features=32,
+                                          backend="auto"))
+        params = convert_params_for_serving(params, cfg)
+        mode = "serve"
+        report = serving_cycle_report(params, cfg)
+
+    server = LMServer(cfg, params, slots=args.slots, max_seq=args.max_seq,
+                      mode=mode, temperature=args.temperature,
+                      top_k=args.top_k)
+    rng = np.random.default_rng(0)
+    run_and_report(
+        server,
+        [Request(i, rng.integers(0, cfg.vocab, int(rng.integers(4, 24))),
+                 args.max_new, eos=args.eos)
+         for i in range(args.requests)],
+        report=report)
+
+
+if __name__ == "__main__":
+    main()

@@ -71,6 +71,10 @@ class Cell:
     cfg: ModelConfig
     shape: InputShape
     rules: ShardingRules
+    # argnums to donate when jitting fn (prefill/decode donate the cache:
+    # production decode must alias the in-place cache update, and the
+    # dry-run HLO should measure what production runs)
+    donate_argnums: Tuple[int, ...] = ()
 
 
 def build_cell(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
@@ -124,18 +128,19 @@ def build_cell(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
 
     if shape.kind == "prefill":
         batch = batch_specs(cfg, shape)
-        fn = make_prefill_step(cfg, rules=rules)
+        fn = make_prefill_step(cfg, rules=rules, jit=False)
         in_sh = (psh, batch_sharding(mesh, batch, shard_batch=shard_batch),
                  csh)
         return Cell(fn, (pshapes, batch, cache_shapes), in_sh, cfg, shape,
-                    rules)
+                    rules, donate_argnums=(2,))
 
     # decode: one new token against a full cache
     tokens = sds((b, 1), jnp.int32)
-    fn = make_decode_step(cfg, rules=rules)
+    fn = make_decode_step(cfg, rules=rules, jit=False)
     tok_sh = batch_sharding(mesh, tokens, shard_batch=shard_batch)
     in_sh = (psh, tok_sh, csh)
-    return Cell(fn, (pshapes, tokens, cache_shapes), in_sh, cfg, shape, rules)
+    return Cell(fn, (pshapes, tokens, cache_shapes), in_sh, cfg, shape, rules,
+                donate_argnums=(2,))
 
 
 def _abstract_cache(cfg: ModelConfig, b: int, max_seq: int):

@@ -6,11 +6,17 @@ remat of the chunk body — required for the 32k prefill shapes on a real
 chip and for bounded compile-time memory on the dry-run.
 
 KV caches are plain pytrees: {"k": [B,T,Hkv,D], "v": [B,T,Hkv,Dv]} with a
-scalar write position. Sliding-window attention uses a rolling cache of
-size ``window`` for decode (bounds long-context memory). MLA caches the
-compressed (kv_lora + rope) stream and decodes via the absorbed-projection
-trick — the KV-memory win that makes it the natural PPAC companion for
-decode shapes.
+*per-sequence* write position ``pos: [B]`` — mixed-progress batches (the
+continuous-batching server admits new prompts mid-flight) decode with one
+fused step. Sliding-window attention uses a rolling (ring) cache of size
+``window`` for decode: position ``p`` always lives at slot ``p % window``,
+in prefill and decode alike, so decode can roll straight out of any
+prefill length (bounds long-context memory). MLA caches the compressed
+(kv_lora + rope) stream and decodes via the absorbed-projection trick —
+the KV-memory win that makes it the natural PPAC companion for decode
+shapes. Decode writes are batched scatters (per-sequence slots), which
+lower in place when the cache pytree is donated (serve/step.py jits every
+decode entry point with ``donate_argnums`` on the cache).
 """
 from __future__ import annotations
 
@@ -214,15 +220,57 @@ def _q8_kv(x):
     return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
 
 
-def _decode_attend_q8(q, cache, pos, *, scale, rules=None):
-    """Quantized-cache decode attention, GQA-grouped (NO key/value repeat:
-    repeating a seq-sharded cache forces GSPMD into involuntary full
-    rematerialization — replicate + repartition of the whole cache per
-    layer; XLA emits a warning and ~800 GiB of phantom copies).
+def as_pos_vector(pos, batch: int):
+    """Normalize a write position (python int / scalar / [B]) to [B] int32."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (batch,))
+    return pos
 
+
+def _scatter_rows(cache_leaf, rows, slot):
+    """Write rows [B,1,...] at per-sequence slots [B] of cache [B,T,...]."""
+    b = cache_leaf.shape[0]
+    return cache_leaf.at[jnp.arange(b), slot].set(
+        rows[:, 0].astype(cache_leaf.dtype), mode="drop")
+
+
+def _ring_rows(stream, lengths, t: int):
+    """Ring-layout a per-position stream into rolling-cache rows.
+
+    stream: [B,S,...] (positions 0..S-1, right-padded past ``lengths``);
+    returns [B,t,...] where slot ``s`` holds the *latest* valid position
+    ``p < lengths`` with ``p % t == s`` (zeros for never-written slots).
+    This is exactly the layout decode's ``slot = pos % t`` writes produce,
+    so decode rolls seamlessly out of any prefill length — including
+    lengths that are neither multiples of nor smaller than the window.
+    """
+    b = stream.shape[0]
+    ln = lengths[:, None]                              # [B,1]
+    s_idx = jnp.arange(t)[None, :]                     # [1,t]
+    p = ln - 1 - jnp.mod(ln - 1 - s_idx, t)            # [B,t]
+    valid = (p >= 0) & (ln > 0)
+    idx = jnp.clip(p, 0, stream.shape[1] - 1)
+    rows = jnp.take_along_axis(
+        stream, idx.reshape((b, t) + (1,) * (stream.ndim - 2)), axis=1)
+    return jnp.where(valid.reshape((b, t) + (1,) * (stream.ndim - 2)),
+                     rows, jnp.zeros((), stream.dtype))
+
+
+def _decode_attend_q8(q, cache, k_valid, *, scale, rules=None):
+    """(Optionally quantized) cache decode attention, GQA-grouped (NO
+    key/value repeat: repeating a seq-sharded cache forces GSPMD into
+    involuntary full rematerialization — replicate + repartition of the
+    whole cache per layer; XLA emits a warning and ~800 GiB of phantom
+    copies).
+
+    ``k_valid: [B]`` — per-sequence count of valid cache slots (mixed-
+    progress batches decode at different positions in one fused step).
     The per-(t,g) scales factor out of both einsums, so no dequantized
     [B,T,G,D] tensor is materialized:
         scores = (q · ki) * ks ;  out = ((w*vs) · vi)
+    Like ``_attend_prepped``, every head-indexed einsum is constrained to
+    the 'model' axis (the grouped dim g carries the kv-head sharding).
     """
     b, s, h, d = q.shape          # s == 1
     ki, vi = cache["k"], cache["v"]
@@ -230,25 +278,34 @@ def _decode_attend_q8(q, cache, pos, *, scale, rules=None):
     t, g = ki.shape[1], ki.shape[2]
     rep = h // g
     qg = q.reshape(b, s, g, rep, d)
+    if rules is not None:
+        qg = constrain(qg, rules, "batch", None, "act_heads", None, None)
     scores = jnp.einsum("bsgrd,btgd->bgrst", qg, ki.astype(q.dtype),
                         preferred_element_type=jnp.float32) * scale
+    if rules is not None:
+        scores = constrain(scores, rules, "batch", "act_heads", None, None,
+                           None)
     if ks is not None:
         scores = scores * ks[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
-    mask = jnp.arange(t)[None, :] <= pos
-    scores = jnp.where(mask[None, None, None, :, :], scores, NEG_INF)
+    mask = jnp.arange(t)[None, :] < k_valid[:, None]   # [B,T]
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     wv = w.astype(q.dtype)
     if vs is not None:
         wv = wv * vs[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
     out = jnp.einsum("bgrst,btgv->bsgrv", wv, vi.astype(q.dtype),
                      preferred_element_type=jnp.float32)
+    if rules is not None:
+        out = constrain(out, rules, "batch", None, "act_heads", None, None)
     return out.reshape(b, s, h, -1).astype(q.dtype)
 
 
 def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
-              mode: str = "float", rules=None):
-    """x: [B,S,d]. Train/prefill when cache is None or S>1 (writes cache at
-    offset 0); decode (S==1) updates the rolling/linear cache at ``pos``."""
+              lengths=None, mode: str = "float", rules=None):
+    """x: [B,S,d]. Train/prefill when cache is None or S>1 (writes cache
+    at positions [0, lengths) — right-padded ragged prompts supported);
+    decode (S==1) updates the rolling/linear cache at per-sequence
+    ``pos: [B]`` (scalars are broadcast)."""
     dtype = jnp.dtype(cfg.dtype)
     b, s, d = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -275,8 +332,13 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
                                  scores_dtype=sdt)
     elif s > 1:  # prefill into cache
         t = cache["k"].shape[1]
-        kw = k[:, -t:] if cfg.sliding_window else k
-        vw = v[:, -t:] if cfg.sliding_window else v
+        if cfg.sliding_window:
+            # ring layout: position p at slot p % t, per-sequence lengths
+            ln = (jnp.full((b,), s, jnp.int32) if lengths is None
+                  else as_pos_vector(lengths, b))
+            kw, vw = _ring_rows(k, ln, t), _ring_rows(v, ln, t)
+        else:
+            kw, vw = k, v
         if "ks" in cache:
             kq, ksc = _q8_kv(kw)
             vq, vsc = _q8_kv(vw)
@@ -299,42 +361,31 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
                                  remat=cfg.remat != "none", rules=rules,
                                  blocking=cfg.attn_blocking,
                                  scores_dtype=sdt)
-    elif "ks" in cache:  # decode against the quantized cache
-        kq, ksc = _q8_kv(k)
-        vq, vsc = _q8_kv(v)
-        new_cache = {
-            "k": lax.dynamic_update_slice(cache["k"], kq, (0, pos, 0, 0)),
-            "v": lax.dynamic_update_slice(cache["v"], vq, (0, pos, 0, 0)),
-            "ks": lax.dynamic_update_slice(cache["ks"], ksc, (0, pos, 0, 0)),
-            "vs": lax.dynamic_update_slice(cache["vs"], vsc, (0, pos, 0, 0)),
-        }
-        attn = _decode_attend_q8(q, new_cache, pos, scale=hd ** -0.5,
-                                 rules=rules)
-    else:  # decode
+    else:  # decode, S == 1, per-sequence positions
         t = cache["k"].shape[1]
-        slot = (pos % t) if cfg.sliding_window else pos
-        ck = lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-        cv = lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-        new_cache = {"k": ck, "v": cv}
-        if not cfg.sliding_window:
-            attn = _decode_attend_q8(q, new_cache, pos, scale=hd ** -0.5,
-                                     rules=rules)
-        elif cfg.sliding_window:
-            # rolling cache: entries are valid but unordered; causality is
-            # guaranteed by construction (all entries are within window).
-            kpos_valid = jnp.minimum(pos + 1, t)
-            attn = chunked_attention(q, ck.astype(dtype), cv.astype(dtype),
-                                     q_offset=pos, k_valid=kpos_valid,
-                                     causal=False, window=0,
-                                     scale=hd ** -0.5, remat=False,
-                                     rules=rules)
+        pos = as_pos_vector(pos, b)
+        if cfg.sliding_window:
+            slot = pos % t           # rolling (ring) cache
+            k_valid = jnp.minimum(pos + 1, t)
         else:
-            attn = chunked_attention(q, ck.astype(dtype), cv.astype(dtype),
-                                     q_offset=pos, k_valid=pos + 1,
-                                     causal=False, scale=hd ** -0.5,
-                                     remat=False, rules=rules)
+            slot = pos               # linear cache
+            k_valid = pos + 1
+        if "ks" in cache:            # quantized store
+            kq, ksc = _q8_kv(k)
+            vq, vsc = _q8_kv(v)
+            new_cache = {
+                "k": _scatter_rows(cache["k"], kq, slot),
+                "v": _scatter_rows(cache["v"], vq, slot),
+                "ks": _scatter_rows(cache["ks"], ksc, slot),
+                "vs": _scatter_rows(cache["vs"], vsc, slot),
+            }
+        else:
+            new_cache = {"k": _scatter_rows(cache["k"], k, slot),
+                         "v": _scatter_rows(cache["v"], v, slot)}
+        # rolling-cache entries are unordered but all within the window,
+        # so the validity mask alone is the correct attention mask.
+        attn = _decode_attend_q8(q, new_cache, k_valid, scale=hd ** -0.5,
+                                 rules=rules)
     attn = attn.reshape(b, s, h * hd).astype(dtype)
     y = dense_apply(p["wo"], attn, ppac=cfg.ppac, mode=mode, dtype=dtype)
     return y, new_cache
@@ -379,7 +430,7 @@ MLA_CACHE_AXES = {"kv_c": ("batch", "kv_seq", None),
 
 
 def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
-              mode: str = "float", rules=None):
+              lengths=None, mode: str = "float", rules=None):
     m = cfg.mla
     dtype = jnp.dtype(cfg.dtype)
     b, s, d = x.shape
@@ -420,11 +471,11 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
                     cache["k_rope"], k_r.astype(cache["k_rope"].dtype), (0, 0, 0)),
             }
     else:
-        # Absorbed decode: score against the compressed cache directly.
-        ck = lax.dynamic_update_slice(
-            cache["kv_c"], kv_c.astype(cache["kv_c"].dtype), (0, pos, 0))
-        cr = lax.dynamic_update_slice(
-            cache["k_rope"], k_r.astype(cache["k_rope"].dtype), (0, pos, 0))
+        # Absorbed decode: score against the compressed cache directly,
+        # at per-sequence write positions.
+        pos = as_pos_vector(pos, b)
+        ck = _scatter_rows(cache["kv_c"], kv_c, pos)
+        cr = _scatter_rows(cache["k_rope"], k_r, pos)
         new_cache = {"kv_c": ck, "k_rope": cr}
         t = ck.shape[1]
         w_uk = p["w_uk"]["w"].astype(dtype).reshape(m.kv_lora_rank, h, dn)
@@ -435,8 +486,8 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
                   + jnp.einsum("bshd,btd->bhst", q_r, cr,
                                preferred_element_type=jnp.float32)) * scale
         k_pos = jnp.arange(t)
-        mask = k_pos[None, :] <= pos
-        scores = jnp.where(mask[None, None, :, :], scores, NEG_INF)
+        mask = k_pos[None, :] <= pos[:, None]          # [B,T]
+        scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
         wts = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bhst,btl->bshl", wts.astype(ck.dtype), ck,
                          preferred_element_type=jnp.float32)

@@ -114,10 +114,11 @@ def _dense_block_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
 
 
 def _dense_block_apply(p, x, cfg, *, positions, cache=None, pos=None,
-                       mode="float", rules=None):
+                       lengths=None, mode="float", rules=None):
     h = rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
     att, new_cache = _attn_apply(p["attn"], h, cfg, positions=positions,
-                                 cache=cache, pos=pos, mode=mode, rules=rules)
+                                 cache=cache, pos=pos, lengths=lengths,
+                                 mode=mode, rules=rules)
     x = x + att
     x = constrain(x, rules, "batch", "seq", None) if rules else x
     h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
@@ -136,10 +137,11 @@ def _moe_block_init(key, cfg: ModelConfig):
 
 
 def _moe_block_apply(p, x, cfg, *, positions, cache=None, pos=None,
-                     mode="float", rules=None):
+                     lengths=None, mode="float", rules=None):
     h = rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
     att, new_cache = _attn_apply(p["attn"], h, cfg, positions=positions,
-                                 cache=cache, pos=pos, mode=mode, rules=rules)
+                                 cache=cache, pos=pos, lengths=lengths,
+                                 mode=mode, rules=rules)
     x = x + att
     x = constrain(x, rules, "batch", "seq", None) if rules else x
     h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
@@ -155,7 +157,7 @@ def _ssm_block_init(key, cfg: ModelConfig):
 
 
 def _ssm_block_apply(p, x, cfg, *, positions=None, cache=None, pos=None,
-                     mode="float", rules=None):
+                     lengths=None, mode="float", rules=None):
     h = rmsnorm_apply(p["ln"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
     y, new_cache = ssm_mod.mamba2_apply(p["mamba"], h, cfg, cache=cache,
                                         mode=mode)
@@ -224,7 +226,8 @@ def _embed_inputs(params, cfg: ModelConfig, batch, rules=None):
 
 
 def _run_layers(params, cfg: ModelConfig, h, *, positions, caches=None,
-                pos=None, mode="float", rules=None, layer_offset=0):
+                pos=None, lengths=None, mode="float", rules=None,
+                layer_offset=0):
     """Scan (or unroll, for hybrid) the stacked blocks; returns
     (h, new_caches, aux)."""
     _, bapply = _block_fns(cfg)
@@ -238,7 +241,7 @@ def _run_layers(params, cfg: ModelConfig, h, *, positions, caches=None,
         else:
             lp, lc = xs
         hh, nc, a2 = bapply(lp, hh, cfg, positions=positions, cache=lc,
-                            pos=pos, mode=mode, rules=rules)
+                            pos=pos, lengths=lengths, mode=mode, rules=rules)
         ax = {k: ax[k] + a2[k] for k in ax}
         return (hh, ax), (nc if caches is not None else 0)
 
@@ -256,12 +259,12 @@ def _run_layers(params, cfg: ModelConfig, h, *, positions, caches=None,
         # body checkpoint).
         def shared_fn(sp, hh, sc):
             return _dense_block_apply(sp, hh, cfg, positions=positions,
-                                      cache=sc, pos=pos, mode=mode,
-                                      rules=rules)
+                                      cache=sc, pos=pos, lengths=lengths,
+                                      mode=mode, rules=rules)
 
         def block_fn(lp, hh, lc):
             return bapply(lp, hh, cfg, positions=positions, cache=lc,
-                          pos=pos, mode=mode, rules=rules)
+                          pos=pos, lengths=lengths, mode=mode, rules=rules)
 
         if cfg.remat != "none":
             shared_fn = jax.checkpoint(shared_fn)
@@ -373,8 +376,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
         axes["shared"] = jax.tree.map(
             lambda ax: ("layers",) + tuple(ax), attn_mod.GQA_CACHE_AXES,
             is_leaf=_is_axes)
-    cache["pos"] = jnp.zeros((), jnp.int32)
-    axes["pos"] = None
+    # per-sequence decode positions: mixed-progress batches (continuous
+    # batching) decode with one fused step
+    cache["pos"] = jnp.zeros((batch,), jnp.int32)
+    axes["pos"] = ("batch",)
     return cache, axes
 
 
@@ -383,13 +388,23 @@ def _split_pos(cache):
     return c, cache["pos"]
 
 
-def prefill(params, cfg: ModelConfig, batch, cache, *, mode: str = "float",
-            rules: Optional[ShardingRules] = None):
-    """Run the full prompt, filling caches. Returns (logits, cache)."""
+def prefill(params, cfg: ModelConfig, batch, cache, *, lengths=None,
+            mode: str = "float", rules: Optional[ShardingRules] = None):
+    """Run the full prompt, filling caches. Returns (logits, cache).
+
+    ``lengths: [B]`` (optional) — per-sequence prompt lengths for
+    *right-padded* ragged batches: the returned logits are taken at each
+    sequence's last real token, ``cache['pos']`` starts each sequence at
+    its own length, and attention-family caches mask the padded tail
+    (causal attention makes right-pad bit-exact; SSM state accumulation
+    has no position mask, so ragged prefill is attention-only — SSM
+    prompts must arrive unpadded)."""
     caches, _ = _split_pos(cache)
     h = _embed_inputs(params, cfg, batch, rules)
     b, s, _ = h.shape
     positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    ln = (jnp.full((b,), s, jnp.int32) if lengths is None
+          else jnp.asarray(lengths, jnp.int32))
     aux = AUX0()
     new = dict(cache)
     if "dense_layers" in params:
@@ -398,34 +413,38 @@ def prefill(params, cfg: ModelConfig, batch, cache, *, mode: str = "float",
             lp = jax.tree.map(lambda t: t[i], params["dense_layers"])
             lc = jax.tree.map(lambda t: t[i], caches["dense_layers"])
             h, nc, _ = _dense_block_apply(lp, h, cfg, positions=positions,
-                                          cache=lc, mode=mode, rules=rules)
+                                          cache=lc, lengths=ln, mode=mode,
+                                          rules=rules)
             ncs.append(nc)
         new["dense_layers"] = jax.tree.map(lambda *t: jnp.stack(t), *ncs)
     h, ncaches, _ = _run_layers(params, cfg, h, positions=positions,
                                 caches={k: caches[k] for k in ("layers", "shared")
                                         if k in caches},
-                                mode=mode, rules=rules)
+                                lengths=ln, mode=mode, rules=rules)
     new.update(ncaches)
     h = rmsnorm_apply(params["final_norm"], h, eps=cfg.norm_eps,
                       dtype=jnp.dtype(cfg.dtype))
-    h_last = h[:, -1:, :]
+    h_last = jnp.take_along_axis(h, (ln - 1)[:, None, None], axis=1)
     if cfg.tie_embeddings:
         logits = unembed_apply(params["embed"], h_last,
                                dtype=jnp.dtype(cfg.dtype))
     else:
         logits = dense_apply(params["lm_head"], h_last,
                              dtype=jnp.dtype(cfg.dtype)).astype(jnp.float32)
-    new["pos"] = jnp.asarray(s, jnp.int32)
+    new["pos"] = ln
     return logits, new
 
 
 def decode_step(params, cfg: ModelConfig, tokens, cache, *,
                 mode: str = "float", rules: Optional[ShardingRules] = None):
-    """One decode step: tokens [B,1] -> (logits [B,1,V], cache)."""
+    """One decode step: tokens [B,1] -> (logits [B,1,V], cache).
+    ``cache['pos']`` is a per-sequence [B] vector (mixed-progress batches
+    from the continuous-batching server decode in one fused step)."""
     caches, pos = _split_pos(cache)
     h = embed_apply(params["embed"], tokens, dtype=jnp.dtype(cfg.dtype))
     b = h.shape[0]
-    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None]
     new = dict(cache)
     if "dense_layers" in params:
         ncs = []

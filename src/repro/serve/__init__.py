@@ -1,6 +1,10 @@
 from .step import (  # noqa: F401
     convert_params_for_serving,
+    generate_scan,
     greedy_generate,
+    make_decode_select_step,
     make_decode_step,
+    make_generate_scan,
     make_prefill_step,
+    sample_tokens,
 )

@@ -1,4 +1,14 @@
-"""Serving steps: prefill / decode wrappers + PPAC weight conversion.
+"""Serving steps: donated prefill/decode/generation + PPAC weight conversion.
+
+Generation is *device-resident*: every jitted entry point donates the KV
+cache pytree (``donate_argnums``), so per-step cache writes lower to
+in-place ``dynamic_update_slice``/scatter instead of whole-cache copies —
+the data-movement tax the paper's weight-stationary premise (§III) exists
+to avoid, and exactly the invariant tests/test_generate.py asserts on the
+lowered HLO (every cache leaf carries an aliasing attribute). On top of
+the per-step path, :func:`generate_scan` fuses N decode steps *and* the
+sampling (greedy / temperature / top-k) into one ``lax.scan`` program —
+one dispatch for the whole generation instead of one per token.
 
 ``convert_params_for_serving`` is the PPAC load path: projection weights
 become resident quantized containers (int8 / packed4 / packed1), exactly
@@ -15,6 +25,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from ..configs.base import ModelConfig
 from ..core.cost_model import (
@@ -28,36 +39,199 @@ from ..models import lm
 from ..sharding.rules import ShardingRules
 
 
+def _maybe_cached(factory):
+    """lru-cache a jitted-entry-point factory on its hashable args.
+
+    jax.jit caches traces by function identity: a fresh wrapper per call
+    would retrace (and recompile) every generation. ModelConfig is a
+    frozen dataclass, so (cfg, mode, ...) keys are hashable; unhashable
+    ``rules`` objects fall through to an uncached build (sharded callers
+    hold on to the returned function themselves)."""
+    cached = functools.lru_cache(maxsize=128)(factory)
+
+    @functools.wraps(factory)
+    def build(*args):
+        try:
+            return cached(*args)
+        except TypeError:  # unhashable arg (e.g. ShardingRules)
+            return factory(*args)
+    return build
+
+
+@_maybe_cached
+def _prefill_step_cached(cfg, rules, mode, donate):
+    def prefill_step(params, batch, cache, lengths=None):
+        return lm.prefill(params, cfg, batch, cache, lengths=lengths,
+                          mode=mode, rules=rules)
+    return jax.jit(prefill_step, donate_argnums=(2,) if donate else ())
+
+
 def make_prefill_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None,
-                      mode: str = "float"):
-    def prefill_step(params, batch, cache):
-        return lm.prefill(params, cfg, batch, cache, mode=mode, rules=rules)
-    return prefill_step
+                      mode: str = "float", *, jit: bool = True,
+                      donate: bool = True):
+    """(params, batch, cache, lengths=None) -> (logits, cache).
+
+    Jitted with the cache donated by default: prefill writes the whole
+    prompt into a zero cache, so the input buffers are dead on return.
+    ``jit=False`` returns the raw function (the dry-run wraps it in its
+    own sharded jit)."""
+    if not jit:
+        def prefill_step(params, batch, cache, lengths=None):
+            return lm.prefill(params, cfg, batch, cache, lengths=lengths,
+                              mode=mode, rules=rules)
+        return prefill_step
+    return _prefill_step_cached(cfg, rules, mode, donate)
 
 
-def make_decode_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None,
-                     mode: str = "float"):
+@_maybe_cached
+def _decode_step_cached(cfg, rules, mode, donate):
     def decode_step(params, tokens, cache):
         return lm.decode_step(params, cfg, tokens, cache, mode=mode,
                               rules=rules)
-    return decode_step
+    return jax.jit(decode_step, donate_argnums=(2,) if donate else ())
+
+
+def make_decode_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None,
+                     mode: str = "float", *, jit: bool = True,
+                     donate: bool = True):
+    """(params, tokens, cache) -> (logits, cache), cache donated.
+
+    Donation is what makes the per-layer cache update an in-place
+    scatter: without it XLA must copy every [B,T,H,D] cache leaf per
+    layer per token to preserve the (dead) input buffers."""
+    if not jit:
+        def decode_step(params, tokens, cache):
+            return lm.decode_step(params, cfg, tokens, cache, mode=mode,
+                                  rules=rules)
+        return decode_step
+    return _decode_step_cached(cfg, rules, mode, donate)
+
+
+# -- fused sampling ------------------------------------------------------------
+
+def sample_tokens(logits, key, *, temperature: float = 0.0, top_k: int = 0):
+    """logits [B,V] -> tokens [B] int32, on device.
+
+    temperature == 0 -> greedy argmax (key unused); otherwise softmax
+    sampling at ``temperature``, optionally restricted to the ``top_k``
+    highest-scoring tokens. Static python knobs: each setting is its own
+    compiled program, fused into the decode step / scan body."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+@_maybe_cached
+def _decode_select_cached(cfg, rules, mode, temperature, top_k, donate):
+    def step(params, tokens, cache, key):
+        logits, cache = lm.decode_step(params, cfg, tokens, cache,
+                                       mode=mode, rules=rules)
+        nxt = sample_tokens(logits[:, -1], key, temperature=temperature,
+                            top_k=top_k)
+        return nxt, cache
+    return jax.jit(step, donate_argnums=(2,) if donate else ())
+
+
+def make_decode_select_step(cfg: ModelConfig,
+                            rules: Optional[ShardingRules] = None,
+                            mode: str = "float", *,
+                            temperature: float = 0.0, top_k: int = 0,
+                            donate: bool = True):
+    """(params, tokens [B,1], cache, key) -> (next [B] int32, cache).
+
+    One fused, cache-donating dispatch per token: decode + token
+    selection stay on device — the host never sees logits, only the [B]
+    token ids it actually needs (EOS/retirement decisions)."""
+    return _decode_select_cached(cfg, rules, mode, temperature, top_k,
+                                 donate)
 
 
 def greedy_generate(params, cfg: ModelConfig, batch, *, steps: int,
                     max_seq: int, mode: str = "float"):
-    """Reference generation loop (prefill + greedy decode), jit per step."""
+    """Reference per-step generation loop (prefill + greedy decode).
+
+    Legacy path kept as the scan baseline: still one jitted dispatch per
+    token, but token selection is fused into the decode step and the
+    cache is donated — nothing round-trips to the host between steps
+    (the [B, steps] token matrix transfers once, at the end)."""
     b = jax.tree.leaves(batch)[0].shape[0]
     cache, _ = lm.init_cache(cfg, b, max_seq)
-    prefill = jax.jit(make_prefill_step(cfg, mode=mode))
-    decode = jax.jit(make_decode_step(cfg, mode=mode))
+    prefill = make_prefill_step(cfg, mode=mode)
+    decode = make_decode_select_step(cfg, mode=mode)
+    key = jax.random.PRNGKey(0)  # greedy: unused, fixed shape
     logits, cache = prefill(params, batch, cache)
+    tok = sample_tokens(logits[:, -1], key)
     out = []
-    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
     for _ in range(steps):
         out.append(tok)
-        logits, cache = decode(params, tok, cache)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    return jnp.concatenate(out, axis=1)
+        tok, cache = decode(params, tok[:, None], cache, key)
+    return jnp.stack(out, axis=1)
+
+
+@_maybe_cached
+def _generate_scan_cached(cfg, steps, rules, mode, temperature, top_k,
+                          donate):
+
+    def gen(params, logits, cache, key):
+        key, k0 = jax.random.split(key)
+        tok0 = sample_tokens(logits[:, -1], k0, temperature=temperature,
+                             top_k=top_k)
+
+        def body(carry, _):
+            tok, cache, key = carry
+            logits, cache = lm.decode_step(params, cfg, tok[:, None], cache,
+                                           mode=mode, rules=rules)
+            key, ks = jax.random.split(key)
+            nxt = sample_tokens(logits[:, -1], ks, temperature=temperature,
+                                top_k=top_k)
+            return (nxt, cache, key), tok
+
+        (last, cache, _), toks = lax.scan(body, (tok0, cache, key), None,
+                                          length=steps)
+        return jnp.moveaxis(toks, 0, 1), cache
+    return jax.jit(gen, donate_argnums=(2,) if donate else ())
+
+
+def make_generate_scan(cfg: ModelConfig, *, steps: int,
+                       rules: Optional[ShardingRules] = None,
+                       mode: str = "float", temperature: float = 0.0,
+                       top_k: int = 0, donate: bool = True):
+    """One on-device program for the whole generation tail.
+
+    (params, logits [B,1,V], cache, key) -> (tokens [B, steps], cache):
+    samples the first token from the prefill logits, then runs ``steps``
+    decode steps inside a single ``lax.scan`` with sampling fused in.
+    The cache is donated and scan-carried, so every per-layer cache
+    update is an in-place write — no cache-sized copy anywhere in the
+    program — and the host pays one dispatch for N tokens."""
+    return _generate_scan_cached(cfg, steps, rules, mode, temperature,
+                                 top_k, donate)
+
+
+def generate_scan(params, cfg: ModelConfig, batch, *, steps: int,
+                  max_seq: int, mode: str = "float",
+                  temperature: float = 0.0, top_k: int = 0, key=None,
+                  rules: Optional[ShardingRules] = None,
+                  return_cache: bool = False):
+    """Device-resident generation: prefill + one fused N-step scan.
+
+    Semantics match :func:`greedy_generate` at temperature 0 (token i is
+    sampled from the logits *before* decode step i), with temperature /
+    top-k sampling available via the fused sampler. Returns [B, steps]
+    int32 tokens (and the final cache with ``return_cache``)."""
+    b = jax.tree.leaves(batch)[0].shape[0]
+    cache, _ = lm.init_cache(cfg, b, max_seq)
+    prefill = make_prefill_step(cfg, rules, mode)
+    gen = make_generate_scan(cfg, steps=steps, rules=rules, mode=mode,
+                             temperature=temperature, top_k=top_k)
+    logits, cache = prefill(params, batch, cache)
+    key = jax.random.PRNGKey(0) if key is None else key
+    toks, cache = gen(params, logits, cache, key)
+    return (toks, cache) if return_cache else toks
 
 
 # -- PPAC serving conversion ---------------------------------------------------

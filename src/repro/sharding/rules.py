@@ -47,6 +47,12 @@ DEFAULT_RULES: Dict[str, MeshAxes] = {
 class ShardingRules:
     rules: Dict[str, MeshAxes]
 
+    def __hash__(self):
+        # treated as immutable everywhere (with_overrides/for_mesh build
+        # new instances); hashable so jitted-entry-point factories can
+        # lru-cache on (cfg, rules, ...) instead of retracing per call
+        return hash(tuple(sorted(self.rules.items())))
+
     def spec(self, logical_axes: Optional[Tuple[Optional[str], ...]]) -> PartitionSpec:
         if logical_axes is None:
             return PartitionSpec()

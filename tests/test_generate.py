@@ -1,0 +1,245 @@
+"""Device-resident generation: scan/loop parity, fused sampling, cache
+donation (asserted on the lowered HLO), ring-cache wraparound, and
+per-sequence position vectors with ragged batches."""
+import dataclasses
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import load_arch
+from repro.models import lm
+from repro.serve.step import (
+    generate_scan,
+    greedy_generate,
+    make_decode_step,
+    make_generate_scan,
+    make_prefill_step,
+    sample_tokens,
+)
+
+
+def _tokens(rng, cfg, b, s):
+    return jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+
+
+# -- scan-fused generation ----------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["smollm_360m", "h2o_danube3_4b",
+                                  "mamba2_370m"])
+def test_generate_scan_matches_per_step_loop(rng, arch):
+    """The fused N-step scan program reproduces the per-step loop exactly
+    (dense, sliding-window, and SSM cache flavors)."""
+    cfg = dataclasses.replace(load_arch(arch).smoke(), dtype="float32")
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": _tokens(rng, cfg, 2, 8)}
+    ref = greedy_generate(params, cfg, batch, steps=6, max_seq=32)
+    got = generate_scan(params, cfg, batch, steps=6, max_seq=32)
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_generate_scan_quantized_serving(rng):
+    cfg = load_arch("stablelm_12b").smoke()
+    cfg = dataclasses.replace(
+        cfg, ppac=dataclasses.replace(cfg.ppac, enabled=True, weight_bits=4,
+                                      act_bits=8, min_features=32))
+    from repro.serve.step import convert_params_for_serving
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    served = convert_params_for_serving(params, cfg)
+    batch = {"tokens": _tokens(rng, cfg, 2, 8)}
+    ref = greedy_generate(served, cfg, batch, steps=4, max_seq=32,
+                          mode="serve")
+    got = generate_scan(served, cfg, batch, steps=4, max_seq=32,
+                        mode="serve")
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_sampling_top1_is_greedy(rng):
+    """temperature > 0 with top_k=1 must collapse to argmax exactly."""
+    logits = jnp.asarray(rng.standard_normal((4, 33)), jnp.float32)
+    key = jax.random.PRNGKey(7)
+    greedy = sample_tokens(logits, key)
+    top1 = sample_tokens(logits, key, temperature=1.3, top_k=1)
+    assert np.array_equal(np.asarray(greedy), np.asarray(top1))
+
+
+def test_sampling_top_k_restricts_support(rng):
+    logits = jnp.asarray(rng.standard_normal((64, 40)), jnp.float32)
+    k = 3
+    topk_ids = np.asarray(jax.lax.top_k(logits, k)[1])
+    toks = np.asarray(sample_tokens(logits, jax.random.PRNGKey(0),
+                                    temperature=5.0, top_k=k))
+    for i, t in enumerate(toks):
+        assert t in topk_ids[i]
+
+
+def test_generate_scan_sampling_deterministic_per_key(rng):
+    cfg = dataclasses.replace(load_arch("smollm_360m").smoke(),
+                              dtype="float32")
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": _tokens(rng, cfg, 2, 8)}
+    kw = dict(steps=5, max_seq=32, temperature=0.9, top_k=8)
+    a = generate_scan(params, cfg, batch, key=jax.random.PRNGKey(5), **kw)
+    b = generate_scan(params, cfg, batch, key=jax.random.PRNGKey(5), **kw)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert (np.asarray(a) < cfg.vocab).all() and (np.asarray(a) >= 0).all()
+
+
+# -- the donation invariant, on the lowered HLO -------------------------------
+
+def _data_movement_results(hlo_text, op):
+    """(operand_elems, result_elems) of every ``op`` whose operand is an
+    actual tensor (scalar-fill broadcasts are buffer *allocations* — e.g.
+    a scan's ys init — not movement of cache-sized data)."""
+    out = []
+    pat = rf"{op} [^:\n]*:\s*\(tensor<([0-9x]*)[a-z][^)]*\)\s*->\s*" \
+          rf"tensor<([0-9x]*)x?[a-z]"
+    for m in re.finditer(pat, hlo_text):
+        src = [int(d) for d in m.group(1).split("x") if d]
+        dst = [int(d) for d in m.group(2).split("x") if d]
+        if not src:
+            continue  # scalar operand: allocation, not data movement
+        out.append((int(np.prod(src)), int(np.prod(dst)) if dst else 1))
+    return out
+
+
+def _assert_cache_donated(lowered_text, cache, *, skip=()):
+    """Every (live) cache leaf argument must carry an aliasing attribute
+    (the donation contract XLA lowers to an in-place update), and no
+    broadcast/concatenate in the program may materialize a cache-sized
+    copy of real data (the repack/copy class donation exists to delete).
+    ``skip`` names cache entries the program provably never reads (jax
+    drops dead args from the lowering, e.g. prefill overwrites 'pos')."""
+    n_alias = lowered_text.count("tf.aliasing_output")
+    n_leaves = len(jax.tree.leaves(
+        {k: v for k, v in cache.items() if k not in skip}))
+    assert n_alias >= n_leaves, (n_alias, n_leaves)
+    cache_elems = max(np.prod(l.shape)
+                      for l in jax.tree.leaves(cache) if l.ndim > 1)
+    for op in ("broadcast_in_dim", "concatenate"):
+        big = [d for _, d in _data_movement_results(lowered_text, op)
+               if d >= cache_elems]
+        assert not big, (op, big, int(cache_elems))
+
+
+@pytest.mark.parametrize("kv_dtype", ["bfloat16", "int8"])
+def test_decode_step_hlo_donates_cache(kv_dtype):
+    cfg = dataclasses.replace(load_arch("stablelm_12b").smoke(),
+                              kv_dtype=kv_dtype)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cache, _ = lm.init_cache(cfg, 2, 64)
+    dec = make_decode_step(cfg)
+    txt = dec.lower(params, jnp.ones((2, 1), jnp.int32), cache).as_text()
+    _assert_cache_donated(txt, cache)
+
+
+def test_generate_scan_hlo_donates_cache():
+    cfg = load_arch("stablelm_12b").smoke()
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cache, _ = lm.init_cache(cfg, 2, 64)
+    gen = make_generate_scan(cfg, steps=4)
+    logits = jnp.zeros((2, 1, cfg.vocab), jnp.float32)
+    txt = gen.lower(params, logits, cache, jax.random.PRNGKey(0)).as_text()
+    _assert_cache_donated(txt, cache)
+
+
+def test_prefill_step_hlo_donates_cache():
+    cfg = load_arch("stablelm_12b").smoke()
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cache, _ = lm.init_cache(cfg, 2, 64)
+    pre = make_prefill_step(cfg)
+    txt = pre.lower(params, {"tokens": jnp.ones((2, 8), jnp.int32)},
+                    cache).as_text()
+    _assert_cache_donated(txt, cache, skip=("pos",))
+
+
+def test_undonated_decode_keeps_inputs_alive():
+    """Sanity for the invariant: with donate=False the cache argument has
+    no aliasing contract (what the donated path deletes)."""
+    cfg = load_arch("stablelm_12b").smoke()
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cache, _ = lm.init_cache(cfg, 2, 64)
+    dec = make_decode_step(cfg, donate=False)
+    txt = dec.lower(params, jnp.ones((2, 1), jnp.int32), cache).as_text()
+    assert "tf.aliasing_output" not in txt
+
+
+# -- rolling (ring) cache wraparound ------------------------------------------
+
+@pytest.mark.parametrize("t0", [4, 11, 19])
+def test_ring_cache_prefill_decode_consistency(rng, t0):
+    """Decode must roll seamlessly out of ANY prefill length — shorter
+    than the window, longer-but-not-a-multiple (the pre-PR layout bug),
+    and deep into slot-reuse territory."""
+    cfg = dataclasses.replace(load_arch("h2o_danube3_4b").smoke(),
+                              dtype="float32", sliding_window=8)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(2))
+    b, s = 1, 32
+    tokens = _tokens(rng, cfg, b, s)
+    full_logits, _ = lm.forward(params, cfg, {"tokens": tokens})
+    cache, _ = lm.init_cache(cfg, b, s, dtype=jnp.float32)
+    logits, cache = lm.prefill(params, cfg, {"tokens": tokens[:, :t0]},
+                               cache)
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full_logits[:, t0 - 1]),
+                               rtol=5e-3, atol=5e-3)
+    for i in range(t0, s - 1):
+        logits, cache = lm.decode_step(params, cfg, tokens[:, i][:, None],
+                                       cache)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full_logits[:, i]),
+            rtol=5e-3, atol=5e-3, err_msg=f"pos {i}")
+
+
+# -- per-sequence positions / ragged batches ----------------------------------
+
+@pytest.mark.parametrize("arch,kv", [("smollm_360m", "bfloat16"),
+                                     ("stablelm_12b", "int8"),
+                                     ("h2o_danube3_4b", "bfloat16")])
+def test_ragged_batch_matches_solo_generation(rng, arch, kv):
+    """Right-padded ragged prefill + vector pos decode == each sequence
+    generated alone, bit-identically (linear, int8, and ring caches)."""
+    cfg = dataclasses.replace(load_arch(arch).smoke(), dtype="float32",
+                              kv_dtype=kv)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(1))
+    lens = [5, 8, 3]
+    prompts = [np.asarray(rng.integers(0, cfg.vocab, n), np.int32)
+               for n in lens]
+    steps, max_seq, plen = 5, 32, 8
+
+    solo = [np.asarray(greedy_generate(
+        params, cfg, {"tokens": jnp.asarray(p)[None, :]}, steps=steps,
+        max_seq=max_seq))[0] for p in prompts]
+
+    toks = np.zeros((len(prompts), plen), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p                       # RIGHT-pad
+    cache, _ = lm.init_cache(cfg, len(prompts), max_seq)
+    logits, cache = lm.prefill(params, cfg, {"tokens": jnp.asarray(toks)},
+                               cache, lengths=jnp.asarray(lens, jnp.int32))
+    assert np.array_equal(np.asarray(cache["pos"]), np.asarray(lens))
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out = [np.asarray(tok[:, 0])]
+    for _ in range(steps - 1):
+        logits, cache = lm.decode_step(params, cfg, tok, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out.append(np.asarray(tok[:, 0]))
+    batched = np.stack(out, axis=1)                # [B, steps]
+    for i in range(len(prompts)):
+        assert np.array_equal(batched[i], solo[i]), \
+            (i, batched[i], solo[i])
+
+
+def test_mixed_progress_decode_positions_advance_independently(rng):
+    """Vector pos bookkeeping: sequences at different depths advance
+    their own positions in one fused step."""
+    cfg = dataclasses.replace(load_arch("smollm_360m").smoke(),
+                              dtype="float32")
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cache, _ = lm.init_cache(cfg, 2, 32)
+    cache["pos"] = jnp.asarray([3, 9], jnp.int32)  # mixed progress
+    tok = jnp.ones((2, 1), jnp.int32)
+    _, cache = lm.decode_step(params, cfg, tok, cache)
+    assert np.array_equal(np.asarray(cache["pos"]), [4, 10])

@@ -127,3 +127,56 @@ def test_cross_pod_grad_compression_traces_bf16_psum():
                          capture_output=True, text=True, timeout=600,
                          env=cpu_subproc_env())
     assert "COMPRESS_OK" in res.stdout, res.stdout + res.stderr
+
+
+SUBPROC_DECODE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import dataclasses
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs import load_arch
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import lm
+    from repro.serve.step import make_decode_step
+    from repro.sharding.rules import default_rules
+
+    # int8 KV exercises the grouped _decode_attend_q8 einsums — the path
+    # that accepted `rules` but never applied a sharding constraint.
+    cfg = dataclasses.replace(load_arch("stablelm_12b").smoke(),
+                              dtype="float32", kv_dtype="int8")
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, (2, 8)), jnp.int32)
+    tok = jnp.ones((2, 1), jnp.int32)
+
+    cache, _ = lm.init_cache(cfg, 2, 32)
+    logits, cache = lm.prefill(params, cfg, {"tokens": tokens}, cache)
+    ref, _ = lm.decode_step(params, cfg, tok, cache)
+
+    mesh = make_test_mesh(1, 2)  # pure TP: 2-way 'model'
+    rules = default_rules().for_mesh(mesh)
+    with mesh:
+        cache2, _ = lm.init_cache(cfg, 2, 32)
+        _, cache2 = lm.prefill(params, cfg, {"tokens": tokens}, cache2,
+                               rules=rules)
+        dec = make_decode_step(cfg, rules=rules, donate=False)
+        txt = dec.lower(params, tok, cache2).as_text()
+        # the q8 decode einsums must be constrained (satellite fix):
+        # constraints lower to Sharding custom-calls in the StableHLO
+        assert txt.count("@Sharding") >= 4, txt.count("@Sharding")
+        got, _ = dec(params, tok, cache2)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               rtol=2e-5, atol=2e-5)
+    print("DECODE_SHARDED_OK")
+""")
+
+
+def test_sharded_decode_parity_and_constraints():
+    """Decode under 2-way tensor parallelism matches the single-device
+    step, and the quantized-cache attention actually emits its sharding
+    constraints (it used to accept `rules` and drop them)."""
+    res = subprocess.run([sys.executable, "-c", SUBPROC_DECODE],
+                         capture_output=True, text=True, timeout=600,
+                         env=cpu_subproc_env())
+    assert "DECODE_SHARDED_OK" in res.stdout, res.stdout + res.stderr
