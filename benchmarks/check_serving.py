@@ -18,6 +18,10 @@ Three checks over the ``serving`` rows of a ``benchmarks.run --json`` file:
      either the scan stopped fusing or the cache donation broke (copies
      per token dominate at small model scale).
 
+Rows are matched on the *typed* JSON fields (``kind`` / ``path`` /
+``impl`` / ``batch``); files from before the typed schema fall back to
+name parsing via :func:`benchmarks.run.row_fields`.
+
 Usage: python -m benchmarks.check_serving BENCH.json [--tol 1.6]
        [--speedup 1.5] [--gen-speedup 2.0]
 """
@@ -28,33 +32,43 @@ import json
 import re
 import sys
 
+from .run import row_fields
+
 
 def _rows(path):
+    """[(name, us, typed-fields)] for the serving module's rows."""
     with open(path) as f:
         data = json.load(f)
-    return {r["name"]: float(r["us_per_call"]) for r in data
-            if r.get("module", "serving") == "serving"}
+    return [(r["name"], float(r["us_per_call"]), row_fields(r))
+            for r in data if r.get("module", "serving") == "serving"]
 
 
 def check(path: str, *, tol: float = 1.6, speedup: float = 1.5,
           gen_speedup: float = 2.0) -> int:
     rows = _rows(path)
 
-    def find(tag):
-        hits = [us for name, us in rows.items()
-                if re.fullmatch(rf"serve_decode_{re.escape(tag)}_b\d+",
-                                name)]
+    def find(kind, path_tag="fast"):
+        hits = [us for name, us, f in rows
+                if name.startswith("serve_decode_")
+                and f.get("kind", "").removesuffix("_prepack") == kind
+                and f.get("path", "fast") == path_tag]
         if not hits:
-            raise SystemExit(f"no serving row matching "
-                             f"'serve_decode_{tag}_b*' in {path}; "
-                             f"have {sorted(rows)}")
+            # pre-typed-schema files: the kind/path live in the name
+            tag = kind if path_tag == "fast" else f"{kind}_prepack"
+            hits = [us for name, us, _ in rows
+                    if re.fullmatch(
+                        rf"serve_decode_{re.escape(tag)}_b\d+", name)]
+        if not hits:
+            raise SystemExit(f"no serving row with kind={kind} "
+                             f"path={path_tag} in {path}; "
+                             f"have {sorted(n for n, _, _ in rows)}")
         return hits[0]
 
     int8 = find("int8")
     failures = []
     for kind in ("packed4", "packed1"):
         fast = find(kind)
-        prepack = find(f"{kind}_prepack")
+        prepack = find(kind, "prepack")
         if fast > tol * int8:
             failures.append(
                 f"{kind} fast path {fast:.1f}us is slower than "
@@ -70,10 +84,18 @@ def check(path: str, *, tol: float = 1.6, speedup: float = 1.5,
 
     # generation gate: scan-fused >= gen_speedup x the per-step loop,
     # for every (kind, batch) pair benchmarked both ways
-    loop_rows = {m.group(1): us for name, us in rows.items()
-                 if (m := re.fullmatch(r"gen_loop_(.+)", name))}
-    scan_rows = {m.group(1): us for name, us in rows.items()
-                 if (m := re.fullmatch(r"gen_scan_(.+)", name))}
+    def gen_rows(impl):
+        out = {}
+        for name, us, f in rows:
+            if f.get("impl") == impl and "kind" in f and "batch" in f:
+                out[f"{f['kind']}_b{f['batch']}"] = us
+            elif (m := re.fullmatch(rf"gen_{impl}_(.+)", name)) and \
+                    f.get("impl") is None:
+                out[m.group(1)] = us
+        return out
+
+    loop_rows = gen_rows("loop")
+    scan_rows = gen_rows("scan")
     pairs = sorted(set(loop_rows) & set(scan_rows))
     if not pairs:
         failures.append("no gen_scan/gen_loop row pairs — the generation "

@@ -5,12 +5,73 @@ artifact. Table functions assert our analytical reproductions match the
 paper's published numbers before printing. ``--only`` selects a subset of
 modules (comma-separated) — CI's fast smoke job runs
 ``--only kernels,serving``.
+
+Row schema: modules return ``(name, us, extras)`` where ``extras`` is
+either a plain dict of *typed* derived fields (``cycles_per_tok``,
+``path``, ``fused``, ``tok_s``, ...) or — legacy — a pre-rendered
+``"k=v;..."`` string. JSON output carries the typed keys as real
+top-level fields plus the rendered ``derived`` string, so old consumers
+keep working; :func:`row_fields` reads either generation of file
+(typed keys preferred, ``derived``-string parsing as the back-compat
+fallback).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+
+
+def derived_string(extras) -> str:
+    """Render a typed-extras dict as the legacy ``k=v;...`` derived
+    column (strings pass through untouched)."""
+    if isinstance(extras, str):
+        return extras
+    if not extras:
+        return ""
+    return ";".join(f"{k}={v}" for k, v in extras.items())
+
+
+def _coerce(v: str):
+    if v in ("True", "False"):
+        return v == "True"
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            continue
+    return v
+
+
+def parse_derived(text: str) -> dict:
+    """Back-compat parser for the legacy derived column: ``k=v;...``
+    fragments become typed keys (int/float/bool coerced); any free-text
+    fragment lands under ``note``."""
+    out: dict = {}
+    notes = []
+    for part in (text or "").split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k.strip()] = _coerce(v.strip())
+        else:
+            notes.append(part)
+    if notes:
+        out["note"] = "; ".join(notes)
+    return out
+
+
+def row_fields(row: dict) -> dict:
+    """Typed derived fields of one JSON benchmark row, whichever
+    generation of file it came from: real top-level keys when present,
+    else parsed out of the legacy ``derived`` string."""
+    reserved = {"module", "name", "us_per_call", "derived"}
+    typed = {k: v for k, v in row.items() if k not in reserved}
+    if typed:
+        return typed
+    return parse_derived(row.get("derived", ""))
 
 
 def _modules():
@@ -47,7 +108,7 @@ def collect(only=None):
         except Exception as e:  # pragma: no cover
             print(f"{mod.__name__},ERROR,{e!r}", file=sys.stderr)
             raise
-        out.extend((key, name, us, derived) for name, us, derived in rows)
+        out.extend((key, name, us, extras) for name, us, extras in rows)
     return out
 
 
@@ -66,13 +127,17 @@ def main(argv=None) -> None:
     rows = collect(only)
 
     print("name,us_per_call,derived")
-    for _, name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+    for _, name, us, extras in rows:
+        print(f"{name},{us:.1f},{derived_string(extras)}")
 
     if args.json:
-        payload = [dict(module=module, name=name, us_per_call=us,
-                        derived=derived)
-                   for module, name, us, derived in rows]
+        payload = []
+        for module, name, us, extras in rows:
+            row = dict(module=module, name=name, us_per_call=us,
+                       derived=derived_string(extras))
+            if isinstance(extras, dict):
+                row.update(extras)  # typed fields as real JSON keys
+            payload.append(row)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {len(payload)} benchmark rows to {args.json}",

@@ -25,13 +25,25 @@ scale — the dispatch/donation overhead the scan path deletes.
 Timing is a warmed, fixed-iteration, ``lax``-free python loop; the
 reported figure is the p50 over >= 5 repetitions (single-rep means on a
 shared CI box are noisy enough to hide a 20% regression).
+
+Run directly (``python -m benchmarks.serving --trace-out trace.json``)
+for the *traced serving smoke*: the continuous-batching LM server runs
+with the flight recorder open and exports a Perfetto-loadable Chrome
+trace (server prefill/decode spans interleaved with per-launch PPAC
+kernel events carrying cycles / energy / tile-plan args) plus a
+telemetry-registry snapshot; an in-run gate asserts the ledger cycles of
+one eager decode step equal the cost-model report exactly.
 """
+import argparse
 import dataclasses
+import json
 import statistics
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import load_arch
 from repro.models import lm
@@ -110,11 +122,13 @@ def run():
                                                                mode=mode))
         tok = jnp.ones((slots, 1), jnp.int32)
         us = _t(lambda: decode(params, tok, cache)[0])
-        derived = (f"cycles_per_tok={rep.cycles_per_token};"
-                   f"fused={rep.fused_cycles_per_token};"
-                   f"path={'fast' if fast else 'prepack'}" if rep
-                   else "float baseline")
-        rows.append((f"serve_decode_{label}_b{slots}", us, derived))
+        kind = label.removesuffix("_prepack")
+        extras = (dict(kind=kind, path="fast" if fast else "prepack",
+                       cycles_per_tok=rep.cycles_per_token,
+                       fused=rep.fused_cycles_per_token,
+                       energy_nj_per_tok=round(rep.energy_nj_per_token, 3))
+                  if rep else dict(kind=kind, path="fast"))
+        rows.append((f"serve_decode_{label}_b{slots}", us, extras))
     rows.extend(_generation_rows(base, params0))
     return rows
 
@@ -138,8 +152,8 @@ def _generation_rows(base, params0):
 
             us = _t(scan_call, iters=2, reps=5) / (_GEN_STEPS * b)
             rows.append((f"gen_scan_{label}_b{b}", us,
-                         f"tok_s={1e6 / us:.0f};steps={_GEN_STEPS};"
-                         f"fused scan"))
+                         dict(impl="scan", kind=label, batch=b,
+                              tok_s=round(1e6 / us), steps=_GEN_STEPS)))
             if b == _GEN_LOOP_BATCH:
                 def loop_call(cfg=cfg, params=params, mode=mode,
                               batch=batch):
@@ -149,6 +163,117 @@ def _generation_rows(base, params0):
 
                 us = _t(loop_call, iters=2, reps=5) / (_GEN_STEPS * b)
                 rows.append((f"gen_loop_{label}_b{b}", us,
-                             f"tok_s={1e6 / us:.0f};steps={_GEN_STEPS};"
-                             f"per-step python loop"))
+                             dict(impl="loop", kind=label, batch=b,
+                                  tok_s=round(1e6 / us), steps=_GEN_STEPS)))
     return rows
+
+
+def traced_smoke(*, arch: str = "smollm_360m", requests: int = 6,
+                 weight_bits: int = 4, slots: int = 3, max_new: int = 8,
+                 trace_out=None, metrics_out=None):
+    """Traced serving smoke: the LM server under the flight recorder.
+
+    Serves ``requests`` random prompts through the continuous-batching
+    server with a :class:`~repro.obs.Ledger` open, a telemetry registry
+    attached, and Chrome-trace span capture on — then (optionally)
+    writes the interleaved trace and the metrics snapshot. Before the
+    serving run, one eager decode step gates the recorder against the
+    static cost model. ``lax.scan`` over the stacked blocks traces its
+    body exactly once (the records carry ``traced=True``), so the step
+    emits each stacked projection once and the gate compares against the
+    report's per-layer-unique cycles — the ``count`` column is pure
+    layer multiplicity:
+
+        ledger.total_cycles == slots * sum(p.cycles / p.count)
+
+    Because both sides price launches through
+    ``obs.ledger.record_for``, any drift between the instrumented
+    dispatch path and the §III-C accounting fails CI here (full
+    count-weighted equality is asserted per container kind in
+    tests/test_obs.py, where no layer stacking is involved).
+    """
+    from repro.launch.serve_lm import LMServer, Request, run_and_report
+    from repro.obs import Ledger, MetricsRegistry, TraceBuilder
+
+    max_seq = 64
+    cfg = load_arch(arch).smoke()
+    cfg = dataclasses.replace(cfg, ppac=dataclasses.replace(
+        cfg.ppac, enabled=True, weight_bits=weight_bits, act_bits=8,
+        min_features=32, backend="auto"))
+    params0, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    params = convert_params_for_serving(params0, cfg)
+    report = serving_cycle_report(params, cfg)
+
+    trace = TraceBuilder()
+    metrics = MetricsRegistry()
+    with Ledger() as flight:  # outer: every launch -> the trace
+        # -- golden gate: eager decode step vs the static cycle report
+        cache, _ = lm.init_cache(cfg, slots, max_seq)
+        toks = jnp.ones((slots, 1), jnp.int32)
+        with Ledger() as led, jax.disable_jit(), \
+                trace.span("eager_decode_golden", args=dict(slots=slots)):
+            lm.decode_step(params, cfg, toks, cache, mode="serve")
+        per_layer = sum(p.cycles // p.count for p in report.projections)
+        expect = slots * per_layer
+        assert led.total_cycles == expect, (
+            f"flight-recorder drift: eager decode step recorded "
+            f"{led.total_cycles} cycles, cost model prices it at "
+            f"{expect} ({slots} slots x {per_layer} per-layer-unique "
+            f"cycles/token; full report: {report.cycles_per_token})")
+        print(f"golden gate OK: {led.total_cycles} recorded cycles == "
+              f"{slots} slots x {per_layer} per-layer-unique cycles/token "
+              f"({len(led.records)} launches, "
+              f"{led.total_energy_nj:.1f} nJ modeled, report "
+              f"{report.cycles_per_token} cycles/token over "
+              f"{len(report.projections)} projections)")
+
+        # -- the served run, spans + telemetry on
+        server = LMServer(cfg, params, slots=slots, max_seq=max_seq,
+                          mode="serve", metrics=metrics, trace=trace)
+        rng = np.random.default_rng(0)
+        run_and_report(
+            server,
+            [Request(i, rng.integers(0, cfg.vocab, int(rng.integers(4, 16))),
+                     max_new) for i in range(requests)],
+            report=report)
+    trace.add_ledger(flight)
+
+    lat = metrics.histogram("lm_ttft_s")
+    assert lat.count == requests, "telemetry lost requests"
+    if trace_out:
+        trace.write(trace_out)
+        print(f"wrote {trace.num_events} trace events to {trace_out} "
+              f"(load in https://ui.perfetto.dev)")
+    if metrics_out:
+        payload = dict(metrics=metrics.snapshot(),
+                       serving_cycle_report=report.as_dict(),
+                       ledger=flight.summary())
+        with open(metrics_out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote metrics snapshot to {metrics_out}")
+    return trace, metrics, report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="traced serving smoke (see module docstring)")
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--weight-bits", type=int, default=4,
+                    choices=(1, 2, 3, 4, 8))
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the Chrome-trace JSON (Perfetto-loadable)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the telemetry + cycle-report snapshot JSON")
+    args = ap.parse_args(argv)
+    traced_smoke(arch=args.arch, requests=args.requests,
+                 weight_bits=args.weight_bits, slots=args.slots,
+                 max_new=args.max_new, trace_out=args.trace_out,
+                 metrics_out=args.metrics_out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

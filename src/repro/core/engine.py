@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.engine import ppac_matmul
+from ..obs import ledger as _flight
 from .formats import fmt as _fmt
 from .formats import pack_bits, to_bitplanes
 from .quant import binarize_pm1, fake_quant, quantize
@@ -205,6 +206,16 @@ def serve_dense_acc(xf, container: QuantContainer, *, act_bits: int,
                           backend=backend)
         return acc, xs
     if kind == "int8":
+        if _flight.active():
+            # the int8 MXU fallback bypasses ppac_matmul; record it at its
+            # would-be K-bit-serial PPAC cost so ledger totals stay in
+            # lockstep with serving_cycle_report across every kind
+            _flight.record_launch(
+                "mvp_int8_mxu", backend, batch=int(xq.shape[0]),
+                m_rows=int(container.wq.shape[-1]), n_bits=n,
+                k_bits=container.bits or 8, l_bits=act_bits,
+                x_shape=tuple(xq.shape), a_shape=tuple(container.wq.shape),
+                traced=isinstance(xq, jax.core.Tracer))
         acc = jax.lax.dot_general(
             xq.astype(jnp.int8), container.wq, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32)

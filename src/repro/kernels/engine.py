@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core.backend import resolve_backend
+from ..obs import ledger as _flight
 from .binary_mvp.ops import and_dot, hamming_similarity, inner_product_pm1
 from .bitserial_mvp.ops import ppac_matmul as _multibit_matmul
 from .bitserial_mvp.ops import ppac_matmul_planes as _multibit_matmul_planes
@@ -169,4 +170,10 @@ def ppac_matmul(x, a, *, mode: str, backend: str = "auto", **kwargs):
     if spec is None:
         raise ValueError(
             f"unknown PPAC mode {mode!r}; available: {sorted(MODES)}")
-    return spec.fn(x, a, backend=resolve_backend(backend), **kwargs)
+    be = resolve_backend(backend)
+    # Flight recorder: this is THE dispatch chokepoint. When a ledger is
+    # open on this thread, every launch emits one costed LaunchRecord;
+    # otherwise the single active() check is the entire overhead.
+    if _flight.active():
+        return _flight.recorded_launch(spec.fn, mode, be, x, a, kwargs)
+    return spec.fn(x, a, backend=be, **kwargs)

@@ -48,6 +48,8 @@ try:  # TPU compiler hints (grid dimension semantics); absent on old jax
 except ImportError:  # pragma: no cover
     pltpu = None
 
+from ..obs import ledger as _flight
+
 # TPU layout friendliness: lane (last) dims in multiples of 128, sublane
 # (second-to-last) dims in multiples of 8.
 LANE_MULTIPLE = 128
@@ -103,8 +105,12 @@ def plan_tiles(b: int, m: int, w: int, *, block_b: int = 64,
     rc = max(1, min(row_chunk, bm))
     # honor both the chunk and the sublane layout rule at once
     bm = round_up(bm, math.lcm(rc, SUBLANE_MULTIPLE))
-    return TilePlan(b, m, w, bb, bm, bw, rc,
+    plan = TilePlan(b, m, w, bb, bm, bw, rc,
                     round_up(b, bb), round_up(m, bm), round_up(w, bw))
+    # flight recorder: attach the resolved plan to the launch currently
+    # being recorded (no-op unless a ledger is open AND a launch is live)
+    _flight.note_plan(plan)
+    return plan
 
 
 # ---------------------------------------------------------------------------

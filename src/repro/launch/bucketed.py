@@ -15,9 +15,12 @@ batched compute, and the per-request retirement.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from ..obs.metrics import MetricsRegistry
 
 
 def bucket_for(count: int, buckets: Sequence[int]) -> int:
@@ -46,12 +49,15 @@ def drain_take(queued: int, buckets: Sequence[int]) -> Tuple[int, int]:
 class BucketedBatchServer:
     """Queue -> bucketed batches -> per-request retirement."""
 
-    def __init__(self, *, buckets=(1, 4, 16, 64)):
+    def __init__(self, *, buckets=(1, 4, 16, 64),
+                 metrics: Optional[MetricsRegistry] = None):
         assert tuple(buckets) == tuple(sorted(buckets)) and buckets
         self.buckets = tuple(buckets)
         self.queue: List = []
         self.batches = 0
         self.bucket_counts: Dict[int, int] = {b: 0 for b in self.buckets}
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._submit_t: Dict[int, float] = {}  # id(req) -> submit time
 
     # -- subclass hooks ------------------------------------------------------
 
@@ -74,6 +80,8 @@ class BucketedBatchServer:
 
     def submit(self, req):
         self._validate(req)
+        self.metrics.counter("batch_requests_submitted").inc()
+        self._submit_t[id(req)] = time.perf_counter()
         self.queue.append(req)
 
     def _bucket(self, count: int) -> int:
@@ -92,12 +100,23 @@ class BucketedBatchServer:
         if bucket > take:  # pad by repeating the tail row
             rows = np.concatenate(
                 [rows, np.repeat(rows[-1:], bucket - take, axis=0)])
+        t0 = time.perf_counter()
         result = self._run(rows)
+        t1 = time.perf_counter()
         self.batches += 1
         self.bucket_counts[bucket] += 1
+        m = self.metrics
+        m.counter("batch_batches").inc()
+        m.histogram("batch_step_s").record(t1 - t0)
+        m.histogram("batch_fill_ratio").record(take / bucket)
+        m.gauge("batch_queue_depth").set(len(self.queue))
         for i, req in enumerate(batch):
             self._retire(req, result, i)
             req.done = True
+            m.counter("batch_requests_retired").inc()
+            sub = self._submit_t.pop(id(req), None)
+            if sub is not None:
+                m.histogram("batch_queue_wait_s").record(t0 - sub)
         return batch
 
     def run(self) -> List:

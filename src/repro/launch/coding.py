@@ -81,6 +81,9 @@ def main():
                          "guarantees correction of 1)")
     ap.add_argument("--max-iters", type=int, default=8)
     ap.add_argument("--backend", default="auto")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the telemetry registry (Prometheus text) "
+                         "after the run")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -117,6 +120,8 @@ def main():
     if args.errors <= code.guaranteed_t:
         assert recovered == len(done), \
             "<= t errors must always be corrected"
+    if args.metrics:
+        print(server.metrics.prometheus_text(), end="")
     print("OK")
 
 

@@ -74,6 +74,9 @@ def main():
     ap.add_argument("--backend", default="auto")
     ap.add_argument("--flip", type=int, default=8,
                     help="bits flipped between a planted query and its row")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the telemetry registry (Prometheus text) "
+                         "after the run")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -113,6 +116,8 @@ def main():
     print(f"recall@1 vs planted rows ({args.flip}/{args.bits} bits flipped): "
           f"{hits / len(done):.3f}")
     assert hits / len(done) >= 0.99, "planted neighbors must be retrieved"
+    if args.metrics:
+        print(server.metrics.prometheus_text(), end="")
     print("OK")
 
 

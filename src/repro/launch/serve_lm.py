@@ -31,7 +31,9 @@ CLI: PYTHONPATH=src python -m repro.launch.serve_lm --arch smollm_360m \
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
+import json
 import time
 from typing import List, Optional, Sequence
 
@@ -42,6 +44,8 @@ from jax import lax
 
 from ..configs.base import ModelConfig, load_arch
 from ..models import lm
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import TraceBuilder, annotate
 from ..serve.step import (
     convert_params_for_serving,
     make_decode_select_step,
@@ -60,6 +64,17 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     finish_reason: Optional[str] = None
+    # telemetry timestamps (perf_counter readings, set by the server)
+    submit_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    retire_t: Optional[float] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """End-to-end submit -> retire latency (None until retired)."""
+        if self.submit_t is None or self.retire_t is None:
+            return None
+        return self.retire_t - self.submit_t
 
 
 class LMServer:
@@ -69,7 +84,9 @@ class LMServer:
                  max_seq: int = 128, mode: str = "float", rules=None,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  prefill_buckets: Optional[Sequence[int]] = None,
-                 admit_buckets: Sequence[int] = (1, 2, 4)):
+                 admit_buckets: Sequence[int] = (1, 2, 4),
+                 metrics: Optional[MetricsRegistry] = None,
+                 trace: Optional[TraceBuilder] = None):
         assert tuple(admit_buckets) == tuple(sorted(admit_buckets))
         if prefill_buckets is None:
             # powers of two up to max_seq (any prompt that leaves room to
@@ -94,6 +111,10 @@ class LMServer:
         self.queue: List[Request] = []
         self.decode_steps = 0
         self.admit_batches = 0
+        # telemetry: always-on registry (negligible cost — a few Python
+        # dict/float ops per step), optional Chrome-trace span capture
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.trace = trace
         self._key = jax.random.PRNGKey(seed)
         # the resident cache: allocated once, donated through every step
         self.cache, _ = lm.init_cache(cfg, slots, max_seq)
@@ -126,6 +147,20 @@ class LMServer:
             return jax.tree.map(leaf, cache, src)
         self._write = jax.jit(write_slot, donate_argnums=(0,))
 
+    # -- telemetry -----------------------------------------------------------
+
+    @contextlib.contextmanager
+    def _span(self, name: str, **args):
+        """One server-track span: Chrome-trace event (when tracing) plus a
+        jax.profiler annotation, so the same region shows up in both."""
+        with annotate(name):
+            if self.trace is not None:
+                with self.trace.span(name, track="server",
+                                     args=args or None):
+                    yield
+            else:
+                yield
+
     # -- scheduling ----------------------------------------------------------
 
     def submit(self, req: Request):
@@ -134,6 +169,8 @@ class LMServer:
         assert plen + req.max_new <= self.max_seq, \
             f"prompt {plen} + max_new {req.max_new} exceeds max_seq " \
             f"{self.max_seq}"
+        req.submit_t = time.perf_counter()
+        self.metrics.counter("lm_requests_submitted").inc()
         self.queue.append(req)
 
     def _next_key(self):
@@ -171,29 +208,52 @@ class LMServer:
             for i, r in enumerate(grp):
                 toks[i, :len(r.prompt)] = r.prompt  # RIGHT-pad: bit-exact
                 lens[i] = len(r.prompt)
-            c1, _ = lm.init_cache(self.cfg, blen, self.max_seq)
-            tok0, c1 = self._prefill(self.params, jnp.asarray(toks),
-                                     jnp.asarray(lens), c1,
-                                     self._next_key())
+            t0 = time.perf_counter()
+            with self._span("prefill_batch", batch=blen, plen=plb,
+                            fill=len(grp) / blen):
+                c1, _ = lm.init_cache(self.cfg, blen, self.max_seq)
+                tok0, c1 = self._prefill(self.params, jnp.asarray(toks),
+                                         jnp.asarray(lens), c1,
+                                         self._next_key())
+                tok0 = np.asarray(tok0)
+            t1 = time.perf_counter()
             self.admit_batches += 1
-            tok0 = np.asarray(tok0)
+            m = self.metrics
+            m.counter("lm_prefill_batches").inc()
+            m.counter("lm_requests_admitted").inc(len(grp))
+            m.histogram("lm_prefill_s").record(t1 - t0)
+            m.histogram("lm_admit_fill_ratio").record(len(grp) / blen)
             for i, r in enumerate(grp):
                 s = free.pop(0)
                 self.cache = self._write(self.cache, c1,
                                          jnp.int32(i), jnp.int32(s))
                 r.out.append(int(tok0[i]))
+                r.first_token_t = t1  # prefill emits the first token
+                if r.submit_t is not None:
+                    m.histogram("lm_queue_wait_s").record(t0 - r.submit_t)
+                    m.histogram("lm_ttft_s").record(t1 - r.submit_t)
                 self.live[s] = r
 
     def step(self) -> List[Request]:
         """One fused decode step over all slots; returns retired requests."""
+        occupied = sum(r is not None for r in self.live)
         toks = np.zeros((self.slots, 1), np.int32)
         for s, r in enumerate(self.live):
             if r is not None:
                 toks[s, 0] = r.out[-1]
-        nxt, self.cache = self._decode(self.params, jnp.asarray(toks),
-                                       self.cache, self._next_key())
+        t0 = time.perf_counter()
+        with self._span("decode_step", occupied=occupied):
+            nxt, self.cache = self._decode(self.params, jnp.asarray(toks),
+                                           self.cache, self._next_key())
+            nxt = np.asarray(nxt)  # the only host transfer: [S] token ids
+        t1 = time.perf_counter()
         self.decode_steps += 1
-        nxt = np.asarray(nxt)  # the only host transfer: [S] token ids
+        m = self.metrics
+        m.histogram("lm_decode_step_s").record(t1 - t0)
+        m.gauge("lm_slot_occupancy").set(occupied)
+        m.histogram("lm_slot_occupancy_per_step").record(occupied)
+        m.counter("lm_tokens_generated").inc(occupied)
+        m.gauge("lm_queue_depth").set(len(self.queue))
         retired = []
         for s, r in enumerate(self.live):
             if r is None:
@@ -204,6 +264,15 @@ class LMServer:
             if hit_eos or len(r.out) >= r.max_new:
                 r.done = True
                 r.finish_reason = "eos" if hit_eos else "length"
+                r.retire_t = t1
+                m.counter("lm_requests_retired").inc()
+                m.counter("lm_slots_evicted").inc()
+                m.counter(f"lm_finish_{r.finish_reason}").inc()
+                if r.latency_s is not None:
+                    m.histogram("lm_request_latency_s").record(r.latency_s)
+                if r.first_token_t is not None and len(r.out) > 1:
+                    m.histogram("lm_tpot_s").record(
+                        (t1 - r.first_token_t) / (len(r.out) - 1))
                 retired.append(r)
                 self.live[s] = None  # evict: slot is free for re-admission
         return retired
@@ -217,10 +286,11 @@ class LMServer:
 
 
 def run_and_report(server: LMServer, requests: List[Request], *,
-                   report=None) -> List[Request]:
+                   report=None, show_metrics: bool = False) -> List[Request]:
     """Submit, run to completion, and print the shared serving summary
     (one copy for both the serve and serve_lm CLIs: identically-timed
-    tok/s, slot/bucket stats, optional PPAC cycle accounting)."""
+    tok/s, slot/bucket stats, per-request latency percentiles from the
+    telemetry registry, optional PPAC cycle accounting)."""
     for r in requests:
         server.submit(r)
     t0 = time.time()
@@ -231,12 +301,25 @@ def run_and_report(server: LMServer, requests: List[Request], *,
           f"({toks / dt:.1f} tok/s, slots={server.slots}, "
           f"{server.decode_steps} decode steps, "
           f"{server.admit_batches} prefill batches)")
+    lat = server.metrics.histogram("lm_request_latency_s")
+    ttft = server.metrics.histogram("lm_ttft_s")
+    if lat.count:
+        print(f"latency submit->retire: p50={lat.percentile(50) * 1e3:.1f}ms "
+              f"p95={lat.percentile(95) * 1e3:.1f}ms "
+              f"max={lat.max * 1e3:.1f}ms; "
+              f"ttft p50={ttft.percentile(50) * 1e3:.1f}ms "
+              f"p95={ttft.percentile(95) * 1e3:.1f}ms")
     if report is not None:
         print(f"PPAC compute: {toks * report.cycles_per_token} emulated "
               f"cycles for {toks} decoded tokens "
-              f"({report.cycles_per_token}/token)")
+              f"({report.cycles_per_token}/token, "
+              f"{toks * report.energy_nj_per_token / 1e3:.2f} uJ modeled)")
     for r in completed[:3]:
-        print(f"  req {r.rid} [{r.finish_reason}]: {r.out[:8]}...")
+        lat_ms = f"{r.latency_s * 1e3:.1f}ms" if r.latency_s else "?"
+        print(f"  req {r.rid} [{r.finish_reason}, {lat_ms}]: "
+              f"{r.out[:8]}...")
+    if show_metrics:
+        print(server.metrics.prometheus_text(), end="")
     return completed
 
 
@@ -254,6 +337,11 @@ def main():
     ap.add_argument("--weight-bits", type=int, default=4,
                     choices=(1, 2, 3, 4, 8))
     ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the telemetry registry (Prometheus text) "
+                         "after the run")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics snapshot as JSON")
     args = ap.parse_args()
 
     cfg = load_arch(args.arch).smoke()
@@ -280,7 +368,11 @@ def main():
         [Request(i, rng.integers(0, cfg.vocab, int(rng.integers(4, 24))),
                  args.max_new, eos=args.eos)
          for i in range(args.requests)],
-        report=report)
+        report=report, show_metrics=args.metrics)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(server.metrics.snapshot(), f, indent=1)
+        print(f"wrote metrics snapshot to {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,23 @@
+"""PPAC flight recorder: instruction ledger, serving metrics, trace export.
+
+Always available, off by default: opening a :class:`Ledger` turns on
+per-launch recording at the kernel dispatch chokepoint; a
+:class:`MetricsRegistry` rides inside every server; a
+:class:`TraceBuilder` serializes both into one Perfetto-loadable trace.
+"""
+from .ledger import LaunchRecord, Ledger, launch_cost, record_for
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .trace import TraceBuilder, annotate
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LaunchRecord",
+    "Ledger",
+    "MetricsRegistry",
+    "TraceBuilder",
+    "annotate",
+    "launch_cost",
+    "record_for",
+]

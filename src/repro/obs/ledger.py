@@ -1,0 +1,274 @@
+"""Per-launch PPAC instruction ledger — the flight recorder's data plane.
+
+Every call through the unified dispatch surface (``kernels.engine.
+ppac_matmul``) can emit one :class:`LaunchRecord`: mode, backend, operand
+shapes, K/L bit widths, the resolved tile plan/grid (noted by
+``kernels.tiling`` during the launch), modeled PPAC cycles (the paper's
+§III/IV accounting via ``core.cost_model``) and modeled energy calibrated
+to the paper's 28nm Tables II–IV. Records accumulate into whatever
+:class:`Ledger` context managers are open on the *current thread* — any
+caller (the serving engine, ``CAMIndex``, the gf2 stack, ``LMServer``)
+can open one around its work:
+
+    with Ledger() as led:
+        y = serve_dense(x, container, act_bits=8)
+    led.total_cycles, led.total_energy_nj, led.by_mode()
+
+Overhead-when-disabled guarantee: when no ledger is open,
+``ppac_matmul`` performs exactly one ``active()`` check and *zero* other
+per-launch Python work — no record construction, no timing calls, no
+plan capture (asserted by tests/test_obs.py).
+
+Launches recorded while a function is being traced under ``jax.jit``
+happen once per *compile*, not once per execution; such records carry
+``traced=True``. Eager launches (e.g. under ``jax.disable_jit()``)
+record once per execution with real wall timestamps — that is the
+configuration the CI golden gate replays a decode step in.
+
+The costing helpers (:func:`launch_cost`, :func:`record_for`) are shared
+bit-for-bit with the *static* accounting: ``serve.step.
+serving_cycle_report`` is a replay over these same constructors, so the
+recorded and estimated cycle totals can never diverge.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..core import cost_model
+from ..core.ppac import PPACConfig
+
+_TLS = threading.local()
+
+
+def _ledgers() -> List["Ledger"]:
+    st = getattr(_TLS, "ledgers", None)
+    if st is None:
+        st = _TLS.ledgers = []
+    return st
+
+
+def active() -> bool:
+    """True when at least one Ledger is open on this thread. This is the
+    ONLY call the dispatch chokepoint makes when recording is off."""
+    return bool(getattr(_TLS, "ledgers", None))
+
+
+@dataclasses.dataclass
+class LaunchRecord:
+    """One PPAC launch as seen at the dispatch chokepoint."""
+
+    mode: str                   # engine mode (or 'mvp_int8_mxu' fallback)
+    backend: str                # resolved lowering: pallas | ref | mxu
+    batch: int                  # streamed vectors in this launch
+    m_rows: int                 # resident matrix rows
+    n_bits: int                 # logical bit width of one row
+    k_bits: int                 # matrix bits (1 for the 1-bit modes)
+    l_bits: int                 # vector bits
+    cycles: int                 # modeled PPAC cycles (§III/IV accounting)
+    tile_ops: int               # array-cycles of work (energy accounting)
+    energy_nj: float            # modeled energy, Tables II–IV calibration
+    x_shape: Tuple[int, ...] = ()
+    a_shape: Tuple[int, ...] = ()
+    t_start: float = 0.0        # perf_counter at dispatch
+    dur_s: float = 0.0          # host-side dispatch duration
+    plan: Optional[Dict[str, Any]] = None   # resolved tile blocks + grid
+    traced: bool = False        # recorded during jit tracing (per compile)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["energy_nj"] = round(float(d["energy_nj"]), 6)
+        return d
+
+
+# Modes whose §III-C schedule runs K·L bit-plane-pair passes; everything
+# else is a single 1-bit pass per streamed vector.
+_MULTIBIT_PREFIX = "mvp_multibit"
+_INT8_FALLBACK = "mvp_int8_mxu"
+
+
+def launch_cost(mode: str, batch: int, m_rows: int, n_bits: int, *,
+                k_bits: int = 1, l_bits: int = 1, k: int = 0,
+                config: Optional[PPACConfig] = None,
+                parallel_arrays: Optional[int] = None) -> Tuple[int, int]:
+    """(cycles, tile_ops) for one launch.
+
+    ``cycles`` is latency in the §III/IV accounting: each of the
+    ``passes`` bit-plane-pair passes scans the virtualized tile grid and
+    merges col-split partials (``cost_model.tiled_scan_merge_cycles``);
+    top-k adds the bit-serial max-search drain per winner. ``tile_ops``
+    is *work* — array-cycles summed over every tile regardless of how
+    many physical arrays run them in parallel — and is what the energy
+    model integrates.
+    """
+    base = cost_model.tiled_scan_merge_cycles(m_rows, n_bits, config,
+                                              parallel_arrays)
+    passes = 1
+    if mode.startswith(_MULTIBIT_PREFIX) or mode == _INT8_FALLBACK:
+        passes = max(1, k_bits) * max(1, l_bits)
+    per = passes * base
+    if mode == "topk" and k > 0:
+        per += k * int(math.ceil(math.log2(n_bits + 1)))
+    ops = passes * cost_model.tile_grid_ops(m_rows, n_bits, config)
+    return batch * per, batch * ops
+
+
+def record_for(mode: str, backend: str, *, batch: int, m_rows: int,
+               n_bits: int, k_bits: int = 1, l_bits: int = 1, k: int = 0,
+               x_shape: Tuple[int, ...] = (), a_shape: Tuple[int, ...] = (),
+               config: Optional[PPACConfig] = None,
+               parallel_arrays: Optional[int] = None,
+               t_start: float = 0.0, dur_s: float = 0.0,
+               plan: Optional[Dict[str, Any]] = None,
+               traced: bool = False) -> LaunchRecord:
+    """Build one costed LaunchRecord — THE shared constructor: the live
+    ledger path and the static ``serving_cycle_report`` replay both come
+    through here, which is what keeps them bit-exact with each other."""
+    cycles, ops = launch_cost(mode, batch, m_rows, n_bits, k_bits=k_bits,
+                              l_bits=l_bits, k=k, config=config,
+                              parallel_arrays=parallel_arrays)
+    energy = ops * cost_model.energy_per_cycle_pj(mode, config) * 1e-3
+    return LaunchRecord(mode=mode, backend=backend, batch=batch,
+                        m_rows=m_rows, n_bits=n_bits, k_bits=k_bits,
+                        l_bits=l_bits, cycles=cycles, tile_ops=ops,
+                        energy_nj=energy, x_shape=tuple(x_shape),
+                        a_shape=tuple(a_shape), t_start=t_start,
+                        dur_s=dur_s, plan=plan, traced=traced)
+
+
+def record_launch(mode: str, backend: str, *, batch: int, m_rows: int,
+                  n_bits: int, k_bits: int = 1, l_bits: int = 1, k: int = 0,
+                  x_shape: Tuple[int, ...] = (),
+                  a_shape: Tuple[int, ...] = (),
+                  t_start: Optional[float] = None, dur_s: float = 0.0,
+                  plan: Optional[Dict[str, Any]] = None,
+                  traced: bool = False) -> None:
+    """Append one launch to every open ledger (each costed under that
+    ledger's own array config)."""
+    t0 = time.perf_counter() if t_start is None else t_start
+    for led in _ledgers():
+        led.records.append(record_for(
+            mode, backend, batch=batch, m_rows=m_rows, n_bits=n_bits,
+            k_bits=k_bits, l_bits=l_bits, k=k, x_shape=x_shape,
+            a_shape=a_shape, config=led.config,
+            parallel_arrays=led.parallel_arrays, t_start=t0, dur_s=dur_s,
+            plan=plan, traced=traced))
+
+
+def note_plan(plan) -> None:
+    """Called by ``kernels.tiling`` when a tile plan resolves while a
+    launch is being recorded; no-op (and never called — the chokepoint
+    guards on :func:`active`) otherwise."""
+    notes = getattr(_TLS, "plan_notes", None)
+    if notes is not None:
+        notes.append(dict(blocks=plan.blocks, grid=tuple(plan.grid)))
+
+
+def _is_tracer(x) -> bool:
+    try:
+        import jax
+        return isinstance(x, jax.core.Tracer)
+    except Exception:  # pragma: no cover - jax.core moved/absent
+        return False
+
+
+def _geometry(mode: str, x, a, kwargs: Dict[str, Any]):
+    """(batch, m_rows, n_bits, k_bits, l_bits, k) from the dispatch args."""
+    xs = tuple(int(d) for d in getattr(x, "shape", ()))
+    ash = tuple(int(d) for d in getattr(a, "shape", ()))
+    batch = 1
+    for d in xs[:-1]:
+        batch *= d
+    if mode == "mvp_multibit" and len(ash) >= 2:
+        m_rows, n_bits = ash[-2], ash[-1]
+    else:
+        m_rows = ash[-2] if len(ash) >= 2 else 1
+        n_bits = int(kwargs.get("n", (ash[-1] if ash else 1) * 32))
+    k_bits = int(kwargs.get("k_bits", 1))
+    l_bits = int(kwargs.get("l_bits", 1))
+    if not mode.startswith(_MULTIBIT_PREFIX):
+        k_bits = l_bits = 1
+    return xs, ash, batch, m_rows, n_bits, k_bits, l_bits, \
+        int(kwargs.get("k", 0) or 0)
+
+
+def recorded_launch(fn, mode: str, backend: str, x, a,
+                    kwargs: Dict[str, Any]):
+    """Run one engine dispatch with recording: time it, collect the tile
+    plan(s) resolved during the call, then append a costed record to every
+    open ledger. Only reached when :func:`active` — the disabled path
+    never enters this function."""
+    prev = getattr(_TLS, "plan_notes", None)
+    _TLS.plan_notes = []
+    t0 = time.perf_counter()
+    try:
+        out = fn(x, a, backend=backend, **kwargs)
+    finally:
+        notes, _TLS.plan_notes = _TLS.plan_notes, prev
+    dur = time.perf_counter() - t0
+    xs, ash, batch, m_rows, n_bits, k_bits, l_bits, k = \
+        _geometry(mode, x, a, kwargs)
+    record_launch(mode, backend, batch=batch, m_rows=m_rows, n_bits=n_bits,
+                  k_bits=k_bits, l_bits=l_bits, k=k, x_shape=xs,
+                  a_shape=ash, t_start=t0, dur_s=dur,
+                  plan=notes[-1] if notes else None,
+                  traced=_is_tracer(x) or _is_tracer(a))
+    return out
+
+
+class Ledger:
+    """Per-thread launch accumulator (context manager; nestable — every
+    open ledger sees every launch, each costed at its own geometry)."""
+
+    def __init__(self, config: Optional[PPACConfig] = None,
+                 parallel_arrays: Optional[int] = None):
+        self.config = config or PPACConfig()
+        self.parallel_arrays = parallel_arrays
+        self.records: List[LaunchRecord] = []
+
+    def __enter__(self) -> "Ledger":
+        _ledgers().append(self)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        _ledgers().remove(self)
+        return False
+
+    # -- aggregation ---------------------------------------------------------
+
+    @property
+    def num_launches(self) -> int:
+        return len(self.records)
+
+    @property
+    def total_cycles(self) -> int:
+        return sum(r.cycles for r in self.records)
+
+    @property
+    def total_tile_ops(self) -> int:
+        return sum(r.tile_ops for r in self.records)
+
+    @property
+    def total_energy_nj(self) -> float:
+        return sum(r.energy_nj for r in self.records)
+
+    def by_mode(self) -> Dict[str, dict]:
+        out: Dict[str, dict] = {}
+        for r in self.records:
+            agg = out.setdefault(r.mode, dict(launches=0, cycles=0,
+                                              tile_ops=0, energy_nj=0.0))
+            agg["launches"] += 1
+            agg["cycles"] += r.cycles
+            agg["tile_ops"] += r.tile_ops
+            agg["energy_nj"] += r.energy_nj
+        return out
+
+    def summary(self) -> dict:
+        return dict(launches=self.num_launches, cycles=self.total_cycles,
+                    tile_ops=self.total_tile_ops,
+                    energy_nj=self.total_energy_nj,
+                    array=f"{self.config.m}x{self.config.n}",
+                    by_mode=self.by_mode())

@@ -1,0 +1,170 @@
+"""Lightweight serving-metrics registry: counters, gauges, streaming
+histograms — no third-party dependencies.
+
+One :class:`MetricsRegistry` per server records request-level telemetry
+(TTFT, time-per-output-token, queue wait, admission/eviction/retirement
+counts, bucket fill ratios, slot occupancy). Histograms are *streaming*:
+a fixed geometric bucket grid (quarter-decade resolution over 1e-7..1e5,
+unit-agnostic — seconds, ratios and counts all fit) plus exact count /
+sum / min / max, so memory is O(buckets) regardless of traffic and
+percentiles are bucket-interpolated estimates.
+
+``snapshot()`` returns one plain nested dict (JSON-serializable — the CI
+artifact format); ``prometheus_text()`` renders the registry in the
+Prometheus exposition format (counters, gauges, and summary-style
+quantiles for histograms).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Sequence, Union
+
+# quarter-decade geometric grid: 1e-7 .. 1e5
+_DEFAULT_BOUNDS = tuple(10.0 ** (e / 4.0) for e in range(-28, 21))
+
+
+class Counter:
+    """Monotonically increasing count."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def snapshot(self) -> int:
+        return self.value
+
+
+class Gauge:
+    """Last-set value (plus the running max, for capacity headroom)."""
+
+    __slots__ = ("value", "max")
+
+    def __init__(self):
+        self.value = 0.0
+        self.max = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+        self.max = max(self.max, v)
+
+    def snapshot(self) -> dict:
+        return dict(value=self.value, max=self.max)
+
+
+class Histogram:
+    """Streaming histogram over a fixed geometric bucket grid."""
+
+    __slots__ = ("bounds", "counts", "count", "total", "min", "max")
+
+    def __init__(self, bounds: Optional[Sequence[float]] = None):
+        self.bounds = tuple(bounds) if bounds else _DEFAULT_BOUNDS
+        assert self.bounds == tuple(sorted(self.bounds))
+        self.counts = [0] * (len(self.bounds) + 1)
+        self.count = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def record(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.total += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+        lo, hi = 0, len(self.bounds)
+        while lo < hi:  # first bucket with bound >= v
+            mid = (lo + hi) // 2
+            if v <= self.bounds[mid]:
+                hi = mid
+            else:
+                lo = mid + 1
+        self.counts[lo] += 1
+
+    def percentile(self, p: float) -> Optional[float]:
+        """Bucket-interpolated p-th percentile (p in [0, 100])."""
+        if self.count == 0:
+            return None
+        target = max(1e-12, p / 100.0) * self.count
+        cum = 0.0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if cum + c >= target:
+                lo = self.bounds[i - 1] if i > 0 else self.min
+                hi = self.bounds[i] if i < len(self.bounds) else self.max
+                lo = max(lo, self.min)
+                hi = min(hi, self.max)
+                if hi <= lo:
+                    return lo
+                return lo + (hi - lo) * (target - cum) / c
+            cum += c
+        return self.max
+
+    @property
+    def mean(self) -> Optional[float]:
+        return self.total / self.count if self.count else None
+
+    def snapshot(self) -> dict:
+        if self.count == 0:
+            return dict(count=0)
+        return dict(count=self.count, sum=self.total, mean=self.mean,
+                    min=self.min, max=self.max, p50=self.percentile(50),
+                    p90=self.percentile(90), p99=self.percentile(99))
+
+
+Metric = Union[Counter, Gauge, Histogram]
+
+
+class MetricsRegistry:
+    """Name -> metric map with get-or-create accessors."""
+
+    def __init__(self):
+        self._metrics: Dict[str, Metric] = {}
+
+    def _get(self, name: str, cls, *args) -> Metric:
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls(*args)
+        assert isinstance(m, cls), \
+            f"metric {name!r} already registered as {type(m).__name__}"
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str,
+                  bounds: Optional[Sequence[float]] = None) -> Histogram:
+        return self._get(name, Histogram, bounds)
+
+    def snapshot(self) -> dict:
+        """Plain nested dict of every metric (JSON-serializable)."""
+        return {name: m.snapshot() for name, m in sorted(self._metrics.items())}
+
+    def prometheus_text(self) -> str:
+        """Prometheus exposition-format dump (histograms as summaries)."""
+        lines: List[str] = []
+        for name, m in sorted(self._metrics.items()):
+            pname = re.sub(r"[^a-zA-Z0-9_:]", "_", name)
+            if isinstance(m, Counter):
+                lines.append(f"# TYPE {pname} counter")
+                lines.append(f"{pname} {m.value}")
+            elif isinstance(m, Gauge):
+                lines.append(f"# TYPE {pname} gauge")
+                lines.append(f"{pname} {m.value:g}")
+                lines.append(f"{pname}_max {m.max:g}")
+            else:
+                lines.append(f"# TYPE {pname} summary")
+                for q in (0.5, 0.9, 0.99):
+                    v = m.percentile(q * 100)
+                    if v is not None:
+                        lines.append(f'{pname}{{quantile="{q:g}"}} {v:g}')
+                lines.append(f"{pname}_sum {m.total:g}")
+                lines.append(f"{pname}_count {m.count}")
+        return "\n".join(lines) + "\n"

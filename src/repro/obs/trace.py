@@ -1,0 +1,101 @@
+"""Chrome-trace (``chrome://tracing`` / Perfetto) export for the flight
+recorder, plus optional ``jax.profiler`` trace-annotation hooks.
+
+A :class:`TraceBuilder` collects complete ("ph": "X") events on named
+tracks and serializes the standard Trace Event JSON format: server step
+spans (prefill batches, decode steps) land on one track, instruction-
+ledger launch events (with cycles / energy / tile-plan args) interleave
+on another — all on the same ``perf_counter`` clock, shifted so the
+earliest event sits at ts=0. Load the written file directly in Perfetto
+(https://ui.perfetto.dev) or chrome://tracing.
+
+``annotate(name)`` additionally brackets a region as a
+``jax.profiler.TraceAnnotation`` when the profiler is available, so the
+same spans show up inside an XLA profiler capture; it degrades to a
+no-op silently.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import time
+from typing import Any, Dict, List, Optional
+
+_PID = 1
+
+
+def annotate(name: str):
+    """jax.profiler.TraceAnnotation(name) when available, else a no-op
+    context manager — safe to use unconditionally on hot paths."""
+    try:
+        import jax.profiler
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:  # pragma: no cover - profiler unavailable
+        return contextlib.nullcontext()
+
+
+class TraceBuilder:
+    """Accumulates trace events; serializes Trace Event Format JSON."""
+
+    def __init__(self):
+        self._events: List[dict] = []   # with absolute t_start seconds
+        self._tids: Dict[str, int] = {}
+
+    def _tid(self, track: str) -> int:
+        tid = self._tids.get(track)
+        if tid is None:
+            tid = self._tids[track] = len(self._tids) + 1
+        return tid
+
+    def event(self, name: str, *, track: str, t_start: float, dur_s: float,
+              args: Optional[Dict[str, Any]] = None) -> None:
+        """One complete event; ``t_start`` is a ``perf_counter`` reading."""
+        self._events.append(dict(name=name, track=track, t=t_start,
+                                 dur=max(dur_s, 1e-7), args=args or {}))
+
+    @contextlib.contextmanager
+    def span(self, name: str, *, track: str = "server",
+             args: Optional[Dict[str, Any]] = None):
+        """Context manager timing one span onto ``track``."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.event(name, track=track, t_start=t0,
+                       dur_s=time.perf_counter() - t0, args=args)
+
+    def add_ledger(self, ledger, *, track: str = "ppac") -> None:
+        """Interleave every ledger launch record as one event on ``track``
+        (cycles / energy / plan ride in the event args)."""
+        for rec in ledger.records:
+            name = f"{rec.mode}[{rec.backend}]"
+            if rec.traced:
+                name += " (traced)"
+            self.event(name, track=track, t_start=rec.t_start,
+                       dur_s=rec.dur_s, args=rec.as_dict())
+
+    @property
+    def num_events(self) -> int:
+        return len(self._events)
+
+    def to_dict(self) -> dict:
+        """Trace Event Format: metadata naming each track, then the events
+        sorted by timestamp (ts in microseconds, earliest event at 0)."""
+        base = min((e["t"] for e in self._events), default=0.0)
+        out: List[dict] = []
+        for e in self._events:  # assign tids in first-seen track order
+            self._tid(e["track"])
+        for track in self._tids:
+            out.append(dict(name="thread_name", ph="M", pid=_PID,
+                            tid=self._tid(track),
+                            args=dict(name=track)))
+        for e in sorted(self._events, key=lambda e: e["t"]):
+            out.append(dict(name=e["name"], ph="X", pid=_PID,
+                            tid=self._tid(e["track"]),
+                            ts=(e["t"] - base) * 1e6,
+                            dur=e["dur"] * 1e6, args=e["args"]))
+        return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1)

@@ -28,13 +28,10 @@ import numpy as np
 from jax import lax
 
 from ..configs.base import ModelConfig
-from ..core.cost_model import (
-    ProjectionCost,
-    ServingCycleReport,
-    projection_mvp_cycles,
-)
+from ..core.cost_model import ProjectionCost, ServingCycleReport
 from ..core.engine import QuantContainer, pack_weight_for_serving
 from ..core.ppac import PPACConfig
+from ..obs import ledger as _flight
 from ..models import lm
 from ..sharding.rules import ShardingRules
 
@@ -410,6 +407,13 @@ def serving_cycle_report(params, cfg: ModelConfig, *,
     fused kernels; they are reported with ``fused=False`` at their
     would-be K=8 bit-serial cost. bf16 containers are not PPAC-executable
     and are skipped.
+
+    The accounting is a *ledger replay*: each projection synthesizes the
+    exact LaunchRecord (``obs.ledger.record_for``, batch=1) that one
+    streamed token emits through the instrumented dispatch chokepoint, so
+    this static estimate and a recorded flight ledger share one costing
+    function and cannot diverge (tests/test_obs.py asserts bit-exact
+    agreement across every container kind).
     """
     hw = config or PPACConfig()
     flat, _ = jax.tree_util.tree_flatten_with_path(
@@ -428,10 +432,16 @@ def serving_cycle_report(params, cfg: ModelConfig, *,
             l_bits = cfg.ppac.act_bits
         count = (int(np.prod(leaf.wq.shape[: leaf.wq.ndim - base]))
                  if leaf.wq.ndim > base else 1)
-        cycles = count * projection_mvp_cycles(
-            d_out, d_in, k_bits, l_bits, hw, parallel_arrays)
+        mode = ("mvp_int8_mxu" if leaf.kind == "int8"
+                else "mvp_multibit_resident")
+        rec = _flight.record_for(
+            mode, "replay", batch=1, m_rows=d_out, n_bits=d_in,
+            k_bits=k_bits, l_bits=l_bits, config=hw,
+            parallel_arrays=parallel_arrays)
         entries.append(ProjectionCost(
             name=name, kind=leaf.kind, d_in=d_in, d_out=d_out,
-            k_bits=k_bits, l_bits=l_bits, count=count, cycles=cycles,
-            fused=leaf.kind in ("packed1", "packed4")))
+            k_bits=k_bits, l_bits=l_bits, count=count,
+            cycles=count * rec.cycles,
+            fused=leaf.kind in ("packed1", "packed4"),
+            energy_nj=count * rec.energy_nj))
     return ServingCycleReport(projections=tuple(entries), config=hw)

@@ -156,6 +156,46 @@ def test_long_prompts_admissible_up_to_max_seq():
     assert len(done) == 1 and len(done[0].out) == 4
 
 
+def test_metrics_invariants_under_midflight_admission():
+    """Telemetry conservation laws hold when requests are admitted into
+    slots whose neighbors are mid-generation: every submitted request is
+    admitted, timed, and retired exactly once; occupancy never exceeds
+    the slot count; the token counter matches the decoded output."""
+    cfg = load_arch("smollm_360m").smoke()
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    server = LMServer(cfg, params, slots=2, max_seq=64)
+    rng = np.random.default_rng(3)
+    n = 5  # 5 requests / 2 slots: 3 are necessarily admitted mid-flight
+    for i in range(n):
+        server.submit(Request(i, rng.integers(0, cfg.vocab,
+                                              int(rng.integers(4, 12))),
+                              max_new=5))
+    done = server.run()
+    assert len(done) == n and server.admit_batches >= 2
+
+    snap = server.metrics.snapshot()
+    assert snap["lm_requests_submitted"] == n
+    assert snap["lm_requests_admitted"] == n
+    assert snap["lm_requests_retired"] == n
+    assert snap["lm_slots_evicted"] == n
+    assert snap["lm_finish_length"] == n
+    # every request timed exactly once, end to end
+    for hist in ("lm_ttft_s", "lm_queue_wait_s", "lm_request_latency_s",
+                 "lm_tpot_s"):
+        assert snap[hist]["count"] == n, hist
+        assert snap[hist]["min"] >= 0
+    assert all(r.latency_s is not None and r.latency_s >= 0 for r in done)
+    # TTFT (prefill included) can never beat pure queue wait
+    assert snap["lm_ttft_s"]["sum"] >= snap["lm_queue_wait_s"]["sum"]
+    # occupancy bounded by slots; its integral is the decoded tokens
+    assert snap["lm_slot_occupancy"]["max"] <= server.slots
+    decoded = sum(len(r.out) - 1 for r in done)  # first token <- prefill
+    assert snap["lm_tokens_generated"] == decoded
+    assert snap["lm_slot_occupancy_per_step"]["sum"] == decoded
+    assert snap["lm_decode_step_s"]["count"] == server.decode_steps
+    assert snap["lm_prefill_batches"] == server.admit_batches
+
+
 def test_sampling_server_stays_in_vocab():
     cfg = load_arch("smollm_360m").smoke()
     params, _ = lm.init(cfg, jax.random.PRNGKey(0))
