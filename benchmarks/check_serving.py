@@ -1,7 +1,7 @@
 """CI gate on the serving-benchmark JSON: the zero-repack fast path must
 actually be fast, and scan-fused generation must beat the per-step loop.
 
-Three checks over the ``serving`` rows of a ``benchmarks.run --json`` file:
+Four checks over the ``serving`` rows of a ``benchmarks.run --json`` file:
 
   1. fused <= tol * int8 — the packed containers routed through the PPAC
      engine must not lose to the plain int8 MXU fallback at smoke scale
@@ -10,20 +10,28 @@ Three checks over the ``serving`` rows of a ``benchmarks.run --json`` file:
      row-to-row timing drift on shared CI runners while still catching
      that class of regression);
   2. prepack >= speedup * fast — the fast path must beat the pre-PR
-     per-projection / per-call-repack layout by the acceptance margin;
+     per-projection / per-call-repack layout by the acceptance margin.
+     The margin is scaled per kind: packed1 repacks a single bitplane,
+     so the overhead this gate protects is ~4x smaller than packed4's
+     and the achievable ratio drifts closer to 1.0 on loaded runners;
   3. gen_loop >= gen_speedup * gen_scan, per (kind, batch) pair present
      in both — the device-resident ``lax.scan`` generation (donated
      cache, fused sampling, one dispatch for N tokens) must beat the
      per-step python decode loop at smoke scale. A regression here means
      either the scan stopped fusing or the cache donation broke (copies
      per token dominate at small model scale).
+  4. paged prefix reuse: the 100%-shared-prefix warm rerun must spend
+     >= prefix_speedup x fewer ledger-measured prefill cycles than cold
+     admission of the same repeated-system-prompt workload, at a 1.0
+     page hit rate — a regression means CAM matching stopped mapping
+     resident pages or suffix prefill fell back to full prompts.
 
 Rows are matched on the *typed* JSON fields (``kind`` / ``path`` /
-``impl`` / ``batch``); files from before the typed schema fall back to
-name parsing via :func:`benchmarks.run.row_fields`.
+``impl`` / ``batch`` / ``phase``); files from before the typed schema
+fall back to name parsing via :func:`benchmarks.run.row_fields`.
 
 Usage: python -m benchmarks.check_serving BENCH.json [--tol 1.6]
-       [--speedup 1.5] [--gen-speedup 2.0]
+       [--speedup 1.5] [--gen-speedup 2.0] [--prefix-speedup 2.0]
 """
 from __future__ import annotations
 
@@ -44,7 +52,7 @@ def _rows(path):
 
 
 def check(path: str, *, tol: float = 1.6, speedup: float = 1.5,
-          gen_speedup: float = 2.0) -> int:
+          gen_speedup: float = 2.0, prefix_speedup: float = 2.0) -> int:
     rows = _rows(path)
 
     def find(kind, path_tag="fast"):
@@ -66,6 +74,11 @@ def check(path: str, *, tol: float = 1.6, speedup: float = 1.5,
 
     int8 = find("int8")
     failures = []
+    # the repack overhead the speedup gate protects scales with the
+    # number of weight bitplanes rebuilt per call: packed1 repacks one
+    # plane to packed4's four, so its floor gets half the margin (at
+    # the 1.5 default: packed4 needs 1.5x, packed1 1.25x)
+    floors = {"packed4": speedup, "packed1": 1.0 + (speedup - 1.0) / 2}
     for kind in ("packed4", "packed1"):
         fast = find(kind)
         prepack = find(kind, "prepack")
@@ -74,11 +87,11 @@ def check(path: str, *, tol: float = 1.6, speedup: float = 1.5,
                 f"{kind} fast path {fast:.1f}us is slower than "
                 f"{tol:.2f}x the int8 MXU fallback ({int8:.1f}us)")
         ratio = prepack / fast
-        if ratio < speedup:
+        if ratio < floors[kind]:
             failures.append(
                 f"{kind} fast path only {ratio:.2f}x faster than the "
                 f"prepack path ({fast:.1f}us vs {prepack:.1f}us; "
-                f"need >= {speedup:.2f}x)")
+                f"need >= {floors[kind]:.2f}x)")
         print(f"{kind}: fast {fast:.1f}us, prepack {prepack:.1f}us "
               f"({ratio:.2f}x), int8 {int8:.1f}us")
 
@@ -111,6 +124,34 @@ def check(path: str, *, tol: float = 1.6, speedup: float = 1.5,
         print(f"gen {tag}: scan {scan_rows[tag]:.1f}us/tok, loop "
               f"{loop_rows[tag]:.1f}us/tok ({ratio:.2f}x)")
 
+    # prefix-reuse gate: the 100%-shared-prefix rerun must spend at
+    # least ``prefix_speedup`` x fewer ledger-measured prefill cycles
+    # than cold admission of the same workload. Cycles, not launch
+    # count: a suffix prefill still launches every projection, but at
+    # suffix geometry — the ledger prices exactly that difference.
+    # (Deterministic: launch geometry comes from padded bucket shapes.)
+    phases = {f["phase"]: f for name, _, f in rows
+              if name.startswith("serve_paged_prefill_") and "phase" in f}
+    if not {"cold", "warm"} <= set(phases):
+        failures.append("no serve_paged_prefill_cold/warm rows — the "
+                        "paged prefix-reuse benchmark did not run")
+    else:
+        cold_cyc = phases["cold"]["prefill_cycles"]
+        warm_cyc = phases["warm"]["prefill_cycles"]
+        ratio = cold_cyc / warm_cyc
+        if ratio < prefix_speedup:
+            failures.append(
+                f"paged prefix reuse: warm rerun spends only {ratio:.2f}x "
+                f"fewer prefill cycles than cold admission ({warm_cyc} vs "
+                f"{cold_cyc}; need >= {prefix_speedup:.2f}x)")
+        if phases["warm"].get("prefix_hit_rate", 0) < 1.0:
+            failures.append(
+                f"paged prefix reuse: 100%-shared rerun only hit "
+                f"{phases['warm'].get('prefix_hit_rate')} of probed pages")
+        print(f"paged prefix: cold {cold_cyc} prefill cycles, warm "
+              f"{warm_cyc} ({ratio:.2f}x saved, hit rate "
+              f"{phases['warm'].get('prefix_hit_rate')})")
+
     for f in failures:
         print(f"FAIL: {f}", file=sys.stderr)
     return 1 if failures else 0
@@ -128,9 +169,13 @@ def main(argv=None) -> int:
     ap.add_argument("--gen-speedup", type=float, default=2.0,
                     help="required scan-generation vs per-step-loop "
                          "speedup (per (kind, batch) pair)")
+    ap.add_argument("--prefix-speedup", type=float, default=2.0,
+                    help="required cold-vs-warm prefill-cycle reduction "
+                         "for the 100%%-shared-prefix paged rerun")
     args = ap.parse_args(argv)
     return check(args.json_path, tol=args.tol, speedup=args.speedup,
-                 gen_speedup=args.gen_speedup)
+                 gen_speedup=args.gen_speedup,
+                 prefix_speedup=args.prefix_speedup)
 
 
 if __name__ == "__main__":

@@ -130,6 +130,91 @@ def run():
                   if rep else dict(kind=kind, path="fast"))
         rows.append((f"serve_decode_{label}_b{slots}", us, extras))
     rows.extend(_generation_rows(base, params0))
+    rows.extend(_paged_prefix_rows())
+    return rows
+
+
+# paged prefix-reuse sweep: a repeated-system-prompt workload
+_PAGED_ARCH = "smollm_360m"
+_PAGED_REQUESTS = 4
+_PAGED_SHARED = 24   # shared system prompt: 3 full pages at page_size 8
+_PAGED_TAIL = 4      # per-request user suffix (partial tail page)
+_PAGED_MAX_NEW = 5
+
+
+def _paged_prefix_rows():
+    """Prefix-reuse rows: the same repeated-system-prompt workload served
+    three ways — ``cold`` (paged, no prefix cache: the baseline every
+    admission pays full prefill), ``register`` (prefix cache on, first
+    sight of the prompts: CAM registration + intra-run hits), ``warm``
+    (the 100%-shared-prefix rerun on the now-resident pages: admission
+    maps matched pages and prefills only suffixes).
+
+    Cycles are ledger-measured per phase and the server runs EAGERLY
+    (``jax.disable_jit``): the ledger prices launches at trace time, so
+    a cached jit executable would replay nothing. Cycle totals are
+    deterministic (launch geometry comes from the padded bucket shapes,
+    not wall clock); ``benchmarks.check_serving`` gates warm <= cold/2.
+    """
+    from repro.launch.serve_lm import LMServer, Request
+    from repro.obs import Ledger
+
+    page_size, slots, max_seq = 8, 2, 64
+    cfg = load_arch(_PAGED_ARCH).smoke()
+    cfg = dataclasses.replace(cfg, ppac=dataclasses.replace(
+        cfg.ppac, enabled=True, weight_bits=4, act_bits=8,
+        min_features=32, backend="auto"))
+    params0, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    params = convert_params_for_serving(params0, cfg)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab, _PAGED_SHARED)
+    prompts = [np.concatenate(
+        [shared, rng.integers(0, cfg.vocab, _PAGED_TAIL)]).astype(np.int32)
+        for _ in range(_PAGED_REQUESTS)]
+
+    def serve_round(server, phase, rows):
+        pre_led, dec_led = Ledger(), Ledger()
+        hit0 = server.prefix.pages_hit if server.prefix else 0
+        probe0 = server.prefix.pages_probed if server.prefix else 0
+        skip0 = server.metrics.counter("lm_prefill_rows_skipped").value
+        for i, p in enumerate(prompts):
+            server.submit(Request(i, p, _PAGED_MAX_NEW))
+        t0 = time.perf_counter()
+        done = 0
+        while server.queue or any(r is not None for r in server.live):
+            with pre_led:
+                server._admit()
+            with dec_led:
+                done += len(server.step())
+        dt = time.perf_counter() - t0
+        assert done == len(prompts)
+        probed = (server.prefix.pages_probed - probe0) if server.prefix \
+            else 0
+        hits = (server.prefix.pages_hit - hit0) if server.prefix else 0
+        skipped = server.metrics.counter("lm_prefill_rows_skipped").value \
+            - skip0
+        rows.append((
+            f"serve_paged_prefill_{phase}", dt / len(prompts) * 1e6,
+            dict(workload="shared_prefix", phase=phase,
+                 prefill_cycles=pre_led.total_cycles,
+                 prefill_launches=pre_led.num_launches,
+                 decode_cycles=dec_led.total_cycles,
+                 prefix_hit_rate=round(hits / probed, 3) if probed else 0.0,
+                 rows_skipped=skipped,
+                 requests=len(prompts), page_size=page_size)))
+
+    rows = []
+    with jax.disable_jit():
+        cold = LMServer(cfg, params, slots=slots, max_seq=max_seq,
+                        mode="serve", paged=True, page_size=page_size)
+        serve_round(cold, "cold", rows)
+        warm = LMServer(cfg, params, slots=slots, max_seq=max_seq,
+                        mode="serve", paged=True, page_size=page_size,
+                        prefix_cache=True)
+        serve_round(warm, "register", rows)  # first sight: registration
+        serve_round(warm, "warm", rows)      # 100%-shared rerun
+    cyc = {e["phase"]: e["prefill_cycles"] for _, _, e in rows}
+    rows[-1][2]["cycles_saved_ratio"] = round(cyc["cold"] / cyc["warm"], 2)
     return rows
 
 

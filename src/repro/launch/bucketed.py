@@ -24,11 +24,16 @@ from ..obs.metrics import MetricsRegistry
 
 
 def bucket_for(count: int, buckets: Sequence[int]) -> int:
-    """Smallest bucket holding ``count`` (largest bucket if none does)."""
+    """Smallest bucket holding ``count``.
+
+    Overflow raises: silently clamping to ``buckets[-1]`` would hand the
+    caller a shape SMALLER than its payload — a truncation bug (dropped
+    prompt rows, out-of-bounds scatter) that surfaces far from here.
+    Callers that want clamping (``drain_take``) cap explicitly first."""
     for b in buckets:
         if count <= b:
             return b
-    return buckets[-1]
+    raise ValueError(f"count {count} exceeds largest bucket {buckets[-1]}")
 
 
 def drain_take(queued: int, buckets: Sequence[int]) -> Tuple[int, int]:

@@ -1,0 +1,66 @@
+"""Host-side physical page allocator for the paged KV cache.
+
+The device holds the paged pools and the block table
+(``models.lm.init_cache(page_size=...)``); this module owns the *policy*
+side: which physical pages are free, how many references point at each
+page (a page shared by a prefix-cache hit carries one reference per
+mapping slot plus one held by the prefix index itself), and the
+conservation law tests pin down:
+
+    sum(refcount) == live table mappings + index-held registrations
+
+Allocation is O(n) off a free deque; freeing is refcount-driven
+(``decref`` returns the pages that actually went free so the caller can
+evict their prefix-index registrations and reset table rows).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+class PagePool:
+    """Free-list + per-page refcounts over ``pages`` physical pages."""
+
+    def __init__(self, pages: int):
+        assert pages > 0
+        self.pages = pages
+        self.refcount = np.zeros(pages, np.int32)
+        self._free = deque(range(pages))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.pages - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` fresh pages at refcount 1, or None if the pool
+        can't satisfy the request (caller decides: evict or backpressure)."""
+        if n < 0 or n > len(self._free):
+            return None
+        out = [self._free.popleft() for _ in range(n)]
+        for p in out:
+            assert self.refcount[p] == 0, (p, int(self.refcount[p]))
+            self.refcount[p] = 1
+        return out
+
+    def incref(self, pages: Sequence[int]):
+        for p in pages:
+            assert self.refcount[p] > 0, f"incref of free page {p}"
+            self.refcount[p] += 1
+
+    def decref(self, pages: Sequence[int]) -> List[int]:
+        """Drop one reference per page; returns pages that went free."""
+        freed = []
+        for p in pages:
+            assert self.refcount[p] > 0, f"decref of free page {p}"
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                freed.append(p)
+        return freed

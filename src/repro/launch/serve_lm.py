@@ -24,9 +24,24 @@ itself served to many concurrent users:
     prefill and decode programs — the host only ever sees the [S] int32
     ids it needs for retirement decisions.
 
+Paged mode (``paged=True`` / ``--paged``) virtualizes the cache: KV
+leaves become fixed-size page pools ([pool_pages, page_size, ...]) and a
+[slots, extent/page_size] block table maps logical to physical pages
+(models/attention.py gathers rows through it, same trick as
+``_ring_rows``). Admission becomes page allocation off a host free list
+with per-page refcounts: memory scales with *live tokens*, a too-small
+pool backpressures admission instead of crashing, and — with
+``prefix_cache=True`` — each full prompt page hashes into a chained
+128-bit key matched against resident pages via one batched CAM launch
+(``retrieval/prefix.py``): a hit maps the new slot's table entries onto
+existing pages (copy-on-write for a shared tail page) and only the
+suffix is prefilled. Prefill writes go straight through the table into
+the donated resident pools — no scratch cache, no copy step.
+
 CLI: PYTHONPATH=src python -m repro.launch.serve_lm --arch smollm_360m \
         --requests 12 --max-new 16 [--serve-quant --weight-bits 4] \
-        [--kv-int8] [--temperature 0.8 --top-k 40] [--eos 0]
+        [--kv-int8] [--temperature 0.8 --top-k 40] [--eos 0] \
+        [--paged --page-size 16 --pool-pages 64 --prefix-cache]
 """
 from __future__ import annotations
 
@@ -46,13 +61,16 @@ from ..configs.base import ModelConfig, load_arch
 from ..models import lm
 from ..obs.metrics import MetricsRegistry
 from ..obs.trace import TraceBuilder, annotate
+from ..retrieval.prefix import PagePrefixIndex
 from ..serve.step import (
     convert_params_for_serving,
     make_decode_select_step,
+    make_prefill_select_step,
     sample_tokens,
     serving_cycle_report,
 )
 from .bucketed import bucket_for, drain_take
+from .paging import PagePool
 
 
 @dataclasses.dataclass
@@ -86,7 +104,10 @@ class LMServer:
                  prefill_buckets: Optional[Sequence[int]] = None,
                  admit_buckets: Sequence[int] = (1, 2, 4),
                  metrics: Optional[MetricsRegistry] = None,
-                 trace: Optional[TraceBuilder] = None):
+                 trace: Optional[TraceBuilder] = None,
+                 paged: bool = False, page_size: int = 16,
+                 pool_pages: Optional[int] = None,
+                 prefix_cache: bool = False, cache_dtype=None):
         assert tuple(admit_buckets) == tuple(sorted(admit_buckets))
         if prefill_buckets is None:
             # powers of two up to max_seq (any prompt that leaves room to
@@ -116,36 +137,81 @@ class LMServer:
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.trace = trace
         self._key = jax.random.PRNGKey(seed)
-        # the resident cache: allocated once, donated through every step
-        self.cache, _ = lm.init_cache(cfg, slots, max_seq)
+        self.paged, self.page_size = paged, page_size
+        self._cache_dtype = cache_dtype
+        ckw = {} if cache_dtype is None else {"dtype": cache_dtype}
+        if paged:
+            if cfg.family in ("ssm", "hybrid"):
+                raise ValueError("paged serving needs a token-indexed KV "
+                                 "cache; SSM/hybrid state stays contiguous")
+            self.extent = lm.paged_extent(cfg, max_seq)
+            self.n_pages = self.extent // page_size
+            self.pool_pages = (pool_pages if pool_pages is not None
+                               else slots * self.n_pages)
+            self.cache, _ = lm.init_cache(cfg, slots, max_seq,
+                                          page_size=page_size,
+                                          pool_pages=self.pool_pages, **ckw)
+            self.pool = PagePool(self.pool_pages)
+            # host mirror of the device block table (sentinel = unmapped)
+            self.table_np = np.full((slots, self.n_pages), self.pool_pages,
+                                    np.int32)
+            self.prefix = None
+            if prefix_cache:
+                if cfg.sliding_window:
+                    raise ValueError("prefix reuse needs a linear cache: "
+                                     "ring page contents depend on the "
+                                     "sequence's own positions")
+                self.prefix = PagePrefixIndex(page_size)
+
+            def table_write(cache, slot_ids, rows):
+                out = dict(cache)
+                out["table"] = cache["table"].at[slot_ids].set(rows)
+                return out
+            self._table_write = jax.jit(table_write, donate_argnums=(0,))
+
+            def copy_page(cache, src, dst):
+                """Copy-on-write: duplicate physical page ``src`` into the
+                private page ``dst`` across every pool leaf, in place."""
+                def leaf(x):
+                    row = lax.dynamic_index_in_dim(x, src, 1, keepdims=False)
+                    return x.at[:, dst].set(row)
+                out = dict(cache)
+                for grp in ("layers", "dense_layers"):
+                    if grp in cache:
+                        out[grp] = jax.tree.map(leaf, cache[grp])
+                return out
+            self._copy_page = jax.jit(copy_page, donate_argnums=(0,))
+        else:
+            # the resident cache: allocated once, donated through every step
+            self.cache, _ = lm.init_cache(cfg, slots, max_seq, **ckw)
 
         # one fused decode+select step over all slots, cache donated
         self._decode = make_decode_select_step(
             cfg, rules, mode, temperature=temperature, top_k=top_k)
 
-        def prefill_select(params, tokens, lengths, cache, key):
-            logits, cache = lm.prefill(params, cfg, {"tokens": tokens},
-                                       cache, lengths=lengths, mode=mode,
-                                       rules=rules)
-            tok = sample_tokens(logits[:, -1], key, temperature=temperature,
-                                top_k=top_k)
-            return tok, cache
         # compiles once per (batch-bucket, length-bucket) pair
-        self._prefill = jax.jit(prefill_select, donate_argnums=(3,))
+        self._prefill = make_prefill_select_step(
+            cfg, rules, mode, temperature=temperature, top_k=top_k,
+            paged=paged)
+        self._prefill_hit = (make_prefill_select_step(
+            cfg, rules, mode, temperature=temperature, top_k=top_k,
+            paged=True, history=True) if paged else None)
 
-        def write_slot(cache, src, row, slot):
-            """Copy sequence ``row`` of a prefill cache into ``slot`` of
-            the resident cache — on device, resident cache donated."""
-            def leaf(full, one):
-                if full.ndim == 1:  # per-sequence pos vector
-                    return full.at[slot].set(
-                        lax.dynamic_index_in_dim(one, row, 0,
-                                                 keepdims=False))
-                r = lax.dynamic_slice_in_dim(one, row, 1, axis=1)
-                return lax.dynamic_update_slice_in_dim(
-                    full, r.astype(full.dtype), slot, axis=1)
-            return jax.tree.map(leaf, cache, src)
-        self._write = jax.jit(write_slot, donate_argnums=(0,))
+        if not paged:
+            def write_slot(cache, src, row, slot):
+                """Copy sequence ``row`` of a prefill cache into ``slot``
+                of the resident cache — on device, resident cache
+                donated."""
+                def leaf(full, one):
+                    if full.ndim == 1:  # per-sequence pos vector
+                        return full.at[slot].set(
+                            lax.dynamic_index_in_dim(one, row, 0,
+                                                     keepdims=False))
+                    r = lax.dynamic_slice_in_dim(one, row, 1, axis=1)
+                    return lax.dynamic_update_slice_in_dim(
+                        full, r.astype(full.dtype), slot, axis=1)
+                return jax.tree.map(leaf, cache, src)
+            self._write = jax.jit(write_slot, donate_argnums=(0,))
 
     # -- telemetry -----------------------------------------------------------
 
@@ -166,9 +232,12 @@ class LMServer:
     def submit(self, req: Request):
         plen = len(req.prompt)
         assert 0 < plen <= self.prefill_buckets[-1], plen
-        assert plen + req.max_new <= self.max_seq, \
-            f"prompt {plen} + max_new {req.max_new} exceeds max_seq " \
-            f"{self.max_seq}"
+        # prefill emits the first of the max_new tokens, so the last
+        # decode step writes cache row plen + max_new - 2: a request
+        # needs exactly plen + max_new - 1 rows, not plen + max_new.
+        assert plen + req.max_new - 1 <= self.max_seq, \
+            f"prompt {plen} + max_new {req.max_new} needs " \
+            f"{plen + req.max_new - 1} cache rows, max_seq {self.max_seq}"
         req.submit_t = time.perf_counter()
         self.metrics.counter("lm_requests_submitted").inc()
         self.queue.append(req)
@@ -202,6 +271,10 @@ class LMServer:
             while (self.queue and len(grp) < cap
                    and self._plen_bucket(len(self.queue[0].prompt)) == plb):
                 grp.append(self.queue.pop(0))
+            if self.paged:
+                if not self._admit_paged(grp, free, plb):
+                    break  # pool backpressure: retry after retirements
+                continue
             blen = bucket_for(len(grp), self.admit_buckets)
             toks = np.zeros((blen, plb), np.int32)
             lens = np.ones((blen,), np.int32)
@@ -221,6 +294,10 @@ class LMServer:
             m = self.metrics
             m.counter("lm_prefill_batches").inc()
             m.counter("lm_requests_admitted").inc(len(grp))
+            # prefill emits each request's first token: count it here so
+            # lm_tokens_generated matches sum(len(r.out)) — the decode
+            # loop only adds the per-step occupancy (decode tokens)
+            m.counter("lm_tokens_generated").inc(len(grp))
             m.histogram("lm_prefill_s").record(t1 - t0)
             m.histogram("lm_admit_fill_ratio").record(len(grp) / blen)
             for i, r in enumerate(grp):
@@ -234,9 +311,175 @@ class LMServer:
                     m.histogram("lm_ttft_s").record(t1 - r.submit_t)
                 self.live[s] = r
 
+    def _admit_paged(self, grp: List[Request], free: List[int],
+                     plb: int) -> bool:
+        """Page-granular admission: map each request's table row onto
+        physical pages off the pool (prefix hits first), then prefill
+        cold prompts and hit suffixes straight through the table into
+        the donated resident pools.
+
+        Returns False when the pool backpressured: un-admitted requests
+        went back to the queue FRONT (FIFO order preserved) and the
+        caller stops admitting this tick — pages free up as live
+        requests retire."""
+        m = self.metrics
+        psz = self.page_size
+        plans = []  # (req, slot, mapping, keys, s0)
+        bounced: List[Request] = []
+        for r in grp:
+            if bounced:  # keep FIFO order behind the first bounce
+                bounced.append(r)
+                continue
+            plen = len(r.prompt)
+            if self.cfg.sliding_window:
+                # ring prefill writes all `extent` wrapped rows up front,
+                # and ring page contents depend on the sequence's own
+                # positions — every slot needs the full page complement
+                need, keys, matched = self.n_pages, [], []
+            else:
+                rows = min(plen + r.max_new - 1, self.extent)
+                need = -(-rows // psz)
+                keys = (self.prefix.keys_for(r.prompt)
+                        if self.prefix is not None else [])
+                matched = (self.prefix.lookup(keys)
+                           if self.prefix is not None and keys else [])
+            if need > self.pool.pages:
+                raise RuntimeError(
+                    f"request {r.rid} needs {need} pages but the pool "
+                    f"holds only {self.pool.pages}; raise --pool-pages "
+                    f"or lower max_new")
+            nm = len(matched)
+            # the suffix must re-emit from row plen-1 (whose logits pick
+            # the first output token), so even a full match of every
+            # prompt page still prefills one row — and that row lands in
+            # a SHARED page: copy-on-write it into a private page first
+            s0 = min(nm * psz, plen - 1)
+            cow = nm > 0 and nm * psz > plen - 1
+            fresh_needed = need - nm + (1 if cow else 0)
+            pages = self.pool.alloc(fresh_needed)
+            if pages is None and self.prefix is not None:
+                # recycle idle registrations (refcount == 1, LRU) — but
+                # never the pages this very request just matched
+                protect = set(matched)
+                for p in self.prefix.idle_pages(self.pool.refcount):
+                    if p in protect:
+                        continue
+                    self.prefix.evict_page(p)
+                    self.pool.decref([p])
+                    m.counter("lm_prefix_pages_evicted").inc()
+                    if self.pool.free_pages >= fresh_needed:
+                        break
+                pages = self.pool.alloc(fresh_needed)
+            if pages is None:
+                if not plans and not any(x is not None for x in self.live):
+                    raise RuntimeError(
+                        f"pool exhausted with no live requests to "
+                        f"retire: request {r.rid} needs {fresh_needed} "
+                        f"fresh pages, {self.pool.free_pages} free of "
+                        f"{self.pool.pages}")
+                bounced.append(r)
+                continue
+            mapping = list(matched)
+            if cow:
+                src, dst = mapping[-1], pages.pop(0)
+                mapping[-1] = dst
+                self.cache = self._copy_page(self.cache, jnp.int32(src),
+                                             jnp.int32(dst))
+                m.counter("lm_pages_cow").inc()
+                self.pool.incref(matched[:-1])  # still-shared pages only
+            else:
+                self.pool.incref(matched)
+            mapping += pages
+            s = free.pop(0)
+            self.table_np[s] = self.pool_pages  # sentinel-fill the tail
+            self.table_np[s, :len(mapping)] = mapping
+            m.counter("lm_prefix_pages_hit").inc(nm)
+            m.counter("lm_prefix_pages_total").inc(plen // psz)
+            m.counter("lm_prefill_rows_skipped").inc(s0)
+            plans.append((r, s, mapping, keys, s0))
+        if bounced:
+            self.queue[:0] = bounced
+        if plans:
+            slot_ids = np.array([p[1] for p in plans], np.int32)
+            self.cache = self._table_write(
+                self.cache, jnp.asarray(slot_ids),
+                jnp.asarray(self.table_np[slot_ids]))
+            cold = [p for p in plans if p[4] == 0]
+            hits = [p for p in plans if p[4] > 0]
+            if cold:
+                self._launch_prefill(cold, plb, history=False)
+            by_slb = {}
+            for p in hits:  # suffixes re-bucket by their OWN length
+                slb = bucket_for(len(p[0].prompt) - p[4],
+                                 self.prefill_buckets)
+                by_slb.setdefault(slb, []).append(p)
+            for slb in sorted(by_slb):
+                self._launch_prefill(by_slb[slb], slb, history=True)
+            if self.prefix is not None:
+                # register fresh full-prompt pages; the index holds one
+                # reference so hot prefixes outlive their creator.
+                # register() refuses duplicates (already-matched pages,
+                # COW copies whose key is resident) so no double-count.
+                for r, _, mapping, keys, _ in plans:
+                    for j in range(len(r.prompt) // psz):
+                        if self.prefix.register(keys[j], mapping[j]):
+                            self.pool.incref([mapping[j]])
+            # prefill-emitted first tokens (mirrors the contiguous path)
+            m.counter("lm_tokens_generated").inc(len(plans))
+        m.gauge("lm_pool_pages_used").set(self.pool.used_pages)
+        m.gauge("lm_pool_pages_free").set(self.pool.free_pages)
+        return not bounced
+
+    def _launch_prefill(self, plans, lenb: int, *, history: bool):
+        """One paged prefill launch: cold prompts (history=False) or the
+        unshared suffixes of prefix hits (history=True). Dead batch rows
+        carry slot_id == slots and all-sentinel table rows, so their
+        pos/table scatters drop on the floor instead of clobbering a
+        live slot."""
+        blen = bucket_for(len(plans), self.admit_buckets)
+        toks = np.zeros((blen, lenb), np.int32)
+        lens = np.ones((blen,), np.int32)
+        starts = np.zeros((blen,), np.int32)
+        slot_ids = np.full((blen,), self.slots, np.int32)
+        rows = np.full((blen, self.n_pages), self.pool_pages, np.int32)
+        for i, (r, s, mapping, _, s0) in enumerate(plans):
+            span = r.prompt[s0:] if history else r.prompt
+            toks[i, :len(span)] = span  # RIGHT-pad: bit-exact
+            lens[i] = len(span)
+            starts[i] = s0
+            slot_ids[i] = s
+            rows[i] = self.table_np[s]
+        fn = self._prefill_hit if history else self._prefill
+        t0 = time.perf_counter()
+        with self._span("prefill_batch", batch=blen, plen=lenb,
+                        fill=len(plans) / blen, history=history):
+            tok0, self.cache = fn(self.params, jnp.asarray(toks),
+                                  jnp.asarray(lens), jnp.asarray(starts),
+                                  jnp.asarray(slot_ids), jnp.asarray(rows),
+                                  self.cache, self._next_key())
+            tok0 = np.asarray(tok0)
+        t1 = time.perf_counter()
+        self.admit_batches += 1
+        m = self.metrics
+        m.counter("lm_prefill_batches").inc()
+        m.counter("lm_requests_admitted").inc(len(plans))
+        m.histogram("lm_prefill_s").record(t1 - t0)
+        m.histogram("lm_admit_fill_ratio").record(len(plans) / blen)
+        for i, (r, s, *_rest) in enumerate(plans):
+            r.out.append(int(tok0[i]))
+            r.first_token_t = t1
+            if r.submit_t is not None:
+                m.histogram("lm_queue_wait_s").record(t0 - r.submit_t)
+                m.histogram("lm_ttft_s").record(t1 - r.submit_t)
+            self.live[s] = r
+
     def step(self) -> List[Request]:
         """One fused decode step over all slots; returns retired requests."""
         occupied = sum(r is not None for r in self.live)
+        if occupied == 0:
+            # admission backpressured with nothing resident: a decode
+            # launch would only burn a step on dead slots
+            return []
         toks = np.zeros((self.slots, 1), np.int32)
         for s, r in enumerate(self.live):
             if r is not None:
@@ -275,6 +518,22 @@ class LMServer:
                         (t1 - r.first_token_t) / (len(r.out) - 1))
                 retired.append(r)
                 self.live[s] = None  # evict: slot is free for re-admission
+        if self.paged and retired:
+            reclaim = [s for s, r in enumerate(self.live)
+                       if r is None and (self.table_np[s]
+                                         < self.pool_pages).any()]
+            for s in reclaim:
+                held = [int(p) for p in self.table_np[s]
+                        if p < self.pool_pages]
+                self.pool.decref(held)  # shared pages survive via refcount
+                self.table_np[s] = self.pool_pages
+            if reclaim:
+                sids = np.asarray(reclaim, np.int32)
+                self.cache = self._table_write(
+                    self.cache, jnp.asarray(sids),
+                    jnp.asarray(self.table_np[sids]))
+            m.gauge("lm_pool_pages_used").set(self.pool.used_pages)
+            m.gauge("lm_pool_pages_free").set(self.pool.free_pages)
         return retired
 
     def run(self) -> List[Request]:
@@ -283,6 +542,13 @@ class LMServer:
             self._admit()
             done.extend(self.step())
         return done
+
+
+def fmt_latency(latency_s: Optional[float]) -> str:
+    """Render a latency for the per-request summary line. Only ``None``
+    (not yet retired) is unknown — 0.0 is a legitimate measurement and
+    must NOT fall through a truthiness check to '?'."""
+    return "?" if latency_s is None else f"{latency_s * 1e3:.1f}ms"
 
 
 def run_and_report(server: LMServer, requests: List[Request], *,
@@ -295,12 +561,22 @@ def run_and_report(server: LMServer, requests: List[Request], *,
         server.submit(r)
     t0 = time.time()
     completed = server.run()
-    dt = time.time() - t0
+    # an empty request list (or a sub-resolution run) must not divide
+    # the tok/s line by zero
+    dt = max(time.time() - t0, 1e-9)
     toks = sum(len(r.out) for r in completed)
     print(f"served {len(completed)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks / dt:.1f} tok/s, slots={server.slots}, "
           f"{server.decode_steps} decode steps, "
           f"{server.admit_batches} prefill batches)")
+    if server.paged:
+        line = (f"paged pool: {server.pool.used_pages}/{server.pool.pages} "
+                f"pages held (page_size={server.page_size})")
+        if server.prefix is not None:
+            hit, tot = server.prefix.pages_hit, server.prefix.pages_probed
+            line += (f", prefix hits {hit}/{tot} pages "
+                     f"({hit / max(tot, 1):.0%})")
+        print(line)
     lat = server.metrics.histogram("lm_request_latency_s")
     ttft = server.metrics.histogram("lm_ttft_s")
     if lat.count:
@@ -315,8 +591,7 @@ def run_and_report(server: LMServer, requests: List[Request], *,
               f"({report.cycles_per_token}/token, "
               f"{toks * report.energy_nj_per_token / 1e3:.2f} uJ modeled)")
     for r in completed[:3]:
-        lat_ms = f"{r.latency_s * 1e3:.1f}ms" if r.latency_s else "?"
-        print(f"  req {r.rid} [{r.finish_reason}, {lat_ms}]: "
+        print(f"  req {r.rid} [{r.finish_reason}, {fmt_latency(r.latency_s)}]: "
               f"{r.out[:8]}...")
     if show_metrics:
         print(server.metrics.prometheus_text(), end="")
@@ -337,6 +612,18 @@ def main():
     ap.add_argument("--weight-bits", type=int, default=4,
                     choices=(1, 2, 3, 4, 8))
     ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="virtualize the KV cache into fixed-size pages "
+                         "over a bounded pool with a block table")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="rows per physical page (must divide the cache "
+                         "extent)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="physical pool size; default slots*extent/page_size "
+                         "(smaller pools backpressure admission)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="CAM-matched prefix reuse: map shared prompt "
+                         "pages instead of re-prefilling them")
     ap.add_argument("--metrics", action="store_true",
                     help="print the telemetry registry (Prometheus text) "
                          "after the run")
@@ -361,7 +648,9 @@ def main():
 
     server = LMServer(cfg, params, slots=args.slots, max_seq=args.max_seq,
                       mode=mode, temperature=args.temperature,
-                      top_k=args.top_k)
+                      top_k=args.top_k, paged=args.paged,
+                      page_size=args.page_size, pool_pages=args.pool_pages,
+                      prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
     run_and_report(
         server,

@@ -208,6 +208,100 @@ def gqa_cache_axes(cfg: ModelConfig):
     return {"k": ax, "v": ax}
 
 
+# -- paged KV pools -----------------------------------------------------------
+#
+# A paged cache virtualizes the per-slot [T, ...] token axis onto a bounded
+# physical pool of fixed-size pages: leaves are [pool_pages, page_size, ...]
+# and an int32 page table [slots, T / page_size] maps each slot's logical
+# page to a physical one. Reads gather rows through the table (the same
+# take-based trick as ``_ring_rows``), writes scatter through it — both
+# lower in place under donation, so thousands of logical slots can share a
+# pool sized by *live tokens*. Which physical pages back which slot (free
+# list, refcounts, copy-on-write, prefix sharing) is host-side policy in
+# ``launch.paging`` / ``launch.serve_lm``; the model layer only follows the
+# table it is handed.
+
+
+def gqa_paged_cache_init(cfg: ModelConfig, pool_pages: int, page_size: int,
+                         dtype=jnp.bfloat16):
+    shape = (pool_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_dtype == "int8":
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "ks": jnp.zeros(shape[:3] + (1,), jnp.bfloat16),
+                "vs": jnp.zeros(shape[:3] + (1,), jnp.bfloat16)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_paged_cache_axes(cfg: ModelConfig):
+    ax = (None, None, "kv_heads", None)
+    if cfg.kv_dtype == "int8":
+        return {"k": ax, "v": ax, "ks": ax, "vs": ax}
+    return {"k": ax, "v": ax}
+
+
+def paged_view(pool, table):
+    """Gather a pool [P, psz, ...] through table [B, n] -> [B, n*psz, ...].
+
+    The per-slot logical view decode/suffix attention runs against —
+    identical, row for row, to what a contiguous [B, T, ...] cache would
+    hold (unallocated table entries read page 0; those rows sit beyond
+    every validity/causality mask, so their values never contribute)."""
+    b, n = table.shape
+    rows = jnp.take(pool, table, axis=0, mode="clip")   # [B, n, psz, ...]
+    return rows.reshape((b, n * pool.shape[1]) + pool.shape[2:])
+
+
+def paged_scatter(pool, table, rows, row_idx, valid=None):
+    """Write rows [B, S, ...] at logical rows ``row_idx`` [B, S] through
+    the table. Invalid (right-pad) rows are routed to an out-of-range page
+    and dropped — pads must never reach a page another slot may own."""
+    p, psz = pool.shape[0], pool.shape[1]
+    b, s = row_idx.shape
+    page = jnp.take_along_axis(
+        table, jnp.clip(row_idx // psz, 0, table.shape[1] - 1), axis=1)
+    off = row_idx % psz
+    if valid is not None:
+        page = jnp.where(valid, page, p)                # OOB -> mode="drop"
+    flat = rows.reshape((b * s,) + rows.shape[2:]).astype(pool.dtype)
+    return pool.at[page.reshape(-1), off.reshape(-1)].set(flat, mode="drop")
+
+
+def _attend_causal_rows(q, k, v, q_pos, *, scale, rules=None,
+                        scores_dtype=None):
+    """Per-sequence causal attention for suffix prefill: q [B,S,H,D] rows
+    at absolute positions ``q_pos`` [B,S] against an assembled history
+    view k/v [B,T,H,*]. Mirrors ``_attend_prepped`` (same einsums, same
+    NEG_INF masking, same probability-boundary cast) so a 1-token suffix
+    reproduces cold prefill's last-row attention bit for bit when the
+    cached rows store exact values; the only change is the [B,S,T] mask
+    (per-sequence positions instead of one shared chunk offset)."""
+    b, s, h, d = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    rep = h // hk
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if rules is not None:
+        q = constrain(q, rules, "batch", None, "act_heads", None)
+        k = constrain(k, rules, "batch", None, "act_heads", None)
+        v = constrain(v, rules, "batch", None, "act_heads", None)
+    scores = jnp.einsum("bchd,bthd->bhct", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if rules is not None:
+        scores = constrain(scores, rules, "batch", "act_heads", None, None)
+    mask = jnp.arange(t)[None, None, :] <= q_pos[:, :, None]   # [B,S,T]
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    if scores_dtype is not None:
+        scores = scores.astype(scores_dtype)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhct,bthv->bchv", w.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    if rules is not None:
+        out = constrain(out, rules, "batch", None, "act_heads", None)
+    return out
+
+
 GQA_CACHE_AXES = {"k": ("batch", "kv_seq", "kv_heads", None),
                   "v": ("batch", "kv_seq", "kv_heads", None)}
 
@@ -301,11 +395,19 @@ def _decode_attend_q8(q, cache, k_valid, *, scale, rules=None):
 
 
 def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
-              lengths=None, mode: str = "float", rules=None):
+              lengths=None, mode: str = "float", rules=None, table=None,
+              history=False):
     """x: [B,S,d]. Train/prefill when cache is None or S>1 (writes cache
     at positions [0, lengths) — right-padded ragged prompts supported);
     decode (S==1) updates the rolling/linear cache at per-sequence
-    ``pos: [B]`` (scalars are broadcast)."""
+    ``pos: [B]`` (scalars are broadcast).
+
+    With ``table`` [B, n_pages] the cache leaves are paged pools
+    ([P, psz, ...]) and all reads/writes route through the table.
+    ``history=True`` is the suffix-prefill path for prefix-reuse hits:
+    ``positions`` [B,S] are absolute rows past an already-populated
+    history (shared pages), written through the table and attended via
+    the gathered per-slot view under a per-sequence causal mask."""
     dtype = jnp.dtype(cfg.dtype)
     b, s, d = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -322,6 +424,7 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
     k = rope(k, positions, theta=cfg.rope_theta)
 
     sdt = (jnp.bfloat16 if cfg.scores_dtype == "bfloat16" else None)
+    paged = table is not None and cache is not None
     new_cache = cache
     if cache is None:
         attn = chunked_attention(q, k, v, causal=True,
@@ -330,31 +433,67 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
                                  remat=cfg.remat != "none", rules=rules,
                                  blocking=cfg.attn_blocking,
                                  scores_dtype=sdt)
-    elif s > 1:  # prefill into cache
-        t = cache["k"].shape[1]
+    elif history:  # paged suffix prefill after a prefix-cache hit
+        assert paged and not cfg.sliding_window
+        t = table.shape[1] * cache["k"].shape[1]
+        ln = (jnp.full((b,), s, jnp.int32) if lengths is None
+              else as_pos_vector(lengths, b))
+        row_idx = positions.astype(jnp.int32)               # [B,S] absolute
+        valid = (jnp.arange(s)[None, :] < ln[:, None]) & (row_idx < t)
+        if "ks" in cache:
+            kq, ksc = _q8_kv(k)
+            vq, vsc = _q8_kv(v)
+            new_cache = {
+                "k": paged_scatter(cache["k"], table, kq, row_idx, valid),
+                "v": paged_scatter(cache["v"], table, vq, row_idx, valid),
+                "ks": paged_scatter(cache["ks"], table, ksc, row_idx, valid),
+                "vs": paged_scatter(cache["vs"], table, vsc, row_idx, valid),
+            }
+        else:
+            new_cache = {
+                "k": paged_scatter(cache["k"], table, k, row_idx, valid),
+                "v": paged_scatter(cache["v"], table, v, row_idx, valid),
+            }
+        view = {kk: paged_view(vv, table) for kk, vv in new_cache.items()}
+        kf = view["k"].astype(q.dtype)
+        vf = view["v"].astype(q.dtype)
+        if "ks" in view:
+            kf = kf * view["ks"].astype(q.dtype)
+            vf = vf * view["vs"].astype(q.dtype)
+        attn = _attend_causal_rows(q, kf, vf, row_idx, scale=hd ** -0.5,
+                                   rules=rules, scores_dtype=sdt)
+    elif s > 1:  # prefill into cache (cold: no history in the cache yet)
+        psz = cache["k"].shape[1]
+        t = table.shape[1] * psz if paged else cache["k"].shape[1]
+        ln = (jnp.full((b,), s, jnp.int32) if lengths is None
+              else as_pos_vector(lengths, b))
         if cfg.sliding_window:
             # ring layout: position p at slot p % t, per-sequence lengths
-            ln = (jnp.full((b,), s, jnp.int32) if lengths is None
-                  else as_pos_vector(lengths, b))
             kw, vw = _ring_rows(k, ln, t), _ring_rows(v, ln, t)
         else:
             kw, vw = k, v
         if "ks" in cache:
             kq, ksc = _q8_kv(kw)
             vq, vsc = _q8_kv(vw)
-            new_cache = {
-                "k": lax.dynamic_update_slice(cache["k"], kq, (0, 0, 0, 0)),
-                "v": lax.dynamic_update_slice(cache["v"], vq, (0, 0, 0, 0)),
-                "ks": lax.dynamic_update_slice(cache["ks"], ksc, (0, 0, 0, 0)),
-                "vs": lax.dynamic_update_slice(cache["vs"], vsc, (0, 0, 0, 0)),
-            }
+            leaves = {"k": kq, "v": vq, "ks": ksc, "vs": vsc}
         else:
-            new_cache = {
-                "k": lax.dynamic_update_slice(cache["k"], kw.astype(cache["k"].dtype),
-                                              (0, 0, 0, 0)),
-                "v": lax.dynamic_update_slice(cache["v"], vw.astype(cache["v"].dtype),
-                                              (0, 0, 0, 0)),
-            }
+            leaves = {"k": kw, "v": vw}
+        if paged:
+            sw = kw.shape[1]       # t for ring layout, s for linear
+            row_idx = jnp.broadcast_to(
+                jnp.arange(sw, dtype=jnp.int32)[None, :], (b, sw))
+            # ring writes all t ring rows (never-written slots hold zeros,
+            # and every ring page is privately allocated); linear drops
+            # right-pad rows so they cannot land in shareable pages.
+            valid = (None if cfg.sliding_window
+                     else (row_idx < ln[:, None]) & (row_idx < t))
+            new_cache = {kk: paged_scatter(cache[kk], table, vv, row_idx,
+                                           valid)
+                         for kk, vv in leaves.items()}
+        else:
+            new_cache = {kk: lax.dynamic_update_slice(
+                cache[kk], vv.astype(cache[kk].dtype),
+                (0,) * cache[kk].ndim) for kk, vv in leaves.items()}
         attn = chunked_attention(q, k, v, causal=True,
                                  window=cfg.sliding_window,
                                  q_chunk=cfg.q_chunk,
@@ -362,7 +501,8 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
                                  blocking=cfg.attn_blocking,
                                  scores_dtype=sdt)
     else:  # decode, S == 1, per-sequence positions
-        t = cache["k"].shape[1]
+        t = (table.shape[1] * cache["k"].shape[1] if paged
+             else cache["k"].shape[1])
         pos = as_pos_vector(pos, b)
         if cfg.sliding_window:
             slot = pos % t           # rolling (ring) cache
@@ -373,18 +513,24 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
         if "ks" in cache:            # quantized store
             kq, ksc = _q8_kv(k)
             vq, vsc = _q8_kv(v)
-            new_cache = {
-                "k": _scatter_rows(cache["k"], kq, slot),
-                "v": _scatter_rows(cache["v"], vq, slot),
-                "ks": _scatter_rows(cache["ks"], ksc, slot),
-                "vs": _scatter_rows(cache["vs"], vsc, slot),
-            }
+            leaves = {"k": kq, "v": vq, "ks": ksc, "vs": vsc}
         else:
-            new_cache = {"k": _scatter_rows(cache["k"], k, slot),
-                         "v": _scatter_rows(cache["v"], v, slot)}
+            leaves = {"k": k, "v": v}
+        if paged:
+            # vacant slots carry all-pad table rows, so their writes drop
+            # instead of landing in pages another sequence owns.
+            new_cache = {kk: paged_scatter(cache[kk], table, vv,
+                                           slot[:, None])
+                         for kk, vv in leaves.items()}
+            attend = {kk: paged_view(vv, table)
+                      for kk, vv in new_cache.items()}
+        else:
+            new_cache = {kk: _scatter_rows(cache[kk], vv, slot)
+                         for kk, vv in leaves.items()}
+            attend = new_cache
         # rolling-cache entries are unordered but all within the window,
         # so the validity mask alone is the correct attention mask.
-        attn = _decode_attend_q8(q, new_cache, k_valid, scale=hd ** -0.5,
+        attn = _decode_attend_q8(q, attend, k_valid, scale=hd ** -0.5,
                                  rules=rules)
     attn = attn.reshape(b, s, h * hd).astype(dtype)
     y = dense_apply(p["wo"], attn, ppac=cfg.ppac, mode=mode, dtype=dtype)
@@ -429,8 +575,21 @@ MLA_CACHE_AXES = {"kv_c": ("batch", "kv_seq", None),
                   "k_rope": ("batch", "kv_seq", None)}
 
 
+def mla_paged_cache_init(cfg: ModelConfig, pool_pages: int, page_size: int,
+                         dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {"kv_c": jnp.zeros((pool_pages, page_size, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((pool_pages, page_size, m.qk_rope_head_dim),
+                                dtype)}
+
+
+MLA_PAGED_CACHE_AXES = {"kv_c": (None, None, None),
+                        "k_rope": (None, None, None)}
+
+
 def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
-              lengths=None, mode: str = "float", rules=None):
+              lengths=None, mode: str = "float", rules=None, table=None,
+              history=False):
     m = cfg.mla
     dtype = jnp.dtype(cfg.dtype)
     b, s, d = x.shape
@@ -448,7 +607,31 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
     q_n, q_r = q[..., :dn], q[..., dn:]
     q_r = rope(q_r, positions, theta=cfg.rope_theta)
 
-    if cache is None or s > 1:
+    paged = table is not None and cache is not None
+    sdt = (jnp.bfloat16 if cfg.scores_dtype == "bfloat16" else None)
+    if history:
+        # Paged suffix prefill after a prefix-cache hit: scatter the
+        # compressed suffix through the table, then regenerate K/V over
+        # the gathered per-slot view (history pages included).
+        assert paged
+        t = table.shape[1] * cache["kv_c"].shape[1]
+        ln = (jnp.full((b,), s, jnp.int32) if lengths is None
+              else as_pos_vector(lengths, b))
+        row_idx = positions.astype(jnp.int32)               # [B,S] absolute
+        valid = (jnp.arange(s)[None, :] < ln[:, None]) & (row_idx < t)
+        ckp = paged_scatter(cache["kv_c"], table, kv_c, row_idx, valid)
+        crp = paged_scatter(cache["k_rope"], table, k_r, row_idx, valid)
+        new_cache = {"kv_c": ckp, "k_rope": crp}
+        ckv = paged_view(ckp, table).astype(dtype)          # [B,T,lora]
+        crv = paged_view(crp, table).astype(dtype)          # [B,T,dr]
+        k_n = dense_apply(p["w_uk"], ckv, dtype=dtype).reshape(b, t, h, dn)
+        vv = dense_apply(p["w_uv"], ckv, dtype=dtype).reshape(b, t, h, dv)
+        k_full = jnp.concatenate(
+            [k_n, jnp.broadcast_to(crv[:, :, None, :], (b, t, h, dr))], -1)
+        q_full = jnp.concatenate([q_n, q_r], -1)
+        attn = _attend_causal_rows(q_full, k_full, vv, row_idx, scale=scale,
+                                   rules=rules, scores_dtype=sdt)
+    elif cache is None or s > 1:
         # Non-absorbed (train/prefill) path: materialize K/V.
         k_n = dense_apply(p["w_uk"], kv_c, dtype=dtype).reshape(b, s, h, dn)
         v = dense_apply(p["w_uv"], kv_c, dtype=dtype).reshape(b, s, h, dv)
@@ -459,11 +642,22 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
                                  q_chunk=cfg.q_chunk, scale=scale,
                                  remat=cfg.remat != "none", rules=rules,
                                  blocking=cfg.attn_blocking,
-                                 scores_dtype=(jnp.bfloat16
-                                               if cfg.scores_dtype == "bfloat16"
-                                               else None))
+                                 scores_dtype=sdt)
         new_cache = cache
-        if cache is not None:
+        if paged:
+            t = table.shape[1] * cache["kv_c"].shape[1]
+            ln = (jnp.full((b,), s, jnp.int32) if lengths is None
+                  else as_pos_vector(lengths, b))
+            row_idx = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+            valid = (row_idx < ln[:, None]) & (row_idx < t)
+            new_cache = {
+                "kv_c": paged_scatter(cache["kv_c"], table, kv_c, row_idx,
+                                      valid),
+                "k_rope": paged_scatter(cache["k_rope"], table, k_r,
+                                        row_idx, valid),
+            }
+        elif cache is not None:
             new_cache = {
                 "kv_c": lax.dynamic_update_slice(
                     cache["kv_c"], kv_c.astype(cache["kv_c"].dtype), (0, 0, 0)),
@@ -474,9 +668,16 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
         # Absorbed decode: score against the compressed cache directly,
         # at per-sequence write positions.
         pos = as_pos_vector(pos, b)
-        ck = _scatter_rows(cache["kv_c"], kv_c, pos)
-        cr = _scatter_rows(cache["k_rope"], k_r, pos)
-        new_cache = {"kv_c": ck, "k_rope": cr}
+        if paged:
+            ckp = paged_scatter(cache["kv_c"], table, kv_c, pos[:, None])
+            crp = paged_scatter(cache["k_rope"], table, k_r, pos[:, None])
+            new_cache = {"kv_c": ckp, "k_rope": crp}
+            ck = paged_view(ckp, table)
+            cr = paged_view(crp, table)
+        else:
+            ck = _scatter_rows(cache["kv_c"], kv_c, pos)
+            cr = _scatter_rows(cache["k_rope"], k_r, pos)
+            new_cache = {"kv_c": ck, "k_rope": cr}
         t = ck.shape[1]
         w_uk = p["w_uk"]["w"].astype(dtype).reshape(m.kv_lora_rank, h, dn)
         # absorb: q' = q_n @ w_uk^T  -> [B,1,H,lora]

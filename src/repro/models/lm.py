@@ -114,11 +114,13 @@ def _dense_block_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
 
 
 def _dense_block_apply(p, x, cfg, *, positions, cache=None, pos=None,
-                       lengths=None, mode="float", rules=None):
+                       lengths=None, mode="float", rules=None, table=None,
+                       history=False):
     h = rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
     att, new_cache = _attn_apply(p["attn"], h, cfg, positions=positions,
                                  cache=cache, pos=pos, lengths=lengths,
-                                 mode=mode, rules=rules)
+                                 mode=mode, rules=rules, table=table,
+                                 history=history)
     x = x + att
     x = constrain(x, rules, "batch", "seq", None) if rules else x
     h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
@@ -137,11 +139,13 @@ def _moe_block_init(key, cfg: ModelConfig):
 
 
 def _moe_block_apply(p, x, cfg, *, positions, cache=None, pos=None,
-                     lengths=None, mode="float", rules=None):
+                     lengths=None, mode="float", rules=None, table=None,
+                     history=False):
     h = rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
     att, new_cache = _attn_apply(p["attn"], h, cfg, positions=positions,
                                  cache=cache, pos=pos, lengths=lengths,
-                                 mode=mode, rules=rules)
+                                 mode=mode, rules=rules, table=table,
+                                 history=history)
     x = x + att
     x = constrain(x, rules, "batch", "seq", None) if rules else x
     h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
@@ -157,7 +161,8 @@ def _ssm_block_init(key, cfg: ModelConfig):
 
 
 def _ssm_block_apply(p, x, cfg, *, positions=None, cache=None, pos=None,
-                     lengths=None, mode="float", rules=None):
+                     lengths=None, mode="float", rules=None, table=None,
+                     history=False):
     h = rmsnorm_apply(p["ln"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
     y, new_cache = ssm_mod.mamba2_apply(p["mamba"], h, cfg, cache=cache,
                                         mode=mode)
@@ -227,9 +232,10 @@ def _embed_inputs(params, cfg: ModelConfig, batch, rules=None):
 
 def _run_layers(params, cfg: ModelConfig, h, *, positions, caches=None,
                 pos=None, lengths=None, mode="float", rules=None,
-                layer_offset=0):
+                layer_offset=0, table=None, history=False):
     """Scan (or unroll, for hybrid) the stacked blocks; returns
-    (h, new_caches, aux)."""
+    (h, new_caches, aux). ``table`` (paged caches) is shared by every
+    layer, so it rides as a closure capture, not a scan input."""
     _, bapply = _block_fns(cfg)
     aux = AUX0()
 
@@ -241,7 +247,8 @@ def _run_layers(params, cfg: ModelConfig, h, *, positions, caches=None,
         else:
             lp, lc = xs
         hh, nc, a2 = bapply(lp, hh, cfg, positions=positions, cache=lc,
-                            pos=pos, lengths=lengths, mode=mode, rules=rules)
+                            pos=pos, lengths=lengths, mode=mode, rules=rules,
+                            table=table, history=history)
         ax = {k: ax[k] + a2[k] for k in ax}
         return (hh, ax), (nc if caches is not None else 0)
 
@@ -260,11 +267,13 @@ def _run_layers(params, cfg: ModelConfig, h, *, positions, caches=None,
         def shared_fn(sp, hh, sc):
             return _dense_block_apply(sp, hh, cfg, positions=positions,
                                       cache=sc, pos=pos, lengths=lengths,
-                                      mode=mode, rules=rules)
+                                      mode=mode, rules=rules, table=table,
+                                      history=history)
 
         def block_fn(lp, hh, lc):
             return bapply(lp, hh, cfg, positions=positions, cache=lc,
-                          pos=pos, lengths=lengths, mode=mode, rules=rules)
+                          pos=pos, lengths=lengths, mode=mode, rules=rules,
+                          table=table, history=history)
 
         if cfg.remat != "none":
             shared_fn = jax.checkpoint(shared_fn)
@@ -345,14 +354,53 @@ def _layer_cache_init(cfg: ModelConfig, batch: int, max_seq: int, dtype):
             attn_mod.gqa_cache_axes(cfg))
 
 
+def paged_extent(cfg: ModelConfig, max_seq: int) -> int:
+    """Logical per-slot token extent a paged table must cover (the
+    sliding window bounds it for ring caches)."""
+    if cfg.sliding_window:
+        return min(max_seq, cfg.sliding_window)
+    return max_seq
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
-               dtype=jnp.bfloat16):
+               dtype=jnp.bfloat16, *, page_size: Optional[int] = None,
+               pool_pages: Optional[int] = None):
     """Returns (cache, cache_axes). Layer-stacked; hybrid adds shared-attn
-    caches (one per shared-block application)."""
-    single, axes1 = _layer_cache_init(cfg, batch, max_seq, dtype)
-    n_scan = cfg.n_layers
-    if cfg.moe and cfg.moe.first_dense_layers:
-        n_scan -= cfg.moe.first_dense_layers
+    caches (one per shared-block application).
+
+    With ``page_size`` the KV leaves become paged pools: every layer
+    stack holds ``[n_layers, pool_pages, page_size, ...]`` and one shared
+    ``table: [batch, extent/page_size]`` int32 maps each slot's logical
+    pages to physical ones (a single page id addresses the same page in
+    every stack). Fresh tables are filled with the out-of-range sentinel
+    ``pool_pages`` — unmapped reads clip (and sit beyond every attention
+    mask), unmapped writes drop. ``pool_pages`` defaults to full backing
+    (batch * pages_per_slot); smaller pools oversubscribe the slots and
+    rely on the server's page allocator."""
+    first_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+    n_scan = cfg.n_layers - first_dense
+    paged = page_size is not None
+    if paged:
+        if cfg.family in ("ssm", "hybrid"):
+            raise ValueError("paged caches are token-indexed; SSM/hybrid "
+                             "state caches have no token axis to page")
+        extent = paged_extent(cfg, max_seq)
+        if extent % page_size:
+            raise ValueError(f"page_size={page_size} must divide the "
+                             f"logical cache extent {extent}")
+        n_pages = extent // page_size
+        if pool_pages is None:
+            pool_pages = batch * n_pages
+        if cfg.mla:
+            single = attn_mod.mla_paged_cache_init(cfg, pool_pages,
+                                                   page_size, dtype)
+            axes1 = attn_mod.MLA_PAGED_CACHE_AXES
+        else:
+            single = attn_mod.gqa_paged_cache_init(cfg, pool_pages,
+                                                   page_size, dtype)
+            axes1 = attn_mod.gqa_paged_cache_axes(cfg)
+    else:
+        single, axes1 = _layer_cache_init(cfg, batch, max_seq, dtype)
 
     def stack(t, n):
         return jax.tree.map(lambda x: jnp.zeros((n,) + x.shape, x.dtype), t)
@@ -360,12 +408,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     cache = {"layers": stack(single, n_scan)}
     axes = {"layers": jax.tree.map(
         lambda ax: ("layers",) + tuple(ax), axes1, is_leaf=_is_axes)}
-    if cfg.moe and cfg.moe.first_dense_layers:
-        dsingle = attn_mod.mla_cache_init(cfg, batch, max_seq, dtype) \
-            if cfg.mla else attn_mod.gqa_cache_init(cfg, batch, max_seq, dtype)
-        daxes = attn_mod.MLA_CACHE_AXES if cfg.mla \
-            else attn_mod.gqa_cache_axes(cfg)
-        cache["dense_layers"] = stack(dsingle, cfg.moe.first_dense_layers)
+    if first_dense:
+        if paged:
+            dsingle, daxes = single, axes1
+        else:
+            dsingle = attn_mod.mla_cache_init(cfg, batch, max_seq, dtype) \
+                if cfg.mla else attn_mod.gqa_cache_init(cfg, batch,
+                                                        max_seq, dtype)
+            daxes = attn_mod.MLA_CACHE_AXES if cfg.mla \
+                else attn_mod.gqa_cache_axes(cfg)
+        cache["dense_layers"] = stack(dsingle, first_dense)
         axes["dense_layers"] = jax.tree.map(
             lambda ax: ("layers",) + tuple(ax), daxes, is_leaf=_is_axes)
     if cfg.family == "hybrid":
@@ -376,6 +428,9 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
         axes["shared"] = jax.tree.map(
             lambda ax: ("layers",) + tuple(ax), attn_mod.GQA_CACHE_AXES,
             is_leaf=_is_axes)
+    if paged:
+        cache["table"] = jnp.full((batch, n_pages), pool_pages, jnp.int32)
+        axes["table"] = ("batch", None)
     # per-sequence decode positions: mixed-progress batches (continuous
     # batching) decode with one fused step
     cache["pos"] = jnp.zeros((batch,), jnp.int32)
@@ -384,12 +439,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
 
 
 def _split_pos(cache):
-    c = {k: v for k, v in cache.items() if k != "pos"}
-    return c, cache["pos"]
+    c = {k: v for k, v in cache.items() if k not in ("pos", "table")}
+    return c, cache["pos"], cache.get("table")
 
 
 def prefill(params, cfg: ModelConfig, batch, cache, *, lengths=None,
-            mode: str = "float", rules: Optional[ShardingRules] = None):
+            mode: str = "float", rules: Optional[ShardingRules] = None,
+            start=None, history: bool = False, table=None, slot_ids=None):
     """Run the full prompt, filling caches. Returns (logits, cache).
 
     ``lengths: [B]`` (optional) — per-sequence prompt lengths for
@@ -398,11 +454,29 @@ def prefill(params, cfg: ModelConfig, batch, cache, *, lengths=None,
     its own length, and attention-family caches mask the padded tail
     (causal attention makes right-pad bit-exact; SSM state accumulation
     has no position mask, so ragged prefill is attention-only — SSM
-    prompts must arrive unpadded)."""
-    caches, _ = _split_pos(cache)
+    prompts must arrive unpadded).
+
+    Paged caches (a ``table`` leaf) route all KV writes through the page
+    table. ``history=True`` is suffix prefill after a prefix-cache hit:
+    ``batch['tokens']`` holds only the un-cached suffix, ``start: [B]``
+    its absolute offset (shared pages already populate rows [0, start)),
+    and attention runs over the full gathered history.
+
+    ``table: [B, n_pages]`` (optional) overrides the cache's own table —
+    the group-prefill path prefills B admitted sequences straight into
+    the shared pools through their slots' table rows while the resident
+    cache keeps all slots' rows; ``slot_ids: [B]`` then scatters the
+    end positions into the resident ``pos`` vector."""
+    caches, pos0, tbl = _split_pos(cache)
+    if table is None:
+        table = tbl
     h = _embed_inputs(params, cfg, batch, rules)
     b, s, _ = h.shape
-    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if start is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    else:
+        start = jnp.asarray(start, jnp.int32)
+        positions = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
     ln = (jnp.full((b,), s, jnp.int32) if lengths is None
           else jnp.asarray(lengths, jnp.int32))
     aux = AUX0()
@@ -414,13 +488,15 @@ def prefill(params, cfg: ModelConfig, batch, cache, *, lengths=None,
             lc = jax.tree.map(lambda t: t[i], caches["dense_layers"])
             h, nc, _ = _dense_block_apply(lp, h, cfg, positions=positions,
                                           cache=lc, lengths=ln, mode=mode,
-                                          rules=rules)
+                                          rules=rules, table=table,
+                                          history=history)
             ncs.append(nc)
         new["dense_layers"] = jax.tree.map(lambda *t: jnp.stack(t), *ncs)
     h, ncaches, _ = _run_layers(params, cfg, h, positions=positions,
                                 caches={k: caches[k] for k in ("layers", "shared")
                                         if k in caches},
-                                lengths=ln, mode=mode, rules=rules)
+                                lengths=ln, mode=mode, rules=rules,
+                                table=table, history=history)
     new.update(ncaches)
     h = rmsnorm_apply(params["final_norm"], h, eps=cfg.norm_eps,
                       dtype=jnp.dtype(cfg.dtype))
@@ -431,7 +507,12 @@ def prefill(params, cfg: ModelConfig, batch, cache, *, lengths=None,
     else:
         logits = dense_apply(params["lm_head"], h_last,
                              dtype=jnp.dtype(cfg.dtype)).astype(jnp.float32)
-    new["pos"] = ln
+    end = ln if start is None else start + ln
+    if slot_ids is None:
+        new["pos"] = end
+    else:
+        new["pos"] = pos0.at[jnp.asarray(slot_ids, jnp.int32)].set(
+            end, mode="drop")
     return logits, new
 
 
@@ -440,7 +521,7 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, *,
     """One decode step: tokens [B,1] -> (logits [B,1,V], cache).
     ``cache['pos']`` is a per-sequence [B] vector (mixed-progress batches
     from the continuous-batching server decode in one fused step)."""
-    caches, pos = _split_pos(cache)
+    caches, pos, table = _split_pos(cache)
     h = embed_apply(params["embed"], tokens, dtype=jnp.dtype(cfg.dtype))
     b = h.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
@@ -452,13 +533,14 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, *,
             lp = jax.tree.map(lambda t: t[i], params["dense_layers"])
             lc = jax.tree.map(lambda t: t[i], caches["dense_layers"])
             h, nc, _ = _moe_or_dense_decode(lp, h, cfg, positions, lc, pos,
-                                            mode, rules, dense=True)
+                                            mode, rules, dense=True,
+                                            table=table)
             ncs.append(nc)
         new["dense_layers"] = jax.tree.map(lambda *t: jnp.stack(t), *ncs)
     h, ncaches, _ = _run_layers(params, cfg, h, positions=positions,
                                 caches={k: caches[k] for k in ("layers", "shared")
                                         if k in caches},
-                                pos=pos, mode=mode, rules=rules)
+                                pos=pos, mode=mode, rules=rules, table=table)
     new.update(ncaches)
     h = rmsnorm_apply(params["final_norm"], h, eps=cfg.norm_eps,
                       dtype=jnp.dtype(cfg.dtype))
@@ -472,9 +554,10 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, *,
 
 
 def _moe_or_dense_decode(lp, h, cfg, positions, lc, pos, mode, rules, *,
-                         dense: bool):
+                         dense: bool, table=None):
     if dense:
         return _dense_block_apply(lp, h, cfg, positions=positions, cache=lc,
-                                  pos=pos, mode=mode, rules=rules)
+                                  pos=pos, mode=mode, rules=rules,
+                                  table=table)
     return _moe_block_apply(lp, h, cfg, positions=positions, cache=lc,
-                            pos=pos, mode=mode, rules=rules)
+                            pos=pos, mode=mode, rules=rules, table=table)

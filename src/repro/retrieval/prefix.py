@@ -1,0 +1,129 @@
+"""CAM-matched prefix reuse: page-span keys looked up associatively.
+
+The paper's §I pitch is one fabric serving NN inference *and* hash
+lookups; this module is that composition inside the LM server. Every
+full page of an admitted prompt hashes its token span into a 128-bit
+*chained* key (the hash folds in the previous page's key, so a key
+matches only when the entire prefix up to and including that page is
+identical — matching page i alone is impossible without matching pages
+0..i-1). Admission packs the prompt's page keys into uint32 codes and
+issues ONE batched exact CAM match (`CAMIndex.match`, the mode-III-A
+kernel, recorded in the obs ledger like every other launch); the longest
+matched run maps the new slot's table entries straight onto resident
+physical pages and their prefill is skipped.
+
+The index holds one pool reference per registered page, so hot prefixes
+survive the retirement of the request that created them; when the pool
+runs dry the server evicts *idle* registrations (refcount == 1, LRU) to
+recycle their pages.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.ppac import PPACConfig
+from .index import CAMIndex
+
+KEY_BITS = 128  # blake2b digest_size=16 -> 4 packed uint32 words
+
+
+def page_keys(tokens: np.ndarray, page_size: int) -> List[bytes]:
+    """Chained 128-bit keys, one per FULL page of the token span."""
+    tokens = np.asarray(tokens, np.int32)
+    keys, prev = [], b""
+    for i in range(len(tokens) // page_size):
+        span = tokens[i * page_size:(i + 1) * page_size]
+        keys.append(hashlib.blake2b(prev + span.tobytes(),
+                                    digest_size=KEY_BITS // 8).digest())
+        prev = keys[-1]
+    return keys
+
+
+def _packed(key: bytes) -> np.ndarray:
+    return np.frombuffer(key, dtype="<u4")
+
+
+class PagePrefixIndex:
+    """key <-> physical page maps over an exact-match CAMIndex."""
+
+    def __init__(self, page_size: int, *, backend: str = "auto",
+                 config: Optional[PPACConfig] = None,
+                 min_capacity: int = 64):
+        self.page_size = page_size
+        self.index = CAMIndex(KEY_BITS, backend=backend, config=config,
+                              min_capacity=min_capacity)
+        self._row_to_page: Dict[int, int] = {}
+        self._page_meta: Dict[int, Tuple[int, bytes]] = {}  # page -> (row, key)
+        self._row_of_key: Dict[bytes, int] = {}
+        self._lru: "OrderedDict[int, bool]" = OrderedDict()
+        self.lookups = 0
+        self.pages_hit = 0
+        self.pages_probed = 0
+
+    @property
+    def registered_pages(self) -> int:
+        return len(self._page_meta)
+
+    def keys_for(self, tokens: np.ndarray) -> List[bytes]:
+        return page_keys(tokens, self.page_size)
+
+    def lookup(self, keys: List[bytes]) -> List[int]:
+        """Longest resident run matching the chained keys -> page ids.
+
+        One batched CAM launch for all of a prompt's page keys; the
+        chain construction means a miss at page i ends the usable run
+        regardless of later matches."""
+        self.lookups += 1
+        self.pages_probed += len(keys)
+        if not keys or self.index.size == 0:
+            return []
+        q = np.stack([_packed(k) for k in keys])
+        rows = self.index.match_ids(queries_packed=q)
+        pages: List[int] = []
+        for row_ids in rows:
+            page = None
+            for rid in row_ids:  # exact 128-bit match: ≥1 live row is a hit
+                page = self._row_to_page.get(int(rid))
+                if page is not None:
+                    break
+            if page is None:
+                break
+            pages.append(page)
+        for p in pages:
+            self._lru.move_to_end(p)
+        self.pages_hit += len(pages)
+        return pages
+
+    def register(self, key: bytes, page: int) -> bool:
+        """Map ``key`` -> ``page``. Refuses duplicates (key already
+        resident under another page, or page already registered) so the
+        caller never holds a second reference for the same content."""
+        if key in self._row_of_key or page in self._page_meta:
+            return False
+        row = int(self.index.add_packed(_packed(key)[None, :])[0])
+        self._row_to_page[row] = page
+        self._page_meta[page] = (row, key)
+        self._row_of_key[key] = row
+        self._lru[page] = True
+        return True
+
+    def evict_page(self, page: int) -> bool:
+        """Drop a page's registration (CAM row tombstoned, maps cleared)."""
+        meta = self._page_meta.pop(page, None)
+        if meta is None:
+            return False
+        row, key = meta
+        self.index.delete([row])
+        self._row_to_page.pop(row, None)
+        self._row_of_key.pop(key, None)
+        self._lru.pop(page, None)
+        return True
+
+    def idle_pages(self, refcount: np.ndarray) -> List[int]:
+        """Registered pages held ONLY by this index (refcount == 1),
+        least-recently-matched first — the eviction candidates."""
+        return [p for p in self._lru if refcount[p] == 1]

@@ -147,6 +147,56 @@ def make_decode_select_step(cfg: ModelConfig,
                                  donate)
 
 
+@_maybe_cached
+def _prefill_select_cached(cfg, rules, mode, temperature, top_k, paged,
+                           history, donate):
+    if not paged:
+        def step(params, tokens, lengths, cache, key):
+            logits, cache = lm.prefill(params, cfg, {"tokens": tokens},
+                                       cache, lengths=lengths, mode=mode,
+                                       rules=rules)
+            tok = sample_tokens(logits[:, -1], key, temperature=temperature,
+                                top_k=top_k)
+            return tok, cache
+        return jax.jit(step, donate_argnums=(3,) if donate else ())
+
+    def step(params, tokens, lengths, starts, slot_ids, table_rows, cache,
+             key):
+        logits, cache = lm.prefill(
+            params, cfg, {"tokens": tokens}, cache, lengths=lengths,
+            mode=mode, rules=rules, start=starts if history else None,
+            history=history, table=table_rows, slot_ids=slot_ids)
+        tok = sample_tokens(logits[:, -1], key, temperature=temperature,
+                            top_k=top_k)
+        return tok, cache
+    return jax.jit(step, donate_argnums=(6,) if donate else ())
+
+
+def make_prefill_select_step(cfg: ModelConfig,
+                             rules: Optional[ShardingRules] = None,
+                             mode: str = "float", *,
+                             temperature: float = 0.0, top_k: int = 0,
+                             paged: bool = False, history: bool = False,
+                             donate: bool = True):
+    """Fused prefill + first-token selection, cache donated.
+
+    Contiguous (``paged=False``):
+        (params, tokens, lengths, cache, key) -> (tok0 [B], cache)
+    prefills a scratch cache whose rows the server copies into resident
+    slots.
+
+    Paged (``paged=True``): the cache IS the resident pool pytree —
+        (params, tokens, lengths, starts, slot_ids, table_rows, cache,
+         key) -> (tok0 [B], cache)
+    writes the admitted group's KV straight through ``table_rows``
+    [B, n_pages] into the shared pools (no scratch cache, no copy) and
+    scatters end positions at ``slot_ids``. ``history=True`` compiles
+    the suffix variant for prefix-cache hits: ``tokens`` hold only the
+    un-cached suffix and ``starts`` its absolute offsets."""
+    return _prefill_select_cached(cfg, rules, mode, temperature, top_k,
+                                  paged, history, donate)
+
+
 def greedy_generate(params, cfg: ModelConfig, batch, *, steps: int,
                     max_seq: int, mode: str = "float"):
     """Reference per-step generation loop (prefill + greedy decode).

@@ -155,6 +155,37 @@ def test_prefill_step_hlo_donates_cache():
     _assert_cache_donated(txt, cache, skip=("pos",))
 
 
+@pytest.mark.parametrize("kv_dtype", ["bfloat16", "int8"])
+def test_paged_decode_step_hlo_donates_cache(kv_dtype):
+    """The donation contract must survive the paged layout: pool leaves
+    ([pool_pages, page_size, ...]) update in place and the block table
+    rides through aliased, never copied."""
+    cfg = dataclasses.replace(load_arch("stablelm_12b").smoke(),
+                              kv_dtype=kv_dtype)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cache, _ = lm.init_cache(cfg, 2, 64, page_size=8)
+    dec = make_decode_step(cfg)
+    txt = dec.lower(params, jnp.ones((2, 1), jnp.int32), cache).as_text()
+    _assert_cache_donated(txt, cache)
+
+
+def test_paged_prefill_select_hlo_donates_cache():
+    """Paged prefill writes through per-request table rows straight into
+    the donated resident pools — no scratch cache, no repack copy."""
+    from repro.serve.step import make_prefill_select_step
+    cfg = load_arch("stablelm_12b").smoke()
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cache, _ = lm.init_cache(cfg, 2, 64, page_size=8)
+    n_pages = cache["table"].shape[1]
+    pre = make_prefill_select_step(cfg, paged=True)
+    txt = pre.lower(params, jnp.ones((1, 8), jnp.int32),
+                    jnp.ones((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
+                    jnp.zeros((1,), jnp.int32),
+                    jnp.zeros((1, n_pages), jnp.int32), cache,
+                    jax.random.PRNGKey(0)).as_text()
+    _assert_cache_donated(txt, cache)
+
+
 def test_undonated_decode_keeps_inputs_alive():
     """Sanity for the invariant: with donate=False the cache argument has
     no aliasing contract (what the donated path deletes)."""

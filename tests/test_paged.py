@@ -1,0 +1,234 @@
+"""Paged KV cache: pool invariants (refcount conservation, COW,
+eviction, backpressure), prefix-hit parity with cold prefill, and the
+serving-loop correctness fixes riding along (submit boundary, latency
+formatting, bucket overflow)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import load_arch
+from repro.launch.paging import PagePool
+from repro.launch.serve_lm import LMServer, Request, fmt_latency, run_and_report
+from repro.models import lm
+from repro.retrieval.prefix import PagePrefixIndex, page_keys
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = dataclasses.replace(load_arch("smollm_360m").smoke(),
+                              dtype="float32")
+    params, _ = lm.init(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def _reqs(cfg, prompts, max_new=5, **kw):
+    return [Request(i, np.asarray(p, np.int32), max_new, **kw)
+            for i, p in enumerate(prompts)]
+
+
+def _serve(cfg, params, prompts, max_new=5, **kw):
+    server = LMServer(cfg, params, slots=2, max_seq=64, paged=True,
+                      page_size=8, cache_dtype=jnp.float32, **kw)
+    for r in _reqs(cfg, prompts, max_new):
+        server.submit(r)
+    done = server.run()
+    return {r.rid: r.out for r in done}, server
+
+
+# -- pool unit invariants -----------------------------------------------------
+
+def test_page_pool_refcount_conservation():
+    pool = PagePool(8)
+    a = pool.alloc(3)
+    b = pool.alloc(2)
+    assert pool.used_pages == 5 and pool.free_pages == 3
+    pool.incref(a[:2])  # share two pages
+    assert pool.refcount.sum() == 7
+    assert pool.decref(a) == [a[2]]          # shared pages stay resident
+    assert pool.refcount.sum() == 4
+    assert sorted(pool.decref(a[:2] + b)) == sorted(a[:2] + b)
+    assert pool.free_pages == 8 and pool.refcount.sum() == 0
+    assert pool.alloc(9) is None             # over-ask: None, not a crash
+    assert pool.alloc(8) is not None
+
+
+def test_page_keys_chain_binds_whole_prefix():
+    """key i commits to pages 0..i: equal spans at different offsets or
+    behind different prefixes must NOT collide."""
+    t = np.arange(32, dtype=np.int32)
+    keys = page_keys(t, 8)
+    assert len(keys) == 4 and len(set(keys)) == 4
+    # same page-1 content behind a different page 0 -> different key
+    t2 = t.copy()
+    t2[0] += 1
+    assert page_keys(t2, 8)[1] != keys[1]
+    assert page_keys(t[:15], 8) == keys[:1]  # partial page contributes none
+
+
+def test_prefix_index_register_lookup_evict():
+    idx = PagePrefixIndex(4)
+    toks = np.arange(12, dtype=np.int32)
+    keys = idx.keys_for(toks)
+    assert idx.lookup(keys) == []
+    assert idx.register(keys[0], 7) and idx.register(keys[1], 3)
+    assert not idx.register(keys[0], 9)      # dup key refused
+    assert not idx.register(keys[2], 7)      # dup page refused
+    assert idx.lookup(keys) == [7, 3]  # key 2 unregistered: run ends
+    assert idx.evict_page(7)
+    assert idx.lookup(keys) == []            # chain broken at page 0
+    refc = np.zeros(16, np.int32)
+    refc[3] = 1
+    assert idx.idle_pages(refc) == [3]
+
+
+# -- serving invariants -------------------------------------------------------
+
+def test_refcount_conservation_under_serving(served):
+    """sum(refcount) == live table mappings + index-held registrations,
+    after every server step (the PagePool docstring's conservation law)."""
+    cfg, params = served
+    server = LMServer(cfg, params, slots=2, max_seq=64, paged=True,
+                      page_size=8, prefix_cache=True,
+                      cache_dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab, 9)
+    for r in _reqs(cfg, [np.concatenate([shared, rng.integers(0, cfg.vocab, 3)])
+                         for _ in range(5)], max_new=4):
+        server.submit(r)
+
+    def check():
+        mapped = int((server.table_np < server.pool_pages).sum())
+        assert server.pool.refcount.sum() == \
+            mapped + server.prefix.registered_pages
+        assert server.pool.used_pages == \
+            int((server.pool.refcount > 0).sum())
+
+    while server.queue or any(x is not None for x in server.live):
+        server._admit()
+        check()
+        server.step()
+        check()
+    # registrations persist after all requests retire (hot prefix stays)
+    assert server.prefix.registered_pages > 0
+
+
+def test_prefix_hit_bit_identical_and_skips_rows(served):
+    """Warm admission (shared system prompt resident) produces the same
+    tokens as cold admission, while prefilling fewer rows."""
+    cfg, params = served
+    rng = np.random.default_rng(7)
+    sys_p = rng.integers(0, cfg.vocab, 17)
+    prompts = [np.concatenate([sys_p, rng.integers(0, cfg.vocab, 5)])
+               for _ in range(4)]
+    cold, _ = _serve(cfg, params, prompts)
+    warm, srv = _serve(cfg, params, prompts, prefix_cache=True)
+    assert cold == warm
+    m = srv.metrics.snapshot()
+    assert m["lm_prefix_pages_hit"] > 0
+    assert m["lm_prefill_rows_skipped"] > 0
+    assert m["lm_prefix_pages_hit"] <= m["lm_prefix_pages_total"]
+
+
+def test_cow_on_shared_tail_page(served):
+    """A prompt whose length is a page multiple matches ALL its pages,
+    yet must still re-emit from its last row: the shared tail page is
+    copied, and the copy never corrupts the original's stream."""
+    cfg, params = served
+    rng = np.random.default_rng(11)
+    # 2 full pages (page_size=8); three copies on 2 slots: the third
+    # admits after registration and matches BOTH pages -> COW
+    p = rng.integers(0, cfg.vocab, 16)
+    cold, _ = _serve(cfg, params, [p, p, p])
+    warm, srv = _serve(cfg, params, [p, p, p], prefix_cache=True)
+    assert cold == warm
+    assert srv.metrics.snapshot()["lm_pages_cow"] >= 1
+
+
+def test_eviction_returns_pages_to_free_list(served):
+    """When the pool runs dry, idle registrations (held only by the
+    prefix index) are evicted LRU-first and their pages recycled."""
+    cfg, params = served
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, 8) for _ in range(4)]
+    server = LMServer(cfg, params, slots=1, max_seq=64, paged=True,
+                      page_size=8, pool_pages=3, prefix_cache=True,
+                      cache_dtype=jnp.float32)
+    for r in _reqs(cfg, prompts, max_new=4):
+        server.submit(r)
+    done = server.run()
+    assert len(done) == 4
+    m = server.metrics.snapshot()
+    assert m["lm_prefix_pages_evicted"] >= 1
+    # evicted registrations released their reference: the pool drained
+    # back to exactly the surviving registrations
+    assert server.pool.used_pages == server.prefix.registered_pages
+
+
+def test_pool_exhaustion_backpressures_not_crashes(served):
+    """A pool holding one request's worth of pages serves three requests
+    sequentially: admission waits for retirements instead of crashing."""
+    cfg, params = served
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, 8) for _ in range(3)]
+    server = LMServer(cfg, params, slots=2, max_seq=64, paged=True,
+                      page_size=8, pool_pages=3, cache_dtype=jnp.float32)
+    for r in _reqs(cfg, prompts, max_new=10):  # 8+10-1=17 rows -> 3 pages
+        server.submit(r)
+    server._admit()
+    assert sum(x is not None for x in server.live) == 1  # pool-bound, not slot
+    assert len(server.queue) == 2                        # FIFO order kept
+    assert server.queue[0].rid == 1
+    done = server.run()
+    assert len(done) == 3
+    assert all(len(r.out) == 10 for r in done)
+
+
+def test_oversized_request_raises_not_hangs(served):
+    cfg, params = served
+    server = LMServer(cfg, params, slots=1, max_seq=64, paged=True,
+                      page_size=8, pool_pages=2, cache_dtype=jnp.float32)
+    server.submit(Request(0, np.arange(1, 9, dtype=np.int32), max_new=20))
+    with pytest.raises(RuntimeError, match="pool"):
+        server.run()
+
+
+def test_paged_rejects_stateful_families(served):
+    cfg, params = served
+    ssm = load_arch("mamba2_370m").smoke()
+    with pytest.raises(ValueError):
+        LMServer(ssm, None, paged=True)
+    ring = load_arch("h2o_danube3_4b").smoke()
+    with pytest.raises(ValueError):
+        LMServer(ring, None, paged=True, prefix_cache=True)
+
+
+# -- serving-loop correctness fixes -------------------------------------------
+
+def test_submit_boundary_off_by_one(served):
+    """plen + max_new - 1 == max_seq must be admissible (prefill emits
+    the first of max_new, so only plen + max_new - 1 rows are written);
+    one token more must be rejected."""
+    cfg, params = served
+    server = LMServer(cfg, params, slots=1, max_seq=64)
+    prompt = np.arange(1, 6, dtype=np.int32)  # plen 5
+    server.submit(Request(0, prompt, max_new=60))  # 5 + 60 - 1 == 64: ok
+    with pytest.raises(AssertionError):
+        server.submit(Request(1, prompt, max_new=61))
+    done = server.run()
+    assert len(done) == 1 and len(done[0].out) == 60  # filled to the brim
+
+
+def test_fmt_latency_zero_is_not_unknown():
+    assert fmt_latency(None) == "?"
+    assert fmt_latency(0.0) == "0.0ms"   # falsy but measured
+    assert fmt_latency(0.25) == "250.0ms"
+
+
+def test_run_and_report_empty_run_no_division(served, capsys):
+    cfg, params = served
+    server = LMServer(cfg, params, slots=1, max_seq=64)
+    assert run_and_report(server, []) == []
+    assert "served 0 requests" in capsys.readouterr().out

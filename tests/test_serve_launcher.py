@@ -45,15 +45,22 @@ def test_server_single_request_matches_greedy():
     assert done[0].out[:6] == list(np.asarray(ref)[0][:6])
 
 
-@pytest.mark.parametrize("arch,kv", [("smollm_360m", "bfloat16"),
-                                     ("h2o_danube3_4b", "bfloat16"),
-                                     ("stablelm_12b", "int8")])
-def test_midflight_admission_bit_identical_to_solo(arch, kv):
+@pytest.mark.parametrize("arch,kv,paged", [
+    ("smollm_360m", "bfloat16", False),
+    ("h2o_danube3_4b", "bfloat16", False),
+    ("stablelm_12b", "int8", False),
+    ("smollm_360m", "bfloat16", True),
+    ("h2o_danube3_4b", "bfloat16", True),
+    ("stablelm_12b", "int8", True),
+])
+def test_midflight_admission_bit_identical_to_solo(arch, kv, paged):
     """The acceptance property of per-sequence positions: requests
     admitted into free slots while other sequences keep decoding produce
     tokens bit-identical to generating each prompt alone — across linear,
     rolling (sliding-window) and int8-quantized caches, with ragged
-    prompt lengths (right-padded bucketed prefill)."""
+    prompt lengths (right-padded bucketed prefill). The paged variants
+    route every cache read/write through the block table and must stay
+    bit-identical to the contiguous layout."""
     cfg = dataclasses.replace(load_arch(arch).smoke(), dtype="float32",
                               kv_dtype=kv)
     params, _ = lm.init(cfg, jax.random.PRNGKey(1))
@@ -67,7 +74,8 @@ def test_midflight_admission_bit_identical_to_solo(arch, kv):
 
     # 2 slots, 5 requests: requests 2..4 are necessarily admitted
     # mid-flight, into slots whose neighbors are mid-generation.
-    server = LMServer(cfg, params, slots=2, max_seq=64)
+    kw = {"paged": True, "page_size": 8} if paged else {}
+    server = LMServer(cfg, params, slots=2, max_seq=64, **kw)
     for i, p in enumerate(prompts):
         server.submit(Request(i, p, max_new=6))
     done = server.run()
@@ -116,10 +124,14 @@ def test_admission_uses_batch_buckets():
 
 def test_bucket_policy_helpers():
     assert bucket_for(3, (1, 2, 4)) == 4
-    assert bucket_for(9, (1, 2, 4)) == 4       # clamp to largest
+    # overflow is a caller bug (a batch that can't fit its bucket): the
+    # old clamp silently truncated payload rows
+    with pytest.raises(ValueError):
+        bucket_for(9, (1, 2, 4))
     assert drain_take(7, (1, 4, 16)) == (4, 4)  # whole bucket, unpadded
     assert drain_take(3, (1, 4, 16)) == (3, 4)  # remainder, padded
     assert drain_take(1, (1, 4, 16)) == (1, 1)
+    assert drain_take(9, (1, 2, 4)) == (4, 4)   # drain_take caps, no raise
 
 
 def test_ssm_server_matches_solo_generation():
@@ -190,7 +202,11 @@ def test_metrics_invariants_under_midflight_admission():
     # occupancy bounded by slots; its integral is the decoded tokens
     assert snap["lm_slot_occupancy"]["max"] <= server.slots
     decoded = sum(len(r.out) - 1 for r in done)  # first token <- prefill
-    assert snap["lm_tokens_generated"] == decoded
+    # the counter includes the prefill-emitted first tokens, so it
+    # matches the tok/s numerator sum(len(r.out)); the occupancy
+    # integral stays decode-only
+    assert snap["lm_tokens_generated"] == decoded + n
+    assert snap["lm_tokens_generated"] == sum(len(r.out) for r in done)
     assert snap["lm_slot_occupancy_per_step"]["sum"] == decoded
     assert snap["lm_decode_step_s"]["count"] == server.decode_steps
     assert snap["lm_prefill_batches"] == server.admit_batches
