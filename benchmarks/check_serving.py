@@ -1,7 +1,7 @@
 """CI gate on the serving-benchmark JSON: the zero-repack fast path must
 actually be fast, and scan-fused generation must beat the per-step loop.
 
-Four checks over the ``serving`` rows of a ``benchmarks.run --json`` file:
+Five checks over the ``serving`` rows of a ``benchmarks.run --json`` file:
 
   1. fused <= tol * int8 — the packed containers routed through the PPAC
      engine must not lose to the plain int8 MXU fallback at smoke scale
@@ -25,6 +25,12 @@ Four checks over the ``serving`` rows of a ``benchmarks.run --json`` file:
      admission of the same repeated-system-prompt workload, at a 1.0
      page hit rate — a regression means CAM matching stopped mapping
      resident pages or suffix prefill fell back to full prompts.
+  5. speculative decoding: the fused draft->verify->accept round must
+     beat the per-token decode loop by >= spec_speedup on its
+     target-rung-drafter row (accept rate exactly 1.0, so the ratio is
+     deterministic dispatch amortization, not acceptance luck), and that
+     row's ``accept_rate`` field must BE 1.0 — anything lower means the
+     verify path or the accept rule drifted from the decode path.
 
 Rows are matched on the *typed* JSON fields (``kind`` / ``path`` /
 ``impl`` / ``batch`` / ``phase``); files from before the typed schema
@@ -32,6 +38,7 @@ fall back to name parsing via :func:`benchmarks.run.row_fields`.
 
 Usage: python -m benchmarks.check_serving BENCH.json [--tol 1.6]
        [--speedup 1.5] [--gen-speedup 2.0] [--prefix-speedup 2.0]
+       [--spec-speedup 1.3]
 """
 from __future__ import annotations
 
@@ -52,7 +59,8 @@ def _rows(path):
 
 
 def check(path: str, *, tol: float = 1.6, speedup: float = 1.5,
-          gen_speedup: float = 2.0, prefix_speedup: float = 2.0) -> int:
+          gen_speedup: float = 2.0, prefix_speedup: float = 2.0,
+          spec_speedup: float = 1.3) -> int:
     rows = _rows(path)
 
     def find(kind, path_tag="fast"):
@@ -152,6 +160,49 @@ def check(path: str, *, tol: float = 1.6, speedup: float = 1.5,
               f"{warm_cyc} ({ratio:.2f}x saved, hit rate "
               f"{phases['warm'].get('prefix_hit_rate')})")
 
+    # speculative-decoding gate: the fused draft->verify->accept round
+    # (one dispatch retires up to draft_k + 1 tokens) must beat the
+    # per-token decode loop by ``spec_speedup`` at smoke shape. Gated on
+    # the target-rung drafter row — its accept rate is exactly 1.0 by
+    # construction, so the measurement isolates the deterministic
+    # round-dispatch amortization; the packed1-ladder row reports its
+    # honest (weight-dependent) accept rate but is not speed-gated.
+    spec_plain = [us for name, us, f in rows
+                  if name.startswith("serve_spec_")
+                  and f.get("impl") == "plain_loop"]
+    spec_round = [(us, f) for name, us, f in rows
+                  if name.startswith("serve_spec_")
+                  and f.get("impl") == "spec_round"]
+    if not spec_plain or not spec_round:
+        failures.append("no serve_spec_plain/serve_spec_round rows — the "
+                        "speculative-decoding benchmark did not run")
+    else:
+        gated = [(us, f) for us, f in spec_round
+                 if f.get("draft") == "target"]
+        if not gated:
+            failures.append("no target-drafter serve_spec_round row to "
+                            "gate on")
+        for us, f in gated:
+            ratio = spec_plain[0] / us
+            if f.get("accept_rate") != 1.0:
+                failures.append(
+                    f"spec target-drafter accept rate "
+                    f"{f.get('accept_rate')} != 1.0: the drafter is not "
+                    f"reproducing the target rung (verify or accept "
+                    f"logic drift)")
+            if ratio < spec_speedup:
+                failures.append(
+                    f"spec round (draft_k={f.get('draft_k')}) only "
+                    f"{ratio:.2f}x faster than the per-token loop "
+                    f"({us:.1f}us vs {spec_plain[0]:.1f}us/token; need "
+                    f">= {spec_speedup:.2f}x)")
+        for us, f in spec_round:
+            print(f"spec round ({f.get('draft')} drafter, "
+                  f"k={f.get('draft_k')}): {us:.1f}us/tok "
+                  f"({spec_plain[0] / us:.2f}x plain loop, accept "
+                  f"{f.get('accept_rate')}, "
+                  f"{f.get('tok_s')} tok/s)")
+
     for f in failures:
         print(f"FAIL: {f}", file=sys.stderr)
     return 1 if failures else 0
@@ -172,10 +223,14 @@ def main(argv=None) -> int:
     ap.add_argument("--prefix-speedup", type=float, default=2.0,
                     help="required cold-vs-warm prefill-cycle reduction "
                          "for the 100%%-shared-prefix paged rerun")
+    ap.add_argument("--spec-speedup", type=float, default=1.3,
+                    help="required speculative-round vs per-token-loop "
+                         "speedup (target-rung drafter, accept rate 1.0)")
     args = ap.parse_args(argv)
     return check(args.json_path, tol=args.tol, speedup=args.speedup,
                  gen_speedup=args.gen_speedup,
-                 prefix_speedup=args.prefix_speedup)
+                 prefix_speedup=args.prefix_speedup,
+                 spec_speedup=args.spec_speedup)
 
 
 if __name__ == "__main__":

@@ -51,6 +51,10 @@ from repro.serve.step import (
     convert_params_for_serving,
     generate_scan,
     greedy_generate,
+    make_decode_select_step,
+    make_prefill_step,
+    make_speculative_decode_step,
+    make_speculative_scan,
     serving_cycle_report,
 )
 
@@ -130,7 +134,135 @@ def run():
                   if rep else dict(kind=kind, path="fast"))
         rows.append((f"serve_decode_{label}_b{slots}", us, extras))
     rows.extend(_generation_rows(base, params0))
+    rows.extend(_spec_rows(base, params0))
     rows.extend(_paged_prefix_rows())
+    return rows
+
+
+# speculative-decoding sweep: packed4 target rung, draft_k drafts/round
+_SPEC_BATCH = 2
+_SPEC_STEPS = 24
+_SPEC_K = 4
+_SPEC_PROMPT = 8
+
+
+def _spec_rows(base, params0):
+    """Self-speculative decoding rows (temperature 0, packed4 target).
+
+    Three serving paths over the same ``_SPEC_STEPS``-token tail:
+
+      * ``serve_spec_plain``: the per-token decode-select loop — one host
+        dispatch per emitted token, the continuous-batching server's
+        non-speculative unit of work;
+      * ``serve_spec_round``: the fused draft->verify->accept round —
+        ONE dispatch retires up to draft_k + 1 tokens. Benchmarked with
+        the drafter on the *target* rung (accept rate exactly 1.0, so
+        the row isolates the round-dispatch amortization and is
+        deterministic enough to CI-gate: ``check_serving
+        --spec-speedup`` requires >= 1.3x the plain loop) and with the
+        resident *packed1* rung (``draft=packed1``) — the precision-
+        ladder configuration, reporting the honest measured accept rate
+        (low on random smoke weights; the cycle columns carry the §III-C
+        story: draft launches price 1 bit-plane pass against the
+        target's K*L);
+      * ``serve_spec_scan``: the whole tail as one on-device
+        ``lax.while_loop`` program.
+
+    Every spec row is output-bit-identical to the plain loop (asserted
+    here, not just claimed).
+    """
+    rows = []
+    cfg, params, mode, _ = _serving_cfg_params(base, params0, 4)
+    params_lad = convert_params_for_serving(
+        params0, cfg, draft=True)  # + resident packed1 rung of same weights
+    b, steps, k = _SPEC_BATCH, _SPEC_STEPS, _SPEC_K
+    max_seq = _SPEC_PROMPT + steps + k + 2
+    batch = {"tokens": jnp.ones((b, _SPEC_PROMPT), jnp.int32)}
+    prefill = make_prefill_step(cfg, None, mode)
+    dec = make_decode_select_step(cfg, None, mode)
+    spec = make_speculative_decode_step(cfg, None, mode, draft_k=k)
+    sscan = make_speculative_scan(cfg, steps=steps, draft_k=k, mode=mode)
+    key = jax.random.PRNGKey(0)
+
+    def start(p):
+        cache, _ = lm.init_cache(cfg, b, max_seq)
+        logits, cache = prefill(p, batch, cache)
+        return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache
+
+    def plain_call():
+        tok, cache = start(params)
+        out = [np.asarray(tok)]
+        for _ in range(steps - 1):
+            tok, cache = dec(params, tok[:, None], cache, key)
+            out.append(np.asarray(tok))
+        return np.stack(out, axis=1)
+
+    def spec_call(p, stats=None):
+        tok, cache = start(p)
+        out = np.full((b, steps + k + 1), -1, np.int64)
+        out[:, 0] = np.asarray(tok)
+        off = np.ones((b,), np.int64)
+        while off.min() < steps:
+            em, ne, cache = spec(p, tok, cache, key)
+            em, ne = np.asarray(em), np.asarray(ne)
+            if stats is not None:
+                stats.append(ne)
+            for s in range(b):
+                out[s, off[s]:off[s] + ne[s]] = em[s, :ne[s]]
+            tok = jnp.asarray(em[np.arange(b), ne - 1])
+            off += ne
+        return out[:, :steps]
+
+    def scan_call():
+        cache, _ = lm.init_cache(cfg, b, max_seq)
+        logits, cache = prefill(params, batch, cache)
+        toks, _ = sscan(params, logits, cache, key)
+        return toks
+
+    ref = plain_call()
+    us = _t(plain_call, iters=2, reps=5) / (steps * b)
+    rows.append((f"serve_spec_plain_packed4_b{b}", us,
+                 dict(impl="plain_loop", kind="packed4", batch=b,
+                      tok_s=round(1e6 / us), steps=steps)))
+
+    for tag, p in (("target", params), ("packed1", params_lad)):
+        stats = []
+        got = spec_call(p, stats)
+        assert np.array_equal(got, ref), \
+            f"spec ({tag} drafter) diverged from the plain decode loop"
+        ne = np.concatenate(stats)
+        accept = float((ne - 1).sum() / (k * len(ne)))
+        us = _t(lambda p=p: spec_call(p), iters=2, reps=5) / (steps * b)
+        extras = dict(impl="spec_round", kind="packed4", draft=tag,
+                      draft_k=k, batch=b, tok_s=round(1e6 / us),
+                      accept_rate=round(accept, 3),
+                      rounds=len(ne) // b, steps=steps)
+        if tag == "packed1":
+            # ladder cycle accounting: one eager round under the flight
+            # recorder, split by phase tag (deterministic: launch
+            # geometry, not wall clock)
+            from repro.obs import Ledger
+            from repro.serve.step import _spec_round
+            tok, cache = start(p)
+            with Ledger() as led, jax.disable_jit():
+                _spec_round(p, cfg, tok, cache, key, draft_k=k, mode=mode,
+                            rules=None, temperature=0.0, top_k=0)
+            ph = led.by_phase()
+            extras.update(
+                draft_cycles_per_round=ph.get("draft", {}).get("cycles", 0),
+                verify_cycles_per_round=ph.get("verify", {}).get("cycles",
+                                                                 0))
+        rows.append((f"serve_spec_round_packed4_{tag}_k{k}_b{b}", us,
+                     extras))
+
+    got = np.asarray(scan_call())
+    assert np.array_equal(got, ref), \
+        "spec scan diverged from the plain decode loop"
+    us = _t(scan_call, iters=2, reps=5) / (steps * b)
+    rows.append((f"serve_spec_scan_packed4_k{k}_b{b}", us,
+                 dict(impl="spec_scan", kind="packed4", draft="target",
+                      draft_k=k, batch=b, tok_s=round(1e6 / us),
+                      steps=steps)))
     return rows
 
 

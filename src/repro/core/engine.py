@@ -48,7 +48,7 @@ from ..kernels.engine import ppac_matmul
 from ..obs import ledger as _flight
 from .formats import fmt as _fmt
 from .formats import pack_bits, to_bitplanes
-from .quant import binarize_pm1, fake_quant, quantize
+from .quant import binarize_levels, binarize_pm1, fake_quant, quantize
 
 
 @jax.tree_util.register_pytree_node_class
@@ -58,11 +58,20 @@ class QuantContainer:
     grouped-projection ``splits``) are static aux data, so jit specializes
     on the container format. ``shadow`` is the optional load-time int8
     resident for the MXU lowering (None on TPU, where the packed planes
-    are the native operand)."""
+    are the native operand).
+
+    A container may additionally carry a resident *draft rung*: a packed1
+    view of the same logical weight (``dwq``/``dscale``/``dshadow``),
+    built once at load time alongside the target rung. The draft rung is
+    what self-speculative decoding drafts with — same weights, 1-bit
+    bit-serial cost — and :meth:`draft_view` exposes it as an ordinary
+    packed1 container so every serving path prices and executes it
+    exactly like a standalone 1-bit conversion."""
 
     def __init__(self, kind: str, wq, scale, *, bits: Optional[int] = None,
                  fmt: Optional[str] = None, n_in: Optional[int] = None,
-                 shadow=None, splits: Optional[Tuple[int, ...]] = None):
+                 shadow=None, splits: Optional[Tuple[int, ...]] = None,
+                 dwq=None, dscale=None, dshadow=None):
         self.kind = kind
         self.wq = wq
         self.scale = scale
@@ -71,30 +80,54 @@ class QuantContainer:
         self.n_in = n_in
         self.shadow = shadow
         self.splits = tuple(splits) if splits else None
+        self.dwq = dwq
+        self.dscale = dscale
+        self.dshadow = dshadow
 
     def tree_flatten(self):
-        return (self.wq, self.scale, self.shadow), (self.kind, self.bits,
-                                                    self.fmt, self.n_in,
-                                                    self.splits)
+        return ((self.wq, self.scale, self.shadow, self.dwq, self.dscale,
+                 self.dshadow),
+                (self.kind, self.bits, self.fmt, self.n_in, self.splits))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         kind, bits, fmt, n_in, splits = aux
-        wq, scale, shadow = children
+        wq, scale, shadow, dwq, dscale, dshadow = children
         return cls(kind, wq, scale, bits=bits, fmt=fmt, n_in=n_in,
-                   shadow=shadow, splits=splits)
+                   shadow=shadow, splits=splits, dwq=dwq, dscale=dscale,
+                   dshadow=dshadow)
 
-    def with_children(self, wq, scale, shadow=None) -> "QuantContainer":
+    def with_children(self, wq, scale, shadow=None, dwq=None, dscale=None,
+                      dshadow=None) -> "QuantContainer":
         """Same kind/metadata, different payloads (sharding specs etc.)."""
         return QuantContainer(self.kind, wq, scale, bits=self.bits,
                               fmt=self.fmt, n_in=self.n_in, shadow=shadow,
+                              splits=self.splits, dwq=dwq, dscale=dscale,
+                              dshadow=dshadow)
+
+    @property
+    def has_draft(self) -> bool:
+        return self.dwq is not None
+
+    def draft_view(self) -> "QuantContainer":
+        """The resident packed1 rung as a standalone container.
+
+        Falls back to the container itself when no draft rung was packed
+        (packed1 already IS the cheapest rung; a draft-less container
+        drafts with the target, making the drafter exact).
+        """
+        if self.dwq is None:
+            return self
+        return QuantContainer("packed1", self.dwq, self.dscale, bits=1,
+                              fmt="pm1", n_in=self.n_in, shadow=self.dshadow,
                               splits=self.splits)
 
     def __repr__(self):
         return (f"QuantContainer({self.kind}, bits={self.bits}, "
                 f"wq={getattr(self.wq, 'shape', None)}"
                 + (f", splits={self.splits}" if self.splits else "")
-                + (", shadow" if self.shadow is not None else "") + ")")
+                + (", shadow" if self.shadow is not None else "")
+                + (", draft" if self.dwq is not None else "") + ")")
 
 
 def qat_dense(x, w, *, weight_bits: int, act_bits: int,
@@ -122,11 +155,20 @@ def _format_has_offset(weight_format: str) -> bool:
     return format_needs_mask(_fmt(weight_format))
 
 
+def _pack_pm1(w, store_shadow: Optional[bool]):
+    """One ±1 bitplane of a float [in, out] weight: (packed [out, in/32]
+    u32, scale [out], optional int8 shadow [in, out])."""
+    levels, q, s = binarize_levels(w, axis=0)
+    packed = pack_bits(levels.T)
+    shadow = q.astype(jnp.int8) if _want_shadow(store_shadow) else None
+    return packed, s[0], shadow
+
+
 def pack_weight_for_serving(w, *, weight_bits: int,
                             weight_format: str = "int",
                             splits: Optional[Sequence[int]] = None,
-                            store_shadow: Optional[bool] = None
-                            ) -> QuantContainer:
+                            store_shadow: Optional[bool] = None,
+                            draft: bool = False) -> QuantContainer:
     """Offline conversion of a float [in, out] weight to a resident
     quantized container (run once at model load, like writing the PPAC
     latch array).
@@ -140,21 +182,29 @@ def pack_weight_for_serving(w, *, weight_bits: int,
     every backend). 5..8 bits fall back to int8 rows (MXU dot); wider
     requests keep bf16. ``splits`` records grouped-projection output
     widths (see ``serve_dense_grouped``).
+
+    ``draft=True`` additionally packs the 1-bit rung of the SAME weight
+    into the container's draft slots (``dwq``/``dscale``/``dshadow``) —
+    bit-identical to a standalone ``weight_bits=1`` conversion — so
+    self-speculative decoding drafts from the resident container with no
+    re-conversion and no second model.
     """
     n_in = w.shape[0]
     splits = tuple(splits) if splits else None
     w = w.astype(jnp.float32)
+    draft_kw = {}
+    if draft and weight_bits > 1:
+        dwq, dscale, dshadow = _pack_pm1(w, store_shadow)
+        draft_kw = dict(dwq=dwq, dscale=dscale, dshadow=dshadow)
     if weight_bits == 1:
-        q, s = binarize_pm1(w, axis=0)              # q in {±1}, s [1, out]
-        bits = ((q + 1) / 2).astype(jnp.uint8)      # logical levels
-        packed = pack_bits(bits.T)                  # [out, in/32] u32
-        shadow = q.astype(jnp.int8) if _want_shadow(store_shadow) else None
-        return QuantContainer("packed1", packed, s[0], bits=1, fmt="pm1",
+        packed, s0, shadow = _pack_pm1(w, store_shadow)  # [out, in/32] u32
+        return QuantContainer("packed1", packed, s0, bits=1, fmt="pm1",
                               n_in=n_in, shadow=shadow, splits=splits)
     if weight_bits > 8:
         return QuantContainer("bf16", w.astype(jnp.bfloat16),
                               jnp.ones((w.shape[1],), jnp.float32),
-                              bits=16, fmt="float", n_in=n_in, splits=splits)
+                              bits=16, fmt="float", n_in=n_in, splits=splits,
+                              **draft_kw)
     q, s = quantize(w, weight_bits, weight_format, axis=0)  # s [1, out]
     if weight_bits <= 4:
         a_int = q.T.astype(jnp.int32)               # [out, in] exact ints
@@ -169,9 +219,10 @@ def pack_weight_for_serving(w, *, weight_bits: int,
         shadow = q.astype(jnp.int8) if _want_shadow(store_shadow) else None
         return QuantContainer("packed4", packed, s[0], bits=weight_bits,
                               fmt=weight_format, n_in=n_in, shadow=shadow,
-                              splits=splits)
+                              splits=splits, **draft_kw)
     return QuantContainer("int8", q.astype(jnp.int8), s[0], bits=weight_bits,
-                          fmt=weight_format, n_in=n_in, splits=splits)
+                          fmt=weight_format, n_in=n_in, splits=splits,
+                          **draft_kw)
 
 
 def serve_dense_acc(xf, container: QuantContainer, *, act_bits: int,
@@ -224,8 +275,19 @@ def serve_dense_acc(xf, container: QuantContainer, *, act_bits: int,
 
 
 def serve_dense(x, container: QuantContainer, *, act_bits: int,
-                act_format: str = "int", backend: str = "mxu"):
-    """Exact-integer projection against a resident quantized weight."""
+                act_format: str = "int", backend: str = "mxu",
+                rung: str = "target"):
+    """Exact-integer projection against a resident quantized weight.
+
+    ``rung="draft"`` serves the container's resident packed1 rung (the
+    1-bit bit-serial cost class) instead of the target rung; containers
+    without a packed draft rung fall back to the target rung, so a
+    draft-routed forward is always well-defined.
+    """
+    if rung == "draft":
+        container = container.draft_view()
+    elif rung != "target":
+        raise ValueError(f"unknown serving rung {rung!r}")
     scale = container.scale
     lead = x.shape[:-1]
     xf = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
@@ -241,7 +303,8 @@ def serve_dense(x, container: QuantContainer, *, act_bits: int,
 
 
 def serve_dense_grouped(x, container: QuantContainer, *, act_bits: int,
-                        act_format: str = "int", backend: str = "mxu"):
+                        act_format: str = "int", backend: str = "mxu",
+                        rung: str = "target"):
     """One fused projection for a grouped container, split back into the
     member projections' outputs.
 
@@ -254,7 +317,7 @@ def serve_dense_grouped(x, container: QuantContainer, *, act_bits: int,
     if not container.splits:
         raise ValueError("serve_dense_grouped needs a container with splits")
     y = serve_dense(x, container, act_bits=act_bits, act_format=act_format,
-                    backend=backend)
+                    backend=backend, rung=rung)
     outs, off = [], 0
     for width in container.splits:
         outs.append(jax.lax.slice_in_dim(y, off, off + width, axis=-1))

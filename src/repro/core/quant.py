@@ -60,6 +60,16 @@ def binarize_pm1(x, axis: int = -1):
     return q, scale
 
 
+def binarize_levels(x, axis: int = -1):
+    """Binarize to logical bit levels for packing: (levels uint8 in {0,1},
+    q float in {±1}, scale). ``levels = (q+1)/2`` is the single bitplane a
+    packed1 resident stores; q/scale match :func:`binarize_pm1`.
+    """
+    q, s = binarize_pm1(x, axis=axis)
+    levels = ((q + 1.0) / 2.0).astype(jnp.uint8)
+    return levels, q, s
+
+
 def quantize(x, bits: int, f: NumberFormat = NumberFormat.INT, axis=-1):
     """Symmetric/affine quantization into the exact PPAC format range.
 

@@ -66,6 +66,7 @@ from ..serve.step import (
     convert_params_for_serving,
     make_decode_select_step,
     make_prefill_select_step,
+    make_speculative_decode_step,
     sample_tokens,
     serving_cycle_report,
 )
@@ -107,7 +108,8 @@ class LMServer:
                  trace: Optional[TraceBuilder] = None,
                  paged: bool = False, page_size: int = 16,
                  pool_pages: Optional[int] = None,
-                 prefix_cache: bool = False, cache_dtype=None):
+                 prefix_cache: bool = False, cache_dtype=None,
+                 spec_decode: bool = False, draft_k: int = 4):
         assert tuple(admit_buckets) == tuple(sorted(admit_buckets))
         if prefill_buckets is None:
             # powers of two up to max_seq (any prompt that leaves room to
@@ -188,6 +190,23 @@ class LMServer:
         # one fused decode+select step over all slots, cache donated
         self._decode = make_decode_select_step(
             cfg, rules, mode, temperature=temperature, top_k=top_k)
+
+        # speculative mode: one fused draft->verify->accept round per
+        # dispatch retires up to draft_k + 1 tokens per slot
+        self.spec_decode, self.draft_k = spec_decode, draft_k
+        if spec_decode:
+            if cfg.family in ("ssm", "hybrid"):
+                raise ValueError("speculative decoding needs a "
+                                 "token-indexed KV cache; SSM/hybrid "
+                                 "state cannot rewind")
+            if paged and cfg.sliding_window:
+                raise ValueError("speculative decoding over a paged ring "
+                                 "cache is unsupported: rejected wrapped "
+                                 "writes cannot be rolled back through "
+                                 "the block table")
+            self._spec = make_speculative_decode_step(
+                cfg, rules, mode, draft_k=draft_k,
+                temperature=temperature, top_k=top_k)
 
         # compiles once per (batch-bucket, length-bucket) pair
         self._prefill = make_prefill_select_step(
@@ -473,8 +492,43 @@ class LMServer:
                 m.histogram("lm_ttft_s").record(t1 - r.submit_t)
             self.live[s] = r
 
+    def _retire_slot(self, s: int, r: Request, now: float):
+        """Evict a finished request from its slot and record telemetry."""
+        m = self.metrics
+        r.retire_t = now
+        m.counter("lm_requests_retired").inc()
+        m.counter("lm_slots_evicted").inc()
+        m.counter(f"lm_finish_{r.finish_reason}").inc()
+        if r.latency_s is not None:
+            m.histogram("lm_request_latency_s").record(r.latency_s)
+        if r.first_token_t is not None and len(r.out) > 1:
+            m.histogram("lm_tpot_s").record(
+                (now - r.first_token_t) / (len(r.out) - 1))
+        self.live[s] = None  # evict: slot is free for re-admission
+
+    def _reclaim_pages(self):
+        """Return the pages of freshly-freed slots to the pool."""
+        m = self.metrics
+        reclaim = [s for s, r in enumerate(self.live)
+                   if r is None and (self.table_np[s]
+                                     < self.pool_pages).any()]
+        for s in reclaim:
+            held = [int(p) for p in self.table_np[s]
+                    if p < self.pool_pages]
+            self.pool.decref(held)  # shared pages survive via refcount
+            self.table_np[s] = self.pool_pages
+        if reclaim:
+            sids = np.asarray(reclaim, np.int32)
+            self.cache = self._table_write(
+                self.cache, jnp.asarray(sids),
+                jnp.asarray(self.table_np[sids]))
+        m.gauge("lm_pool_pages_used").set(self.pool.used_pages)
+        m.gauge("lm_pool_pages_free").set(self.pool.free_pages)
+
     def step(self) -> List[Request]:
         """One fused decode step over all slots; returns retired requests."""
+        if self.spec_decode:
+            return self._step_spec()
         occupied = sum(r is not None for r in self.live)
         if occupied == 0:
             # admission backpressured with nothing resident: a decode
@@ -507,33 +561,69 @@ class LMServer:
             if hit_eos or len(r.out) >= r.max_new:
                 r.done = True
                 r.finish_reason = "eos" if hit_eos else "length"
-                r.retire_t = t1
-                m.counter("lm_requests_retired").inc()
-                m.counter("lm_slots_evicted").inc()
-                m.counter(f"lm_finish_{r.finish_reason}").inc()
-                if r.latency_s is not None:
-                    m.histogram("lm_request_latency_s").record(r.latency_s)
-                if r.first_token_t is not None and len(r.out) > 1:
-                    m.histogram("lm_tpot_s").record(
-                        (t1 - r.first_token_t) / (len(r.out) - 1))
+                self._retire_slot(s, r, t1)
                 retired.append(r)
-                self.live[s] = None  # evict: slot is free for re-admission
         if self.paged and retired:
-            reclaim = [s for s, r in enumerate(self.live)
-                       if r is None and (self.table_np[s]
-                                         < self.pool_pages).any()]
-            for s in reclaim:
-                held = [int(p) for p in self.table_np[s]
-                        if p < self.pool_pages]
-                self.pool.decref(held)  # shared pages survive via refcount
-                self.table_np[s] = self.pool_pages
-            if reclaim:
-                sids = np.asarray(reclaim, np.int32)
-                self.cache = self._table_write(
-                    self.cache, jnp.asarray(sids),
-                    jnp.asarray(self.table_np[sids]))
-            m.gauge("lm_pool_pages_used").set(self.pool.used_pages)
-            m.gauge("lm_pool_pages_free").set(self.pool.free_pages)
+            self._reclaim_pages()
+        return retired
+
+    def _step_spec(self) -> List[Request]:
+        """One speculative draft->verify->accept round over all slots.
+
+        A single cache-donating dispatch (k packed1-rung drafts + ONE
+        batched target-rung verify) retires a *variable* number of
+        tokens per slot — ``n_emit[s]`` in [1, draft_k + 1] — so the
+        host-side loop appends each slot's accepted prefix and truncates
+        at EOS / max_new (tokens past a mid-window stop are discarded;
+        the slot is evicted and its cache rows recycled on re-admission).
+        """
+        occupied = sum(r is not None for r in self.live)
+        if occupied == 0:
+            return []
+        toks = np.zeros((self.slots,), np.int32)
+        for s, r in enumerate(self.live):
+            if r is not None:
+                toks[s] = r.out[-1]
+        t0 = time.perf_counter()
+        with self._span("spec_round", occupied=occupied,
+                        draft_k=self.draft_k):
+            emitted, n_emit, self.cache = self._spec(
+                self.params, jnp.asarray(toks), self.cache,
+                self._next_key())
+            emitted = np.asarray(emitted)  # [S, draft_k+1] token ids
+            n_emit = np.asarray(n_emit)    # [S] accepted prefix + 1
+        t1 = time.perf_counter()
+        self.decode_steps += 1
+        m = self.metrics
+        m.histogram("lm_decode_step_s").record(t1 - t0)
+        m.gauge("lm_slot_occupancy").set(occupied)
+        m.histogram("lm_slot_occupancy_per_step").record(occupied)
+        m.gauge("lm_queue_depth").set(len(self.queue))
+        retired = []
+        for s, r in enumerate(self.live):
+            if r is None:
+                continue
+            ne = int(n_emit[s])
+            if self.draft_k:  # per-slot acceptance telemetry
+                m.counter("lm_spec_rounds").inc()
+                m.counter("lm_spec_tokens_drafted").inc(self.draft_k)
+                m.counter("lm_spec_tokens_accepted").inc(ne - 1)
+                m.histogram("lm_spec_accept_rate").record(
+                    (ne - 1) / self.draft_k)
+            for j in range(ne):
+                t = int(emitted[s, j])
+                r.out.append(t)
+                m.counter("lm_tokens_generated").inc()
+                hit_eos = r.eos is not None and t == r.eos
+                if hit_eos or len(r.out) >= r.max_new:
+                    r.done = True
+                    r.finish_reason = "eos" if hit_eos else "length"
+                    break  # discard accepted tokens past the stop
+            if r.done:
+                self._retire_slot(s, r, t1)
+                retired.append(r)
+        if self.paged and retired:
+            self._reclaim_pages()
         return retired
 
     def run(self) -> List[Request]:
@@ -569,6 +659,15 @@ def run_and_report(server: LMServer, requests: List[Request], *,
           f"({toks / dt:.1f} tok/s, slots={server.slots}, "
           f"{server.decode_steps} decode steps, "
           f"{server.admit_batches} prefill batches)")
+    if server.spec_decode:
+        acc = server.metrics.histogram("lm_spec_accept_rate")
+        drafted = server.metrics.counter("lm_spec_tokens_drafted").value
+        accepted = server.metrics.counter("lm_spec_tokens_accepted").value
+        print(f"speculative: draft_k={server.draft_k}, "
+              f"accepted {accepted}/{drafted} drafts "
+              f"({accepted / max(drafted, 1):.0%}), "
+              f"accept-rate p50={acc.percentile(50):.2f} "
+              f"({toks / max(server.decode_steps, 1):.2f} tok/round)")
     if server.paged:
         line = (f"paged pool: {server.pool.used_pages}/{server.pool.pages} "
                 f"pages held (page_size={server.page_size})")
@@ -607,7 +706,17 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for sampled decoding (temperature > 0); "
+                         "runs with the same seed reproduce exactly")
     ap.add_argument("--eos", type=int, default=None)
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="self-speculative decoding: draft with the "
+                         "resident packed1 rung, verify all drafts in one "
+                         "batched target-rung launch (outputs identical "
+                         "to plain decoding; greedy is bit-exact)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculative draft depth per round")
     ap.add_argument("--serve-quant", action="store_true")
     ap.add_argument("--weight-bits", type=int, default=4,
                     choices=(1, 2, 3, 4, 8))
@@ -642,15 +751,17 @@ def main():
                                           weight_bits=args.weight_bits,
                                           act_bits=8, min_features=32,
                                           backend="auto"))
-        params = convert_params_for_serving(params, cfg)
+        params = convert_params_for_serving(params, cfg,
+                                            draft=args.spec_decode)
         mode = "serve"
         report = serving_cycle_report(params, cfg)
 
     server = LMServer(cfg, params, slots=args.slots, max_seq=args.max_seq,
                       mode=mode, temperature=args.temperature,
-                      top_k=args.top_k, paged=args.paged,
+                      top_k=args.top_k, seed=args.seed, paged=args.paged,
                       page_size=args.page_size, pool_pages=args.pool_pages,
-                      prefix_cache=args.prefix_cache)
+                      prefix_cache=args.prefix_cache,
+                      spec_decode=args.spec_decode, draft_k=args.draft_k)
     rng = np.random.default_rng(0)
     run_and_report(
         server,

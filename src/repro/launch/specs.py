@@ -187,10 +187,18 @@ def _param_shardings(mesh, rules, pshapes, paxes):
                 wq_ax = lead + (a_in, a_out)
             shadow_sh = (spec_or_rep(lead + (a_in, a_out), leaf.shadow)
                          if leaf.shadow is not None else None)
+            # the resident draft rung is packed1-shaped regardless of kind
+            draft_sh = dict(
+                dwq=(spec_or_rep(lead + (a_out, None), leaf.dwq)
+                     if leaf.dwq is not None else None),
+                dscale=(spec_or_rep(lead + (a_out,), leaf.dscale)
+                        if leaf.dscale is not None else None),
+                dshadow=(spec_or_rep(lead + (a_in, a_out), leaf.dshadow)
+                         if leaf.dshadow is not None else None))
             return leaf.with_children(
                 spec_or_rep(wq_ax, leaf.wq),
                 spec_or_rep(lead + (a_out,), leaf.scale),
-                shadow_sh)
+                shadow_sh, **draft_sh)
         return spec_or_rep(ax, leaf)
 
     is_ax = lambda x: x is None or (isinstance(x, tuple) and all(

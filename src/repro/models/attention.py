@@ -329,6 +329,14 @@ def _scatter_rows(cache_leaf, rows, slot):
         rows[:, 0].astype(cache_leaf.dtype), mode="drop")
 
 
+def _scatter_rows_multi(cache_leaf, rows, row_idx):
+    """Write rows [B,S,...] at per-sequence rows [B,S] of cache [B,T,...].
+    Out-of-range rows (a verify window running past the cache) drop."""
+    b = cache_leaf.shape[0]
+    return cache_leaf.at[jnp.arange(b)[:, None], row_idx].set(
+        rows.astype(cache_leaf.dtype), mode="drop")
+
+
 def _ring_rows(stream, lengths, t: int):
     """Ring-layout a per-position stream into rolling-cache rows.
 
@@ -366,7 +374,7 @@ def _decode_attend_q8(q, cache, k_valid, *, scale, rules=None):
     Like ``_attend_prepped``, every head-indexed einsum is constrained to
     the 'model' axis (the grouped dim g carries the kv-head sharding).
     """
-    b, s, h, d = q.shape          # s == 1
+    b, s, h, d = q.shape          # s == 1 decode; s > 1 verifies a window
     ki, vi = cache["k"], cache["v"]
     ks, vs = cache.get("ks"), cache.get("vs")
     t, g = ki.shape[1], ki.shape[2]
@@ -381,8 +389,10 @@ def _decode_attend_q8(q, cache, k_valid, *, scale, rules=None):
                            None)
     if ks is not None:
         scores = scores * ks[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
-    mask = jnp.arange(t)[None, :] < k_valid[:, None]   # [B,T]
-    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    kv = jnp.asarray(k_valid, jnp.int32)
+    kv = kv[:, None] if kv.ndim == 1 else kv           # [B,S] counts
+    mask = jnp.arange(t)[None, None, :] < kv[:, :, None]   # [B,S,T]
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     wv = w.astype(q.dtype)
     if vs is not None:
@@ -394,9 +404,65 @@ def _decode_attend_q8(q, cache, k_valid, *, scale, rules=None):
     return out.reshape(b, s, h, -1).astype(q.dtype)
 
 
+def _verify_attend_views(q, views, k_valid, *, scale, rules=None):
+    """``_decode_attend_q8`` against per-query cache views: leaves are
+    [B,S,T,g,*] — query i sees its OWN snapshot of the ring (slots a later
+    window row will overwrite still hold their pre-window content). Same
+    einsum contractions, scale ordering and count masking as decode, with
+    one extra query-indexed key axis, so each row of the window reproduces
+    the decode step it replaces bit for bit up to key order (which the
+    view construction preserves: slot order)."""
+    b, s, h, d = q.shape
+    ki, vi = views["k"], views["v"]
+    ks, vs = views.get("ks"), views.get("vs")
+    t, g = ki.shape[2], ki.shape[3]
+    rep = h // g
+    qg = q.reshape(b, s, g, rep, d)
+    if rules is not None:
+        qg = constrain(qg, rules, "batch", None, "act_heads", None, None)
+    scores = jnp.einsum("bsgrd,bstgd->bgrst", qg, ki.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    if rules is not None:
+        scores = constrain(scores, rules, "batch", "act_heads", None, None,
+                           None)
+    if ks is not None:
+        scores = scores * ks[..., 0].transpose(0, 3, 1, 2)[:, :, None, :, :]
+    mask = jnp.arange(t)[None, None, :] < k_valid[:, :, None]   # [B,S,T]
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    wv = w.astype(q.dtype)
+    if vs is not None:
+        wv = wv * vs[..., 0].transpose(0, 3, 1, 2)[:, :, None, :, :]
+    out = jnp.einsum("bgrst,bstgv->bsgrv", wv, vi.astype(q.dtype),
+                     preferred_element_type=jnp.float32)
+    if rules is not None:
+        out = constrain(out, rules, "batch", None, "act_heads", None, None)
+    return out.reshape(b, s, h, -1).astype(q.dtype)
+
+
+def _ring_query_views(ext, j0, n_q: int, t: int):
+    """Per-query ring views from extended leaves [B, t+S, ...]: query i's
+    slot s reads window row ``j0[b,s]`` (appended at t+j0) once that row
+    exists for i (``j0 <= i`` — covering both in-window replacement and
+    window expiry of the slot's old content), else the untouched ring row.
+    Returns leaves [B, n_q, t, ...]."""
+    b = j0.shape[0]
+    qi = jnp.arange(n_q, dtype=jnp.int32)[None, :, None]         # [1,S,1]
+    idx = jnp.where(j0[:, None, :] <= qi, t + j0[:, None, :],
+                    jnp.arange(t, dtype=jnp.int32)[None, None, :])  # [B,S,t]
+    flat = idx.reshape(b, n_q * t)
+    out = {}
+    for kk, leaf in ext.items():
+        rows = jnp.take_along_axis(
+            leaf, flat.reshape((b, n_q * t) + (1,) * (leaf.ndim - 2)),
+            axis=1)
+        out[kk] = rows.reshape((b, n_q, t) + leaf.shape[2:])
+    return out
+
+
 def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
               lengths=None, mode: str = "float", rules=None, table=None,
-              history=False):
+              history=False, verify=False):
     """x: [B,S,d]. Train/prefill when cache is None or S>1 (writes cache
     at positions [0, lengths) — right-padded ragged prompts supported);
     decode (S==1) updates the rolling/linear cache at per-sequence
@@ -407,12 +473,20 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
     ``history=True`` is the suffix-prefill path for prefix-reuse hits:
     ``positions`` [B,S] are absolute rows past an already-populated
     history (shared pages), written through the table and attended via
-    the gathered per-slot view under a per-sequence causal mask."""
+    the gathered per-slot view under a per-sequence causal mask.
+
+    ``verify=True`` is the speculative-verify path: the S tokens sit at
+    per-sequence positions ``pos + i`` PAST the populated cache, and
+    every row runs the exact decode-step compute (same einsums, same
+    count masking) so row i's logits bit-match the decode step it
+    replaces. All S rows' target-rung K/V are written; rejected rows are
+    masked by ``pos`` afterwards (linear/paged) or rolled back by the
+    caller (ring — see ``models.lm.rollback_ring_cache``)."""
     dtype = jnp.dtype(cfg.dtype)
     b, s, d = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     if "wqkv" in p:  # fused q/k/v group (serving fast path)
-        q, k, v = grouped_dense_apply(p["wqkv"], x, ppac=cfg.ppac)
+        q, k, v = grouped_dense_apply(p["wqkv"], x, ppac=cfg.ppac, mode=mode)
     else:
         q = dense_apply(p["wq"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
         k = dense_apply(p["wk"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
@@ -462,6 +536,51 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
             vf = vf * view["vs"].astype(q.dtype)
         attn = _attend_causal_rows(q, kf, vf, row_idx, scale=hd ** -0.5,
                                    rules=rules, scores_dtype=sdt)
+    elif verify:  # speculative verify: S decode-equivalent rows at pos+i
+        pos = as_pos_vector(pos, b)
+        row_idx = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+        if "ks" in cache:            # quantized store (same as decode)
+            kq, ksc = _q8_kv(k)
+            vq, vsc = _q8_kv(v)
+            leaves = {"k": kq, "v": vq, "ks": ksc, "vs": vsc}
+        else:
+            leaves = {"k": k, "v": v}
+        if cfg.sliding_window:
+            # ring: window rows ride as S appended keys; each query reads
+            # a per-query slot-ordered view, so softmax sums in the same
+            # key order as the decode steps being replaced.
+            assert not paged, "spec verify: paged ring caches unsupported"
+            t = cache["k"].shape[1]
+            assert s <= t, "verify window must fit the sliding window"
+            slot = row_idx % t
+            j0 = jnp.mod(jnp.arange(t, dtype=jnp.int32)[None, :]
+                         - pos[:, None], t)             # [B,t]
+            ext = {kk: jnp.concatenate(
+                [cache[kk], vv.astype(cache[kk].dtype)], axis=1)
+                for kk, vv in leaves.items()}
+            views = _ring_query_views(ext, j0, s, t)
+            k_valid = jnp.minimum(row_idx + 1, t)
+            attn = _verify_attend_views(q, views, k_valid, scale=hd ** -0.5,
+                                        rules=rules)
+            new_cache = {kk: _scatter_rows_multi(cache[kk], vv, slot)
+                         for kk, vv in leaves.items()}
+        elif paged:
+            t = table.shape[1] * cache["k"].shape[1]
+            # rows past the slot's allocation hit sentinel table entries
+            # and drop; rows past the logical extent drop explicitly
+            valid = row_idx < t
+            new_cache = {kk: paged_scatter(cache[kk], table, vv, row_idx,
+                                           valid)
+                         for kk, vv in leaves.items()}
+            attend = {kk: paged_view(vv, table)
+                      for kk, vv in new_cache.items()}
+            attn = _decode_attend_q8(q, attend, row_idx + 1,
+                                     scale=hd ** -0.5, rules=rules)
+        else:
+            new_cache = {kk: _scatter_rows_multi(cache[kk], vv, row_idx)
+                         for kk, vv in leaves.items()}
+            attn = _decode_attend_q8(q, new_cache, row_idx + 1,
+                                     scale=hd ** -0.5, rules=rules)
     elif s > 1:  # prefill into cache (cold: no history in the cache yet)
         psz = cache["k"].shape[1]
         t = table.shape[1] * psz if paged else cache["k"].shape[1]
@@ -589,7 +708,7 @@ MLA_PAGED_CACHE_AXES = {"kv_c": (None, None, None),
 
 def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
               lengths=None, mode: str = "float", rules=None, table=None,
-              history=False):
+              history=False, verify=False):
     m = cfg.mla
     dtype = jnp.dtype(cfg.dtype)
     b, s, d = x.shape
@@ -631,7 +750,7 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
         q_full = jnp.concatenate([q_n, q_r], -1)
         attn = _attend_causal_rows(q_full, k_full, vv, row_idx, scale=scale,
                                    rules=rules, scores_dtype=sdt)
-    elif cache is None or s > 1:
+    elif cache is None or (s > 1 and not verify):
         # Non-absorbed (train/prefill) path: materialize K/V.
         k_n = dense_apply(p["w_uk"], kv_c, dtype=dtype).reshape(b, s, h, dn)
         v = dense_apply(p["w_uv"], kv_c, dtype=dtype).reshape(b, s, h, dv)
@@ -666,29 +785,35 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
             }
     else:
         # Absorbed decode: score against the compressed cache directly,
-        # at per-sequence write positions.
+        # at per-sequence write positions. The same path serves the
+        # S-token speculative verify window (rows at pos+i, per-row
+        # causal masks) — the absorbed einsums are S-generic, so every
+        # verify row reproduces its decode step's float op order.
         pos = as_pos_vector(pos, b)
+        row_idx = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
         if paged:
-            ckp = paged_scatter(cache["kv_c"], table, kv_c, pos[:, None])
-            crp = paged_scatter(cache["k_rope"], table, k_r, pos[:, None])
+            t = table.shape[1] * cache["kv_c"].shape[1]
+            valid = row_idx < t    # unallocated pages drop via sentinel
+            ckp = paged_scatter(cache["kv_c"], table, kv_c, row_idx, valid)
+            crp = paged_scatter(cache["k_rope"], table, k_r, row_idx, valid)
             new_cache = {"kv_c": ckp, "k_rope": crp}
             ck = paged_view(ckp, table)
             cr = paged_view(crp, table)
         else:
-            ck = _scatter_rows(cache["kv_c"], kv_c, pos)
-            cr = _scatter_rows(cache["k_rope"], k_r, pos)
+            ck = _scatter_rows_multi(cache["kv_c"], kv_c, row_idx)
+            cr = _scatter_rows_multi(cache["k_rope"], k_r, row_idx)
             new_cache = {"kv_c": ck, "k_rope": cr}
         t = ck.shape[1]
         w_uk = p["w_uk"]["w"].astype(dtype).reshape(m.kv_lora_rank, h, dn)
-        # absorb: q' = q_n @ w_uk^T  -> [B,1,H,lora]
+        # absorb: q' = q_n @ w_uk^T  -> [B,S,H,lora]
         q_abs = jnp.einsum("bshd,lhd->bshl", q_n, w_uk)
         scores = (jnp.einsum("bshl,btl->bhst", q_abs, ck,
                              preferred_element_type=jnp.float32)
                   + jnp.einsum("bshd,btd->bhst", q_r, cr,
                                preferred_element_type=jnp.float32)) * scale
         k_pos = jnp.arange(t)
-        mask = k_pos[None, :] <= pos[:, None]          # [B,T]
-        scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+        mask = k_pos[None, None, :] <= row_idx[:, :, None]     # [B,S,T]
+        scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
         wts = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bhst,btl->bshl", wts.astype(ck.dtype), ck,
                          preferred_element_type=jnp.float32)

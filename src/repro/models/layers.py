@@ -43,8 +43,11 @@ def dense_apply(p, x, *, ppac: Optional[PPACModeConfig] = None,
                 mode: str = "float", dtype=jnp.bfloat16):
     """Projection with optional PPAC execution.
 
-    mode: 'float' | 'qat' | 'serve'. In 'serve' mode ``p['w']`` may be a
-    quantized container produced by pack_weight_for_serving.
+    mode: 'float' | 'qat' | 'serve' | 'draft'. In 'serve' mode ``p['w']``
+    may be a quantized container produced by pack_weight_for_serving;
+    'draft' serves the container's resident packed1 rung (speculative
+    drafting) and degrades to the target rung / plain matmul when no
+    draft rung or no container exists.
     """
     w = p["w"]
     use_ppac = (ppac is not None and ppac.enabled and mode != "float"
@@ -53,7 +56,8 @@ def dense_apply(p, x, *, ppac: Optional[PPACModeConfig] = None,
     if isinstance(w, QuantContainer):  # resident quantized weight
         y = serve_dense(x, w, act_bits=ppac.act_bits if ppac else 8,
                         act_format=ppac.act_format if ppac else "int",
-                        backend=ppac.backend if ppac else "mxu")
+                        backend=ppac.backend if ppac else "mxu",
+                        rung="draft" if mode == "draft" else "target")
     elif use_ppac and mode == "qat":
         y = qat_dense(x, w, weight_bits=ppac.weight_bits,
                       act_bits=ppac.act_bits,
@@ -66,7 +70,8 @@ def dense_apply(p, x, *, ppac: Optional[PPACModeConfig] = None,
     return y
 
 
-def grouped_dense_apply(p, x, *, ppac: Optional[PPACModeConfig] = None):
+def grouped_dense_apply(p, x, *, ppac: Optional[PPACModeConfig] = None,
+                        mode: str = "serve"):
     """Serving fast path for a fused projection group: one resident
     container covers several same-input projections (wq/wk/wv, wi/wg);
     returns the tuple of member outputs. Only exists post-conversion —
@@ -76,7 +81,8 @@ def grouped_dense_apply(p, x, *, ppac: Optional[PPACModeConfig] = None):
     return serve_dense_grouped(x, w,
                                act_bits=ppac.act_bits if ppac else 8,
                                act_format=ppac.act_format if ppac else "int",
-                               backend=ppac.backend if ppac else "mxu")
+                               backend=ppac.backend if ppac else "mxu",
+                               rung="draft" if mode == "draft" else "target")
 
 
 # -- norm --------------------------------------------------------------------
@@ -145,7 +151,7 @@ def mlp_init(key, d: int, d_ff: int):
 def mlp_apply(p, x, cfg: ModelConfig, *, mode: str = "float"):
     dtype = jnp.dtype(cfg.dtype)
     if "wig" in p:  # fused up+gate group (serving fast path)
-        h, g = grouped_dense_apply(p["wig"], x, ppac=cfg.ppac)
+        h, g = grouped_dense_apply(p["wig"], x, ppac=cfg.ppac, mode=mode)
     else:
         h = dense_apply(p["wi"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)
         g = dense_apply(p["wg"], x, ppac=cfg.ppac, mode=mode, dtype=dtype)

@@ -115,12 +115,12 @@ def _dense_block_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
 
 def _dense_block_apply(p, x, cfg, *, positions, cache=None, pos=None,
                        lengths=None, mode="float", rules=None, table=None,
-                       history=False):
+                       history=False, verify=False):
     h = rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
     att, new_cache = _attn_apply(p["attn"], h, cfg, positions=positions,
                                  cache=cache, pos=pos, lengths=lengths,
                                  mode=mode, rules=rules, table=table,
-                                 history=history)
+                                 history=history, verify=verify)
     x = x + att
     x = constrain(x, rules, "batch", "seq", None) if rules else x
     h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
@@ -140,12 +140,12 @@ def _moe_block_init(key, cfg: ModelConfig):
 
 def _moe_block_apply(p, x, cfg, *, positions, cache=None, pos=None,
                      lengths=None, mode="float", rules=None, table=None,
-                     history=False):
+                     history=False, verify=False):
     h = rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
     att, new_cache = _attn_apply(p["attn"], h, cfg, positions=positions,
                                  cache=cache, pos=pos, lengths=lengths,
                                  mode=mode, rules=rules, table=table,
-                                 history=history)
+                                 history=history, verify=verify)
     x = x + att
     x = constrain(x, rules, "batch", "seq", None) if rules else x
     h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
@@ -162,7 +162,8 @@ def _ssm_block_init(key, cfg: ModelConfig):
 
 def _ssm_block_apply(p, x, cfg, *, positions=None, cache=None, pos=None,
                      lengths=None, mode="float", rules=None, table=None,
-                     history=False):
+                     history=False, verify=False):
+    assert not verify, "SSM blocks have no token-indexed cache to verify into"
     h = rmsnorm_apply(p["ln"], x, eps=cfg.norm_eps, dtype=jnp.dtype(cfg.dtype))
     y, new_cache = ssm_mod.mamba2_apply(p["mamba"], h, cfg, cache=cache,
                                         mode=mode)
@@ -232,7 +233,7 @@ def _embed_inputs(params, cfg: ModelConfig, batch, rules=None):
 
 def _run_layers(params, cfg: ModelConfig, h, *, positions, caches=None,
                 pos=None, lengths=None, mode="float", rules=None,
-                layer_offset=0, table=None, history=False):
+                layer_offset=0, table=None, history=False, verify=False):
     """Scan (or unroll, for hybrid) the stacked blocks; returns
     (h, new_caches, aux). ``table`` (paged caches) is shared by every
     layer, so it rides as a closure capture, not a scan input."""
@@ -248,7 +249,7 @@ def _run_layers(params, cfg: ModelConfig, h, *, positions, caches=None,
             lp, lc = xs
         hh, nc, a2 = bapply(lp, hh, cfg, positions=positions, cache=lc,
                             pos=pos, lengths=lengths, mode=mode, rules=rules,
-                            table=table, history=history)
+                            table=table, history=history, verify=verify)
         ax = {k: ax[k] + a2[k] for k in ax}
         return (hh, ax), (nc if caches is not None else 0)
 
@@ -554,10 +555,96 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, *,
 
 
 def _moe_or_dense_decode(lp, h, cfg, positions, lc, pos, mode, rules, *,
-                         dense: bool, table=None):
+                         dense: bool, table=None, verify=False):
     if dense:
         return _dense_block_apply(lp, h, cfg, positions=positions, cache=lc,
                                   pos=pos, mode=mode, rules=rules,
-                                  table=table)
+                                  table=table, verify=verify)
     return _moe_block_apply(lp, h, cfg, positions=positions, cache=lc,
-                            pos=pos, mode=mode, rules=rules, table=table)
+                            pos=pos, mode=mode, rules=rules, table=table,
+                            verify=verify)
+
+
+def verify(params, cfg: ModelConfig, tokens, cache, *, mode: str = "float",
+           rules: Optional[ShardingRules] = None):
+    """Speculative-verify forward: tokens [B,S] at per-sequence positions
+    ``pos + i`` -> (logits [B,S,V] fp32 at EVERY row, cache).
+
+    Row ``i`` runs the exact decode-step compute at position ``pos + i``
+    (decode's einsums, masks and KV quantization — see the ``verify``
+    branches in models.attention), so its logits bit-match the decode
+    step that would consume ``tokens[:, i]`` there. All S rows' target-
+    rung K/V are written to the cache and ``pos`` advances by S; the
+    caller rewinds ``pos`` to the accepted prefix (linear/paged caches
+    need nothing else — rows past ``pos`` sit beyond every mask and are
+    overwritten later; ring caches additionally need
+    :func:`rollback_ring_cache`). Writes past a paged slot's allocation
+    hit the table's out-of-range sentinel and drop."""
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError("speculative verify needs a token-indexed cache; "
+                         "SSM/hybrid recurrent state cannot rewind")
+    caches, pos, table = _split_pos(cache)
+    h = embed_apply(params["embed"], tokens, dtype=jnp.dtype(cfg.dtype))
+    b, s = tokens.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    new = dict(cache)
+    if "dense_layers" in params:
+        ncs = []
+        for i in range(jax.tree.leaves(params["dense_layers"])[0].shape[0]):
+            lp = jax.tree.map(lambda t: t[i], params["dense_layers"])
+            lc = jax.tree.map(lambda t: t[i], caches["dense_layers"])
+            h, nc, _ = _moe_or_dense_decode(lp, h, cfg, positions, lc, pos,
+                                            mode, rules, dense=True,
+                                            table=table, verify=True)
+            ncs.append(nc)
+        new["dense_layers"] = jax.tree.map(lambda *t: jnp.stack(t), *ncs)
+    h, ncaches, _ = _run_layers(params, cfg, h, positions=positions,
+                                caches={k: caches[k] for k in ("layers", "shared")
+                                        if k in caches},
+                                pos=pos, mode=mode, rules=rules, table=table,
+                                verify=True)
+    new.update(ncaches)
+    h = rmsnorm_apply(params["final_norm"], h, eps=cfg.norm_eps,
+                      dtype=jnp.dtype(cfg.dtype))
+    if cfg.tie_embeddings:
+        logits = unembed_apply(params["embed"], h, dtype=jnp.dtype(cfg.dtype))
+    else:
+        logits = dense_apply(params["lm_head"], h,
+                             dtype=jnp.dtype(cfg.dtype)).astype(jnp.float32)
+    new["pos"] = pos + s
+    return logits, new
+
+
+def rollback_ring_cache(cfg: ModelConfig, prev, cache, start, new_pos,
+                        window: int):
+    """Undo a ring cache's rejected verify rows.
+
+    A verify over rows ``start + i`` scattered ALL its window's rows into
+    the ring (slot ``(start+i) % t``); rows at positions >= ``new_pos``
+    (the accepted end) were rejected, and — unlike linear/paged caches,
+    where stale rows sit beyond every mask — their slots must get their
+    pre-round content back (``prev``, the cache snapshot from before
+    drafting: draft-rung KV writes polluted the same slots). Restores
+    every KV leaf's rejected slots and sets ``pos = new_pos``.
+    """
+    start = jnp.asarray(start, jnp.int32)
+    new_pos = jnp.asarray(new_pos, jnp.int32)
+    b = start.shape[0]
+    s = window
+    row = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # [B,S]
+    bi = jnp.arange(b)[:, None]
+
+    def one(pv, nv):
+        if pv.ndim < 4:          # pos [B] / table [B,n] leaves
+            return nv
+        t = pv.shape[2]
+        slot = row % t
+        # restore-only-rejected: kept rows route to the OOB slot and drop
+        idx = jnp.where(row < new_pos[:, None], t, slot)
+        rows = pv[:, bi, slot]                       # [L,B,S,...] pre-round
+        return nv.at[:, bi, idx].set(rows, mode="drop")
+
+    out = jax.tree.map(one, prev, dict(cache))
+    out["pos"] = new_pos
+    return out

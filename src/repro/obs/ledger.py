@@ -77,6 +77,12 @@ class LaunchRecord:
     dur_s: float = 0.0          # host-side dispatch duration
     plan: Optional[Dict[str, Any]] = None   # resolved tile blocks + grid
     traced: bool = False        # recorded during jit tracing (per compile)
+    phase: str = ""             # speculative phase tag: 'draft' | 'verify'
+    window: int = 0             # tokens covered by the launch's batch dim
+    #   (a batched verify over k+1 drafted positions is otherwise
+    #   indistinguishable from a decode step of the same shape; the
+    #   window lets ledger replays split draft from verify cycles
+    #   *per token*: cycles / (batch / window) / window)
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -149,13 +155,50 @@ def record_launch(mode: str, backend: str, *, batch: int, m_rows: int,
     """Append one launch to every open ledger (each costed under that
     ledger's own array config)."""
     t0 = time.perf_counter() if t_start is None else t_start
+    ph, win = current_phase()
     for led in _ledgers():
-        led.records.append(record_for(
+        rec = record_for(
             mode, backend, batch=batch, m_rows=m_rows, n_bits=n_bits,
             k_bits=k_bits, l_bits=l_bits, k=k, x_shape=x_shape,
             a_shape=a_shape, config=led.config,
             parallel_arrays=led.parallel_arrays, t_start=t0, dur_s=dur_s,
-            plan=plan, traced=traced))
+            plan=plan, traced=traced)
+        rec.phase, rec.window = ph, win
+        led.records.append(rec)
+
+
+class phase:
+    """Tag launches with a speculative phase while the context is open.
+
+    Works both eagerly and at jit-trace time (the tag is ambient Python
+    state, read when the record is constructed — i.e. when the traced
+    computation is *staged*, which is exactly when traced records are
+    emitted):
+
+        with ledger.phase("verify", window=k + 1):
+            logits, cache = lm.verify(...)
+    """
+
+    def __init__(self, tag: str, *, window: int = 1):
+        self.tag = tag
+        self.window = int(window)
+
+    def __enter__(self):
+        st = getattr(_TLS, "phases", None)
+        if st is None:
+            st = _TLS.phases = []
+        st.append((self.tag, self.window))
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        _TLS.phases.pop()
+        return False
+
+
+def current_phase() -> Tuple[str, int]:
+    """(tag, window) of the innermost open phase ('', 0 outside any)."""
+    st = getattr(_TLS, "phases", None)
+    return st[-1] if st else ("", 0)
 
 
 def note_plan(plan) -> None:
@@ -264,6 +307,20 @@ class Ledger:
             agg["cycles"] += r.cycles
             agg["tile_ops"] += r.tile_ops
             agg["energy_nj"] += r.energy_nj
+        return out
+
+    def by_phase(self) -> Dict[str, dict]:
+        """Aggregate by speculative phase tag ('' for untagged launches).
+        ``tokens`` sums each launch's window (the decoded positions the
+        launch covers), so draft and verify cycles divide out per token."""
+        out: Dict[str, dict] = {}
+        for r in self.records:
+            agg = out.setdefault(r.phase, dict(launches=0, cycles=0,
+                                               energy_nj=0.0, tokens=0))
+            agg["launches"] += 1
+            agg["cycles"] += r.cycles
+            agg["energy_nj"] += r.energy_nj
+            agg["tokens"] += r.window
         return out
 
     def summary(self) -> dict:

@@ -20,6 +20,7 @@ K·L accounting aggregated over every projection of a step).
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -106,6 +107,17 @@ def make_decode_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None,
 
 # -- fused sampling ------------------------------------------------------------
 
+def _scale_logits(logits, *, temperature: float, top_k: int):
+    """Sampling pre-scale: temperature division + optional top-k mask.
+    Shared by the fused sampler and speculative accept/reject, which must
+    see the *same* distributions the sampler draws from."""
+    scaled = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    return scaled
+
+
 def sample_tokens(logits, key, *, temperature: float = 0.0, top_k: int = 0):
     """logits [B,V] -> tokens [B] int32, on device.
 
@@ -115,10 +127,7 @@ def sample_tokens(logits, key, *, temperature: float = 0.0, top_k: int = 0):
     compiled program, fused into the decode step / scan body."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    scaled = logits.astype(jnp.float32) / temperature
-    if top_k:
-        kth = lax.top_k(scaled, top_k)[0][..., -1:]
-        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    scaled = _scale_logits(logits, temperature=temperature, top_k=top_k)
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
@@ -276,7 +285,248 @@ def generate_scan(params, cfg: ModelConfig, batch, *, steps: int,
     gen = make_generate_scan(cfg, steps=steps, rules=rules, mode=mode,
                              temperature=temperature, top_k=top_k)
     logits, cache = prefill(params, batch, cache)
-    key = jax.random.PRNGKey(0) if key is None else key
+    key = _default_key(key, temperature, "generate_scan")
+    toks, cache = gen(params, logits, cache, key)
+    return (toks, cache) if return_cache else toks
+
+
+def _default_key(key, temperature: float, where: str):
+    """PRNG-key hygiene for the generation entry points: greedy decoding
+    never consumes the key, but at ``temperature > 0`` a silently shared
+    default key makes every call return identical samples — warn loudly
+    instead of handing back deterministic 'randomness'."""
+    if key is not None:
+        return key
+    if temperature > 0.0:
+        warnings.warn(
+            f"{where}: temperature={temperature} > 0 with no PRNG key — "
+            "falling back to jax.random.PRNGKey(0), so every call returns "
+            "IDENTICAL samples. Pass an explicit key= to sample.",
+            stacklevel=3)
+    return jax.random.PRNGKey(0)
+
+
+# -- self-speculative decoding on the precision ladder -------------------------
+#
+# The same resident QuantContainer serves two rungs of the paper's
+# precision ladder: the packed1 rung (one 8-cycle XNOR pass, §III-C) and
+# the multi-bit target rung (K·L bit-plane-pair passes, e.g. 8x that for
+# packed4/int8 inputs). A speculative round drafts k tokens with the cheap
+# rung via
+# the existing fused decode scan, then verifies all k+1 positions in ONE
+# batched target-rung launch — the fused kernels are batch-oblivious, so
+# verification prices like a single wide MVP, not k+1 decode steps — and
+# accepts the longest matching prefix on device. Greedy outputs are
+# bit-identical to target-rung-only decoding; at temperature > 0 the
+# standard speculative rejection-sampling rule keeps the output
+# distribution exactly the target rung's.
+
+
+def _spec_round(params, cfg, tok, cache, key, *, draft_k: int, mode: str,
+                rules, temperature: float, top_k: int):
+    """One fused draft -> verify -> accept round.
+
+    tok: [B] pending tokens (already emitted; logits not yet computed) at
+    positions ``cache['pos']``. Returns ``(emitted [B, draft_k+1],
+    n_emit [B] in [1, draft_k+1], cache)``: ``emitted[:, :n_emit]`` are
+    this round's new tokens and ``emitted[b, n_emit[b]-1]`` the next
+    pending token. The draft phase runs on a functional branch of the
+    cache (its packed1-rung KV writes are discarded); verify writes all
+    k+1 positions' target-rung KV and the accept step rewinds ``pos`` to
+    the accepted prefix (ring caches also restore rejected slots).
+    """
+    b = tok.shape[0]
+    k = draft_k
+    start = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), (b,))
+    kd, ka, kc = jax.random.split(key, 3)
+
+    draft_toks = draft_scaled = None
+    if k:
+        def dbody(carry, ks):
+            t, c = carry
+            with _flight.phase("draft", window=1):
+                logits, c = lm.decode_step(params, cfg, t[:, None], c,
+                                           mode="draft", rules=rules)
+            lg = logits[:, -1]
+            if temperature <= 0.0:
+                nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                return (nxt, c), (nxt, lg)
+            sc = _scale_logits(lg, temperature=temperature, top_k=top_k)
+            nxt = jax.random.categorical(ks, sc, axis=-1).astype(jnp.int32)
+            return (nxt, c), (nxt, sc)
+
+        _, (dt, dsc) = lax.scan(dbody, (tok, cache),
+                                jax.random.split(kd, k))
+        draft_toks = jnp.moveaxis(dt, 0, 1)          # [B, k]
+        draft_scaled = jnp.moveaxis(dsc, 0, 1)       # [B, k, V]
+        window = jnp.concatenate([tok[:, None], draft_toks], axis=1)
+    else:
+        window = tok[:, None]
+
+    with _flight.phase("verify", window=k + 1):
+        vlogits, vcache = lm.verify(params, cfg, window, cache, mode=mode,
+                                    rules=rules)
+
+    if temperature <= 0.0:
+        # exact greedy match: accept drafts while d_j == argmax(p_{j-1})
+        g = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)   # [B, k+1]
+        if k:
+            match = (draft_toks == g[:, :k]).astype(jnp.int32)
+            a = jnp.sum(jnp.cumprod(match, axis=1), axis=1)  # [B] in [0,k]
+        else:
+            a = jnp.zeros((b,), jnp.int32)
+        correction = jnp.take_along_axis(g, a[:, None], axis=1)
+    else:
+        vsc = _scale_logits(vlogits, temperature=temperature, top_k=top_k)
+        p = jax.nn.softmax(vsc, axis=-1)                     # [B, k+1, V]
+        if k:
+            q = jax.nn.softmax(draft_scaled, axis=-1)        # [B, k, V]
+            pd = jnp.take_along_axis(p[:, :k], draft_toks[..., None],
+                                     axis=-1)[..., 0]        # p_{j-1}(d_j)
+            qd = jnp.take_along_axis(q, draft_toks[..., None],
+                                     axis=-1)[..., 0]        # q_{j-1}(d_j)
+            u = jax.random.uniform(ka, (b, k))
+            acc = (u * qd < pd).astype(jnp.int32)            # u < p/q
+            a = jnp.sum(jnp.cumprod(acc, axis=1), axis=1)
+            q_ext = jnp.concatenate(
+                [q, jnp.zeros_like(p[:, :1])], axis=1)       # bonus: q = 0
+        else:
+            a = jnp.zeros((b,), jnp.int32)
+            q_ext = jnp.zeros_like(p)
+        # first rejected (or bonus) slot: sample the residual max(p-q, 0)
+        p_row = jnp.take_along_axis(p, a[:, None, None], axis=1)[:, 0]
+        q_row = jnp.take_along_axis(q_ext, a[:, None, None], axis=1)[:, 0]
+        r = jnp.maximum(p_row - q_row, 0.0)
+        tot = jnp.sum(r, axis=-1, keepdims=True)
+        r = jnp.where(tot > 0.0, r, p_row)    # p <= q pointwise: fall back
+        correction = jax.random.categorical(
+            kc, jnp.log(r), axis=-1).astype(jnp.int32)[:, None]
+
+    n_emit = a + 1
+    if k:
+        ext_d = jnp.concatenate(
+            [draft_toks, jnp.zeros((b, 1), jnp.int32)], axis=1)
+        emitted = jnp.where(
+            jnp.arange(k + 1, dtype=jnp.int32)[None, :] == a[:, None],
+            correction, ext_d)
+    else:
+        emitted = correction
+
+    new_pos = start + n_emit
+    if cfg.sliding_window and "table" not in cache:
+        # ring caches: rejected verify rows landed in slots whose old
+        # content is still in-window for later steps — restore them from
+        # the pre-round snapshot (the functional `cache` value)
+        vcache = lm.rollback_ring_cache(cfg, cache, vcache, start, new_pos,
+                                        k + 1)
+    else:
+        vcache = dict(vcache)
+        vcache["pos"] = new_pos
+    return emitted, n_emit, vcache
+
+
+@_maybe_cached
+def _speculative_decode_step_cached(cfg, rules, mode, draft_k, temperature,
+                                    top_k, donate):
+    def step(params, tok, cache, key):
+        return _spec_round(params, cfg, tok, cache, key, draft_k=draft_k,
+                           mode=mode, rules=rules, temperature=temperature,
+                           top_k=top_k)
+    return jax.jit(step, donate_argnums=(2,) if donate else ())
+
+
+def make_speculative_decode_step(cfg: ModelConfig,
+                                 rules: Optional[ShardingRules] = None,
+                                 mode: str = "float", *, draft_k: int = 4,
+                                 temperature: float = 0.0, top_k: int = 0,
+                                 donate: bool = True):
+    """(params, tok [B], cache, key) -> (emitted [B, k+1], n_emit [B],
+    cache) — one speculative round as a single fused, cache-donating
+    dispatch, the continuous-batching server's unit of work under
+    ``--spec-decode``: the host pays one dispatch and retires up to
+    ``draft_k + 1`` tokens per slot (variable per round, ``n_emit``)."""
+    return _speculative_decode_step_cached(cfg, rules, mode, draft_k,
+                                           temperature, top_k, donate)
+
+
+@_maybe_cached
+def _speculative_scan_cached(cfg, steps, draft_k, rules, mode, temperature,
+                             top_k, donate):
+    width = steps + draft_k + 1
+
+    def gen(params, logits, cache, key):
+        key, k0 = jax.random.split(key)
+        tok0 = sample_tokens(logits[:, -1], k0, temperature=temperature,
+                             top_k=top_k)
+        b = tok0.shape[0]
+        out = jnp.zeros((b, width), jnp.int32).at[:, 0].set(tok0)
+        off = jnp.ones((b,), jnp.int32)
+
+        def cond(carry):
+            return jnp.min(carry[4]) < steps
+
+        def body(carry):
+            tok, cache, key, out, off = carry
+            key, kr = jax.random.split(key)
+            emitted, n_emit, cache = _spec_round(
+                params, cfg, tok, cache, kr, draft_k=draft_k, mode=mode,
+                rules=rules, temperature=temperature, top_k=top_k)
+            idx = jnp.arange(draft_k + 1, dtype=jnp.int32)[None, :]
+            col = jnp.where(idx < n_emit[:, None], off[:, None] + idx,
+                            width)                   # rejected/past: drop
+            out = out.at[jnp.arange(b)[:, None], col].set(emitted,
+                                                          mode="drop")
+            tok = jnp.take_along_axis(emitted, (n_emit - 1)[:, None],
+                                      axis=1)[:, 0]
+            return (tok, cache, key, out, off + n_emit)
+
+        _, cache, _, out, _ = lax.while_loop(cond, body,
+                                             (tok0, cache, key, out, off))
+        return out[:, :steps], cache
+    return jax.jit(gen, donate_argnums=(2,) if donate else ())
+
+
+def make_speculative_scan(cfg: ModelConfig, *, steps: int, draft_k: int = 4,
+                          rules: Optional[ShardingRules] = None,
+                          mode: str = "float", temperature: float = 0.0,
+                          top_k: int = 0, donate: bool = True):
+    """One on-device program for a speculative generation tail.
+
+    (params, logits [B,1,V], cache, key) -> (tokens [B, steps], cache):
+    samples the first token from the prefill logits, then loops
+    draft(k, packed1 rung) -> verify(k+1, one batched target launch) ->
+    accept rounds in a ``lax.while_loop`` until every sequence holds
+    ``steps`` tokens. Fixed shapes throughout: each round scatters its
+    variable-length accepted prefix into the [B, steps + k + 1] output
+    buffer (rejected slots route out of range and drop). The cache is
+    donated and loop-carried; outputs match :func:`make_generate_scan`
+    on the target rung exactly (bit-identical at temperature 0,
+    distribution-identical above)."""
+    return _speculative_scan_cached(cfg, steps, draft_k, rules, mode,
+                                    temperature, top_k, donate)
+
+
+def speculative_generate(params, cfg: ModelConfig, batch, *, steps: int,
+                         max_seq: int, draft_k: int = 4,
+                         mode: str = "float", temperature: float = 0.0,
+                         top_k: int = 0, key=None,
+                         rules: Optional[ShardingRules] = None,
+                         return_cache: bool = False):
+    """Device-resident speculative generation: prefill + one fused
+    draft/verify/accept loop. Drop-in for :func:`generate_scan` — same
+    [B, steps] output (bit-identical at temperature 0), fewer target-rung
+    sequential steps when the packed1 drafts keep being accepted."""
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError("speculative decoding needs a token-indexed KV "
+                         "cache; SSM/hybrid state cannot rewind")
+    b = jax.tree.leaves(batch)[0].shape[0]
+    cache, _ = lm.init_cache(cfg, b, max_seq)
+    prefill = make_prefill_step(cfg, rules, mode)
+    gen = make_speculative_scan(cfg, steps=steps, draft_k=draft_k,
+                                rules=rules, mode=mode,
+                                temperature=temperature, top_k=top_k)
+    logits, cache = prefill(params, batch, cache)
+    key = _default_key(key, temperature, "speculative_generate")
     toks, cache = gen(params, logits, cache, key)
     return (toks, cache) if return_cache else toks
 
@@ -293,7 +543,8 @@ _PPAC_GROUPS = (("wqkv", ("wq", "wk", "wv")), ("wig", ("wi", "wg")))
 
 def convert_params_for_serving(params, cfg: ModelConfig, *,
                                group: bool = True,
-                               store_shadow: Optional[bool] = None):
+                               store_shadow: Optional[bool] = None,
+                               draft: bool = False):
     """Replace large projection weights with resident PPAC containers.
 
     Only 2-D weight leaves under eligible projection names are converted
@@ -309,6 +560,12 @@ def convert_params_for_serving(params, cfg: ModelConfig, *,
     channel). ``group=False`` keeps the per-projection layout, e.g. for
     sharding-spec trees that must mirror the init-time param structure.
     ``store_shadow`` forwards to :func:`pack_weight_for_serving`.
+
+    With ``draft`` each multi-bit container also carries a resident
+    packed1 (binarized) rung of the SAME weight — the cheap end of the
+    precision ladder — enabling self-speculative decoding
+    (:func:`make_speculative_scan`) with zero extra conversions at serve
+    time.
     """
     ppac = cfg.ppac
     if not ppac.enabled:
@@ -317,7 +574,7 @@ def convert_params_for_serving(params, cfg: ModelConfig, *,
     pack = functools.partial(pack_weight_for_serving,
                              weight_bits=ppac.weight_bits,
                              weight_format=ppac.weight_format,
-                             store_shadow=store_shadow)
+                             store_shadow=store_shadow, draft=draft)
 
     def eligible(leaf):
         ndim = getattr(leaf, "ndim", 0)

@@ -1,0 +1,269 @@
+"""Self-speculative decoding on the precision ladder: the multi-token
+verify forward must be bit-identical to sequential decode, greedy spec
+output bit-identical to target-rung-only generation (contiguous, ring,
+and paged caches), accept rate exactly 1.0 when the drafter IS the
+target, and ring rollback must restore rejected slots after a mid-window
+rejection."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import load_arch
+from repro.models import lm
+from repro.serve.step import (
+    _spec_round,
+    convert_params_for_serving,
+    generate_scan,
+    make_prefill_step,
+    speculative_generate,
+)
+
+
+def _tokens(rng, cfg, b, s):
+    return jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+
+
+def _quant_cfg(arch, wb):
+    cfg = load_arch(arch).smoke()
+    return dataclasses.replace(
+        cfg, ppac=dataclasses.replace(cfg.ppac, enabled=True,
+                                      weight_bits=wb, act_bits=8,
+                                      min_features=32))
+
+
+# -- the verify forward: one batched launch == k+1 sequential steps -----------
+
+def test_verify_logits_match_sequential_decode(rng):
+    """lm.verify over a k+1 window must reproduce the per-step decode
+    logits bit-exactly — same einsums, same mask ordering — and advance
+    pos by the window length."""
+    cfg = dataclasses.replace(load_arch("smollm_360m").smoke(),
+                              dtype="float32")
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cache, _ = lm.init_cache(cfg, 2, 32)
+    _, cache = lm.prefill(params, cfg, {"tokens": _tokens(rng, cfg, 2, 6)},
+                          cache)
+    window = _tokens(rng, cfg, 2, 4)
+
+    seq = []
+    c = cache
+    for j in range(window.shape[1]):
+        lg, c = lm.decode_step(params, cfg, window[:, j:j + 1], c)
+        seq.append(lg[:, -1])
+    ref = jnp.stack(seq, axis=1)
+
+    got, vcache = lm.verify(params, cfg, window, cache)
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+    assert np.array_equal(np.asarray(vcache["pos"]), np.asarray(c["pos"]))
+
+
+def test_verify_rejects_ssm():
+    cfg = load_arch("mamba2_370m").smoke()
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cache, _ = lm.init_cache(cfg, 1, 16)
+    with pytest.raises(ValueError, match="rewind"):
+        lm.verify(params, cfg, jnp.ones((1, 3), jnp.int32), cache)
+
+
+# -- greedy bit-identity across target rungs and cache flavors ----------------
+
+@pytest.mark.parametrize("wb", [0, 4, 8])
+def test_spec_matches_generate_scan_contiguous(rng, wb):
+    """temperature-0 spec output == plain target-rung generate_scan,
+    bit for bit: float target (drafter falls back to the target itself)
+    and packed4/int8 targets drafting with the resident packed1 rung."""
+    if wb == 0:
+        cfg = dataclasses.replace(load_arch("smollm_360m").smoke(),
+                                  dtype="float32")
+        params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+        mode = "float"
+    else:
+        cfg = _quant_cfg("stablelm_12b", wb)
+        params0, _ = lm.init(cfg, jax.random.PRNGKey(0))
+        params = convert_params_for_serving(params0, cfg, draft=True)
+        mode = "serve"
+    batch = {"tokens": _tokens(rng, cfg, 2, 8)}
+    ref = generate_scan(params, cfg, batch, steps=7, max_seq=32, mode=mode)
+    got = speculative_generate(params, cfg, batch, steps=7, max_seq=32,
+                               draft_k=3, mode=mode)
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_spec_matches_generate_scan_ring_wraparound(rng):
+    """Sliding-window ring cache, generating past the ring extent: the
+    rejected-slot rollback must restore superseded rows exactly (the
+    packed1 drafter rejects often on random weights, so mid-window
+    rejections with wrapped positions are exercised for real)."""
+    cfg = _quant_cfg("h2o_danube3_4b", 4)
+    assert cfg.sliding_window
+    params0, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    params = convert_params_for_serving(params0, cfg, draft=True)
+    batch = {"tokens": _tokens(rng, cfg, 2, 8)}
+    ref = generate_scan(params, cfg, batch, steps=14, max_seq=16,
+                        mode="serve")
+    got = speculative_generate(params, cfg, batch, steps=14, max_seq=16,
+                               draft_k=3, mode="serve")
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("spec_kw", [dict(), dict(paged=True, page_size=8)])
+def test_spec_server_matches_plain_server(rng, spec_kw):
+    """The continuous-batching server retires identical outputs with and
+    without --spec-decode (contiguous and paged caches), and tracks
+    per-slot acceptance."""
+    from repro.launch.serve_lm import LMServer, Request
+
+    cfg = _quant_cfg("smollm_360m", 4)
+    params0, _ = lm.init(cfg, jax.random.PRNGKey(1))
+    params = convert_params_for_serving(params0, cfg, draft=True)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(4, 16)))
+               for _ in range(5)]
+
+    def run(**kw):
+        server = LMServer(cfg, params, slots=2, max_seq=64, mode="serve",
+                          **kw)
+        for i, p in enumerate(prompts):
+            server.submit(Request(i, np.asarray(p, np.int32), 7))
+        done = server.run()
+        return {r.rid: r.out for r in done}, server
+
+    ref, _ = run()
+    got, sv = run(spec_decode=True, draft_k=3, **spec_kw)
+    assert ref == got
+    drafted = sv.metrics.counter("lm_spec_tokens_drafted").value
+    accepted = sv.metrics.counter("lm_spec_tokens_accepted").value
+    assert drafted > 0 and 0 <= accepted <= drafted
+    assert sv.metrics.histogram("lm_spec_accept_rate").count > 0
+    # spec rounds retire more tokens per dispatch than they take steps
+    total = sum(len(o) for o in got.values())
+    assert sv.decode_steps < total
+
+
+# -- acceptance: drafter == target must accept everything ---------------------
+
+def test_accept_rate_one_when_drafter_is_target(rng):
+    """Without a resident draft rung the drafter falls back to the target
+    itself: every draft must be accepted (n_emit == draft_k + 1, every
+    round, deterministically)."""
+    cfg = dataclasses.replace(load_arch("smollm_360m").smoke(),
+                              dtype="float32")
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cache, _ = lm.init_cache(cfg, 2, 48)
+    logits, cache = make_prefill_step(cfg, None, "float")(
+        params, {"tokens": _tokens(rng, cfg, 2, 8)}, cache)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    k = 4
+    for _ in range(5):
+        emitted, n_emit, cache = _spec_round(
+            params, cfg, tok, cache, jax.random.PRNGKey(0), draft_k=k,
+            mode="float", rules=None, temperature=0.0, top_k=0)
+        assert np.array_equal(np.asarray(n_emit), [k + 1, k + 1])
+        tok = jnp.asarray(np.asarray(emitted)[:, -1])
+
+
+# -- ring rollback: mid-window rejection must rewind exactly ------------------
+
+def test_ring_rollback_restores_rejected_slots(rng):
+    """Force a mid-window rejection on a wrapped ring cache and check the
+    cache is value-identical to one that never saw the rejected rows:
+    continuing decode from both caches must produce identical tokens."""
+    cfg = dataclasses.replace(load_arch("h2o_danube3_4b").smoke(),
+                              dtype="float32")
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    b, t = 2, 16
+    cache, _ = lm.init_cache(cfg, b, t)
+    _, cache = lm.prefill(params, cfg, {"tokens": _tokens(rng, cfg, b, 14)},
+                          cache)  # pos=14: the 3-row window wraps past 16
+    window = _tokens(rng, cfg, b, 3)
+    _, vcache = lm.verify(params, cfg, window, cache)
+    # pretend only the first row was accepted: rewind to pos + 1
+    new_pos = jnp.asarray(cache["pos"], jnp.int32) + 1
+    rolled = lm.rollback_ring_cache(cfg, cache, vcache,
+                                    jnp.asarray(cache["pos"], jnp.int32),
+                                    new_pos, 3)
+    # reference: decode exactly one step (writes only the accepted row)
+    _, ref = lm.decode_step(params, cfg, window[:, :1], cache)
+    for a, e in zip(jax.tree.leaves(rolled), jax.tree.leaves(ref)):
+        assert np.array_equal(np.asarray(a), np.asarray(e))
+    nxt = _tokens(rng, cfg, b, 1)
+    ga, _ = lm.decode_step(params, cfg, nxt, rolled)
+    ge, _ = lm.decode_step(params, cfg, nxt, ref)
+    assert np.array_equal(np.asarray(ga), np.asarray(ge))
+
+
+# -- sampled decoding ---------------------------------------------------------
+
+def test_spec_sampling_top1_matches_greedy(rng):
+    """temperature > 0 with top_k=1 collapses every distribution to a
+    point mass: rejection sampling must then reproduce greedy spec (and
+    therefore plain greedy generation) exactly."""
+    cfg = dataclasses.replace(load_arch("smollm_360m").smoke(),
+                              dtype="float32")
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": _tokens(rng, cfg, 2, 8)}
+    ref = generate_scan(params, cfg, batch, steps=6, max_seq=32)
+    got = speculative_generate(params, cfg, batch, steps=6, max_seq=32,
+                               draft_k=3, temperature=1.7, top_k=1,
+                               key=jax.random.PRNGKey(3))
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_spec_sampling_deterministic_per_key(rng):
+    cfg = dataclasses.replace(load_arch("smollm_360m").smoke(),
+                              dtype="float32")
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": _tokens(rng, cfg, 2, 8)}
+    kw = dict(steps=6, max_seq=32, draft_k=3, temperature=0.9, top_k=8)
+    a = speculative_generate(params, cfg, batch,
+                             key=jax.random.PRNGKey(5), **kw)
+    b = speculative_generate(params, cfg, batch,
+                             key=jax.random.PRNGKey(5), **kw)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert (np.asarray(a) >= 0).all() and (np.asarray(a) < cfg.vocab).all()
+
+
+# -- satellite: implicit PRNG key must warn, not silently repeat --------------
+
+def test_generate_scan_warns_on_default_key_when_sampling(rng):
+    cfg = dataclasses.replace(load_arch("smollm_360m").smoke(),
+                              dtype="float32")
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": _tokens(rng, cfg, 2, 8)}
+    with pytest.warns(UserWarning, match="IDENTICAL"):
+        generate_scan(params, cfg, batch, steps=3, max_seq=32,
+                      temperature=0.8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # greedy must NOT warn
+        generate_scan(params, cfg, batch, steps=3, max_seq=32)
+
+
+# -- obs: draft/verify phase tags on the ledger -------------------------------
+
+def test_ledger_phases_separate_draft_from_verify_cycles(rng):
+    from repro.obs import Ledger
+
+    cfg = _quant_cfg("stablelm_12b", 4)
+    params0, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    params = convert_params_for_serving(params0, cfg, draft=True)
+    cache, _ = lm.init_cache(cfg, 2, 32)
+    logits, cache = make_prefill_step(cfg, None, "serve")(
+        params, {"tokens": _tokens(rng, cfg, 2, 8)}, cache)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    k = 4
+    with Ledger() as led, jax.disable_jit():
+        _spec_round(params, cfg, tok, cache, jax.random.PRNGKey(0),
+                    draft_k=k, mode="serve", rules=None, temperature=0.0,
+                    top_k=0)
+    ph = led.by_phase()
+    assert set(ph) >= {"draft", "verify"}
+    # the ladder's whole point: k packed1 draft forwards cost (far) fewer
+    # emulated cycles than ONE batched multi-bit verify launch set
+    assert 0 < ph["draft"]["cycles"] < ph["verify"]["cycles"]
+    # window fields: every verify launch covers k+1 tokens, drafts 1
+    recs = [r for r in led.records if r.phase == "verify"]
+    assert recs and all(r.window == k + 1 for r in recs)
+    assert all(r.window == 1 for r in led.records if r.phase == "draft")
