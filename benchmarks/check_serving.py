@@ -36,9 +36,15 @@ Rows are matched on the *typed* JSON fields (``kind`` / ``path`` /
 ``impl`` / ``batch`` / ``phase``); files from before the typed schema
 fall back to name parsing via :func:`benchmarks.run.row_fields`.
 
+A sixth, standalone gate (``--mesh-parity``) runs INSTEAD of the five
+above, over the ``serve_mesh_*`` rows of a multi-device sweep
+(``benchmarks.serving --mesh-bench``): every sharded / disaggregated
+layout must be bit-identical to the single-device baseline and hold
+``--mesh-floor`` x its tok/s at batch 1 (see :func:`check_mesh`).
+
 Usage: python -m benchmarks.check_serving BENCH.json [--tol 1.6]
        [--speedup 1.5] [--gen-speedup 2.0] [--prefix-speedup 2.0]
-       [--spec-speedup 1.3]
+       [--spec-speedup 1.3] | [--mesh-parity [--mesh-floor 0.9]]
 """
 from __future__ import annotations
 
@@ -208,6 +214,50 @@ def check(path: str, *, tol: float = 1.6, speedup: float = 1.5,
     return 1 if failures else 0
 
 
+def check_mesh(path: str, *, floor: float = 0.9) -> int:
+    """Multi-device serving gate over the ``serve_mesh_*`` rows:
+
+    - every sharded/disaggregated layout must have retired bit-identical
+      tokens to the 1x1 baseline (``parity == 1`` — the sweep records
+      token equality, not a tolerance);
+    - at batch 1 each multi-device layout must hold >= ``floor`` x the
+      single-device tok/s. On the CPU smoke runner sharding cannot win,
+      so the gate only forbids pathological dispatch overhead (a handoff
+      or reshard on the decode hot path shows up as a large loss here).
+    """
+    rows = [(n, us, f) for n, us, f in _rows(path)
+            if n.startswith("serve_mesh_")]
+    failures = []
+    if not rows:
+        failures.append("no serve_mesh_* rows — the multi-device serving "
+                        "sweep did not run")
+    base = {f.get("batch"): us for n, us, f in rows
+            if f.get("mesh") == "1x1"}
+    for n, us, f in rows:
+        if f.get("parity") != 1:
+            failures.append(f"{n}: tokens diverged from the single-device "
+                            f"baseline (parity={f.get('parity')})")
+    if rows and 1 not in base:
+        failures.append("no 1x1 batch-1 baseline row to gate tok/s "
+                        "against")
+    for n, us, f in rows:
+        ratio = base[f["batch"]] / us if f.get("batch") in base else None
+        print(f"{n}: {us:.1f}us/tok, {f.get('tok_s')} tok/s"
+              + (f" ({ratio:.2f}x the 1x1 row)" if ratio else "")
+              + (f", handoff {f['handoff_ms']}ms" if "handoff_ms" in f
+                 else ""))
+        if f.get("mesh") == "1x1" or f.get("batch") != 1 or 1 not in base:
+            continue
+        if base[1] / us < floor:
+            failures.append(
+                f"{n}: {f.get('tok_s')} tok/s is below {floor:.2f}x the "
+                f"single-device baseline ({base[1] / us:.2f}x; a sharded "
+                f"layout must not lose more than dispatch overhead at b1)")
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("json_path")
@@ -226,7 +276,17 @@ def main(argv=None) -> int:
     ap.add_argument("--spec-speedup", type=float, default=1.3,
                     help="required speculative-round vs per-token-loop "
                          "speedup (target-rung drafter, accept rate 1.0)")
+    ap.add_argument("--mesh-parity", action="store_true",
+                    help="run ONLY the multi-device gate: serve_mesh_* "
+                         "rows must be bit-identical to 1x1 and hold the "
+                         "--mesh-floor tok/s ratio at batch 1")
+    ap.add_argument("--mesh-floor", type=float, default=0.9,
+                    help="required sharded-vs-single-device tok/s ratio "
+                         "at batch 1 (CPU smoke: guards dispatch "
+                         "overhead, not speedup)")
     args = ap.parse_args(argv)
+    if args.mesh_parity:
+        return check_mesh(args.json_path, floor=args.mesh_floor)
     return check(args.json_path, tol=args.tol, speedup=args.speedup,
                  gen_speedup=args.gen_speedup,
                  prefix_speedup=args.prefix_speedup,

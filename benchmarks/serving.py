@@ -136,6 +136,93 @@ def run():
     rows.extend(_generation_rows(base, params0))
     rows.extend(_spec_rows(base, params0))
     rows.extend(_paged_prefix_rows())
+    rows.extend(_mesh_rows())
+    return rows
+
+
+# multi-device serving sweep: every mesh layout that fits the runtime
+# device count, plus a disaggregated prefill/decode split at >= 4
+# devices. Each layout serves the same prompt set twice through one
+# server (the first pass compiles, the second is timed) and must retire
+# bit-identical greedy tokens to the 1x1 baseline — parity rides in the
+# row and is gated by ``check_serving --mesh-parity``.
+_MESH_BATCHES = (1, 4)
+_MESH_MAX_NEW = 8
+_MESH_PROMPT = 8
+
+
+def _mesh_layouts(ndev):
+    layouts = [("1x1", {})]
+    if ndev >= 2:
+        layouts += [("1x2", dict(mesh=(1, 2))),   # pure TP
+                    ("2x1", dict(mesh=(2, 1)))]   # pure slot-DP
+    if ndev >= 4:
+        layouts += [("2x2", dict(mesh=(2, 2))),
+                    ("disagg_2p2d", dict(prefill_devices=2,
+                                         decode_devices=2))]
+    return layouts
+
+
+def _hist_delta(pre, post, name):
+    """(count, mean-seconds) a histogram gained between two snapshots."""
+    a, b = pre.get(name, {}), post.get(name, {})
+    n = b.get("count", 0) - a.get("count", 0)
+    if n <= 0:
+        return 0, 0.0
+    return n, (b.get("sum", 0.0) - a.get("sum", 0.0)) / n
+
+
+def _mesh_rows():
+    ndev = jax.device_count()
+    if ndev < 2:
+        return []  # single-device runtime: nothing to shard against
+    from repro.launch.serve_lm import LMServer, Request
+    from repro.obs import MetricsRegistry
+
+    base = dataclasses.replace(load_arch("smollm_360m").smoke(),
+                               dtype="float32")
+    params0, _ = lm.init(base, jax.random.PRNGKey(0))
+    cfg, params, mode, _ = _serving_cfg_params(base, params0, 4)
+
+    rows, baseline = [], {}
+    for tag, kw in _mesh_layouts(ndev):
+        for b in _MESH_BATCHES:
+            rng = np.random.default_rng(100 + b)  # same prompts per batch
+            prompts = [rng.integers(0, cfg.vocab, _MESH_PROMPT)
+                       for _ in range(2 * b)]
+            metrics = MetricsRegistry()
+            server = LMServer(cfg, params, slots=b, max_seq=64, mode=mode,
+                              metrics=metrics, **kw)
+
+            def serve_batch(rid0):
+                for i, p in enumerate(prompts):
+                    server.submit(Request(rid0 + i,
+                                          np.asarray(p, np.int32),
+                                          _MESH_MAX_NEW))
+                return server.run()
+
+            serve_batch(0)  # compile + warm
+            pre = metrics.snapshot()
+            t0 = time.perf_counter()
+            done = serve_batch(100)
+            dt = time.perf_counter() - t0
+            toks = {r.rid - 100: tuple(r.out) for r in done}
+            ntok = sum(len(v) for v in toks.values())
+            post = metrics.snapshot()
+
+            if tag == "1x1":
+                baseline[b] = toks
+            extras = dict(mesh=tag, batch=b, devices=ndev,
+                          tok_s=round(ntok / dt, 1),
+                          parity=int(toks == baseline[b]))
+            n, mean_s = _hist_delta(pre, post, "lm_ttft_s")
+            if n:
+                extras["ttft_ms"] = round(mean_s * 1e3, 3)
+            n, mean_s = _hist_delta(pre, post, "lm_handoff_latency")
+            if n:
+                extras["handoff_ms"] = round(mean_s * 1e3, 3)
+            rows.append((f"serve_mesh_{tag}_b{b}", dt / ntok * 1e6,
+                         extras))
     return rows
 
 
@@ -484,7 +571,28 @@ def main(argv=None):
                     help="write the Chrome-trace JSON (Perfetto-loadable)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the telemetry + cycle-report snapshot JSON")
+    ap.add_argument("--mesh-bench", default=None, metavar="PATH",
+                    help="run only the multi-device serve_mesh sweep and "
+                         "write its rows as benchmarks.run-schema JSON "
+                         "(CI runs this under forced-host devices)")
     args = ap.parse_args(argv)
+    if args.mesh_bench:
+        from .run import derived_string
+        rows = _mesh_rows()
+        if not rows:
+            print("mesh bench: single-device runtime — set XLA_FLAGS="
+                  "--xla_force_host_platform_device_count=N", file=sys.stderr)
+            return 1
+        payload = [dict(module="serving", name=name, us_per_call=us,
+                        derived=derived_string(extras), **extras)
+                   for name, us, extras in rows]
+        with open(args.mesh_bench, "w") as f:
+            json.dump(payload, f, indent=2)
+        for name, us, extras in rows:
+            print(f"{name},{us:.1f},{derived_string(extras)}")
+        print(f"wrote {len(payload)} mesh rows to {args.mesh_bench}",
+              file=sys.stderr)
+        return 0
     traced_smoke(arch=args.arch, requests=args.requests,
                  weight_bits=args.weight_bits, slots=args.slots,
                  max_new=args.max_new, trace_out=args.trace_out,

@@ -1,6 +1,17 @@
 """Production meshes. Import must never touch jax device state —
-everything is a function."""
+everything is a function.
+
+``make_serving_mesh`` is the serving entry point: it degrades gracefully
+when the requested shape exceeds the attached devices (CI forced-host
+runs, single-chip dev boxes) by falling back to the largest valid
+submesh with a warning — a mesh mismatch should cost a log line at
+server construction, not an opaque shape error deep inside jit.
+"""
 from __future__ import annotations
+
+import math
+import warnings
+from typing import Sequence, Tuple
 
 import jax
 
@@ -17,3 +28,60 @@ def make_test_mesh(n_data: int = 2, n_model: int = 2, *, pod: int = 0):
     if pod:
         return jax.make_mesh((pod, n_data, n_model), ("pod", "data", "model"))
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def fit_mesh_shape(shape: Sequence[int], n_devices: int) -> Tuple[int, ...]:
+    """Largest valid submesh of ``shape`` that fits ``n_devices``.
+
+    Pure shape arithmetic (no device state) so it unit-tests without a
+    multi-device runtime. Axis sizes only ever shrink (an axis the
+    caller left at 1 stays 1), by repeatedly halving the largest
+    oversized axis — the power-of-two walk every TPU/CI topology uses —
+    until the product fits. Degenerate inputs clamp to 1 per axis.
+    """
+    if n_devices < 1:
+        raise ValueError(f"n_devices={n_devices} must be >= 1")
+    fitted = [max(1, int(s)) for s in shape]
+    while math.prod(fitted) > n_devices:
+        i = max(range(len(fitted)), key=lambda j: fitted[j])
+        if fitted[i] == 1:  # unreachable: prod of all-ones is 1
+            break
+        fitted[i] = max(1, fitted[i] // 2)
+    return tuple(fitted)
+
+
+def parse_mesh_spec(spec: str) -> Tuple[int, ...]:
+    """'2x2' / '1x4' / '2x2x2' -> mesh shape tuple (data, model[, pod-first
+    when 3 axes])."""
+    try:
+        shape = tuple(int(p) for p in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"bad mesh spec {spec!r}: want e.g. '2x2'") from None
+    if not shape or any(s < 1 for s in shape) or len(shape) > 3:
+        raise ValueError(f"bad mesh spec {spec!r}: want 1-3 positive axes")
+    return shape
+
+
+def make_serving_mesh(shape: Sequence[int] = (1, 1), *, devices=None):
+    """Serving mesh over ``('data', 'model')`` (or ``('pod', 'data',
+    'model')`` for 3 axes), clamped to the attached devices.
+
+    When ``prod(shape)`` exceeds the device count, falls back to the
+    largest valid submesh (:func:`fit_mesh_shape`) and warns — callers
+    get a working (possibly smaller) mesh instead of a raise from inside
+    a jitted computation whose error message never mentions devices.
+    ``devices`` narrows the pool to an explicit device list (the
+    disaggregated server carves prefill/decode pools this way).
+    """
+    devs = list(devices) if devices is not None else list(jax.devices())
+    fitted = fit_mesh_shape(shape, len(devs))
+    if fitted != tuple(shape):
+        warnings.warn(
+            f"requested mesh {tuple(shape)} needs {math.prod(shape)} "
+            f"devices but only {len(devs)} are attached; falling back to "
+            f"the largest valid submesh {fitted}", stacklevel=2)
+    axes = ("pod", "data", "model")[-len(fitted):]
+    import numpy as np
+    from jax.sharding import Mesh
+    n = math.prod(fitted)
+    return Mesh(np.asarray(devs[:n]).reshape(fitted), axes)

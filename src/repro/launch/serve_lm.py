@@ -55,23 +55,17 @@ from typing import List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
 from ..configs.base import ModelConfig, load_arch
 from ..models import lm
 from ..obs.metrics import MetricsRegistry
 from ..obs.trace import TraceBuilder, annotate
 from ..retrieval.prefix import PagePrefixIndex
-from ..serve.step import (
-    convert_params_for_serving,
-    make_decode_select_step,
-    make_prefill_select_step,
-    make_speculative_decode_step,
-    sample_tokens,
-    serving_cycle_report,
-)
+from ..serve.step import convert_params_for_serving, serving_cycle_report
 from .bucketed import bucket_for, drain_take
+from .mesh import make_serving_mesh, parse_mesh_spec
 from .paging import PagePool
+from .workers import DisaggExecutor, LocalExecutor
 
 
 @dataclasses.dataclass
@@ -97,7 +91,19 @@ class Request:
 
 
 class LMServer:
-    """Slot-based continuous batching over a resident, donated cache."""
+    """Slot-based continuous batching over a resident, donated cache.
+
+    The server is the *scheduler* half of a scheduler/executor split
+    (``launch/workers.py``): it owns admission, paging, and retirement;
+    every jitted dispatch goes through ``self.ex``. Three layouts:
+
+      * default — :class:`LocalExecutor` on one device (the PR<=8 path),
+      * ``mesh=`` — the same executor with the resident weights TP-
+        sharded and the slot/page cache slot-parallel over the mesh,
+      * ``prefill_devices``/``decode_devices`` — :class:`DisaggExecutor`
+        with disjoint prefill/decode device pools bridged by a
+        ``jax.device_put`` cache handoff.
+    """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_seq: int = 128, mode: str = "float", rules=None,
@@ -109,7 +115,10 @@ class LMServer:
                  paged: bool = False, page_size: int = 16,
                  pool_pages: Optional[int] = None,
                  prefix_cache: bool = False, cache_dtype=None,
-                 spec_decode: bool = False, draft_k: int = 4):
+                 spec_decode: bool = False, draft_k: int = 4,
+                 mesh=None, prefill_devices: int = 0,
+                 decode_devices: int = 0, prefill_workers: int = 0,
+                 decode_mesh_shape=None):
         assert tuple(admit_buckets) == tuple(sorted(admit_buckets))
         if prefill_buckets is None:
             # powers of two up to max_seq (any prompt that leaves room to
@@ -121,7 +130,7 @@ class LMServer:
             prefill_buckets.append(max_seq)
         assert tuple(prefill_buckets) == tuple(sorted(prefill_buckets))
         assert prefill_buckets[-1] <= max_seq
-        self.cfg, self.params, self.mode = cfg, params, mode
+        self.cfg, self.mode = cfg, mode
         self.slots, self.max_seq = slots, max_seq
         self.prefill_buckets = tuple(prefill_buckets)
         self.admit_buckets = tuple(admit_buckets)
@@ -142,17 +151,58 @@ class LMServer:
         self.paged, self.page_size = paged, page_size
         self._cache_dtype = cache_dtype
         ckw = {} if cache_dtype is None else {"dtype": cache_dtype}
-        if paged:
+
+        # family/layout validation happens here, before any executor (and
+        # hence any compile or placement) is built
+        self.spec_decode, self.draft_k = spec_decode, draft_k
+        if paged and cfg.family in ("ssm", "hybrid"):
+            raise ValueError("paged serving needs a token-indexed KV "
+                             "cache; SSM/hybrid state stays contiguous")
+        if spec_decode:
             if cfg.family in ("ssm", "hybrid"):
-                raise ValueError("paged serving needs a token-indexed KV "
-                                 "cache; SSM/hybrid state stays contiguous")
+                raise ValueError("speculative decoding needs a "
+                                 "token-indexed KV cache; SSM/hybrid "
+                                 "state cannot rewind")
+            if paged and cfg.sliding_window:
+                raise ValueError("speculative decoding over a paged ring "
+                                 "cache is unsupported: rejected wrapped "
+                                 "writes cannot be rolled back through "
+                                 "the block table")
+
+        disagg = prefill_devices > 0 or decode_devices > 0
+        if disagg and prefix_cache:
+            raise ValueError("prefix-cache reuse prefills against resident "
+                             "pool history, which disaggregated prefill "
+                             "workers cannot read; drop --prefix-cache or "
+                             "the worker split")
+        if mesh is not None and not hasattr(mesh, "devices"):
+            mesh = make_serving_mesh(tuple(mesh))  # shape tuple -> mesh
+        if disagg:
+            self.ex = DisaggExecutor(
+                cfg, params, prefill_devices=max(prefill_devices, 1),
+                decode_devices=max(decode_devices, 1),
+                prefill_workers=prefill_workers,
+                decode_mesh_shape=decode_mesh_shape, mode=mode,
+                rules=rules, temperature=temperature, top_k=top_k,
+                paged=paged, page_size=page_size, spec_decode=spec_decode,
+                draft_k=draft_k, max_seq=max_seq, cache_dtype=cache_dtype,
+                metrics=self.metrics)
+        else:
+            self.ex = LocalExecutor(
+                cfg, params, mode=mode, rules=rules, mesh=mesh,
+                temperature=temperature, top_k=top_k, paged=paged,
+                spec_decode=spec_decode, draft_k=draft_k, max_seq=max_seq,
+                cache_dtype=cache_dtype, metrics=self.metrics)
+
+        if paged:
             self.extent = lm.paged_extent(cfg, max_seq)
             self.n_pages = self.extent // page_size
             self.pool_pages = (pool_pages if pool_pages is not None
                                else slots * self.n_pages)
-            self.cache, _ = lm.init_cache(cfg, slots, max_seq,
-                                          page_size=page_size,
-                                          pool_pages=self.pool_pages, **ckw)
+            self.cache, caxes = lm.init_cache(cfg, slots, max_seq,
+                                              page_size=page_size,
+                                              pool_pages=self.pool_pages,
+                                              **ckw)
             self.pool = PagePool(self.pool_pages)
             # host mirror of the device block table (sentinel = unmapped)
             self.table_np = np.full((slots, self.n_pages), self.pool_pages,
@@ -164,73 +214,17 @@ class LMServer:
                                      "ring page contents depend on the "
                                      "sequence's own positions")
                 self.prefix = PagePrefixIndex(page_size)
-
-            def table_write(cache, slot_ids, rows):
-                out = dict(cache)
-                out["table"] = cache["table"].at[slot_ids].set(rows)
-                return out
-            self._table_write = jax.jit(table_write, donate_argnums=(0,))
-
-            def copy_page(cache, src, dst):
-                """Copy-on-write: duplicate physical page ``src`` into the
-                private page ``dst`` across every pool leaf, in place."""
-                def leaf(x):
-                    row = lax.dynamic_index_in_dim(x, src, 1, keepdims=False)
-                    return x.at[:, dst].set(row)
-                out = dict(cache)
-                for grp in ("layers", "dense_layers"):
-                    if grp in cache:
-                        out[grp] = jax.tree.map(leaf, cache[grp])
-                return out
-            self._copy_page = jax.jit(copy_page, donate_argnums=(0,))
         else:
             # the resident cache: allocated once, donated through every step
-            self.cache, _ = lm.init_cache(cfg, slots, max_seq, **ckw)
+            self.cache, caxes = lm.init_cache(cfg, slots, max_seq, **ckw)
+        # on a mesh the resident cache shards slot-parallel ('data');
+        # single-device executors return it unchanged
+        self.cache = self.ex.place_cache(self.cache, caxes)
 
-        # one fused decode+select step over all slots, cache donated
-        self._decode = make_decode_select_step(
-            cfg, rules, mode, temperature=temperature, top_k=top_k)
-
-        # speculative mode: one fused draft->verify->accept round per
-        # dispatch retires up to draft_k + 1 tokens per slot
-        self.spec_decode, self.draft_k = spec_decode, draft_k
-        if spec_decode:
-            if cfg.family in ("ssm", "hybrid"):
-                raise ValueError("speculative decoding needs a "
-                                 "token-indexed KV cache; SSM/hybrid "
-                                 "state cannot rewind")
-            if paged and cfg.sliding_window:
-                raise ValueError("speculative decoding over a paged ring "
-                                 "cache is unsupported: rejected wrapped "
-                                 "writes cannot be rolled back through "
-                                 "the block table")
-            self._spec = make_speculative_decode_step(
-                cfg, rules, mode, draft_k=draft_k,
-                temperature=temperature, top_k=top_k)
-
-        # compiles once per (batch-bucket, length-bucket) pair
-        self._prefill = make_prefill_select_step(
-            cfg, rules, mode, temperature=temperature, top_k=top_k,
-            paged=paged)
-        self._prefill_hit = (make_prefill_select_step(
-            cfg, rules, mode, temperature=temperature, top_k=top_k,
-            paged=True, history=True) if paged else None)
-
-        if not paged:
-            def write_slot(cache, src, row, slot):
-                """Copy sequence ``row`` of a prefill cache into ``slot``
-                of the resident cache — on device, resident cache
-                donated."""
-                def leaf(full, one):
-                    if full.ndim == 1:  # per-sequence pos vector
-                        return full.at[slot].set(
-                            lax.dynamic_index_in_dim(one, row, 0,
-                                                     keepdims=False))
-                    r = lax.dynamic_slice_in_dim(one, row, 1, axis=1)
-                    return lax.dynamic_update_slice_in_dim(
-                        full, r.astype(full.dtype), slot, axis=1)
-                return jax.tree.map(leaf, cache, src)
-            self._write = jax.jit(write_slot, donate_argnums=(0,))
+    @property
+    def params(self):
+        """The resident (possibly sharded) weights live on the executor."""
+        return self.ex.params
 
     # -- telemetry -----------------------------------------------------------
 
@@ -303,11 +297,9 @@ class LMServer:
             t0 = time.perf_counter()
             with self._span("prefill_batch", batch=blen, plen=plb,
                             fill=len(grp) / blen):
-                c1, _ = lm.init_cache(self.cfg, blen, self.max_seq)
-                tok0, c1 = self._prefill(self.params, jnp.asarray(toks),
-                                         jnp.asarray(lens), c1,
-                                         self._next_key())
-                tok0 = np.asarray(tok0)
+                tok0, handle = self.ex.prefill(jnp.asarray(toks),
+                                               jnp.asarray(lens),
+                                               self._next_key())
             t1 = time.perf_counter()
             self.admit_batches += 1
             m = self.metrics
@@ -321,8 +313,7 @@ class LMServer:
             m.histogram("lm_admit_fill_ratio").record(len(grp) / blen)
             for i, r in enumerate(grp):
                 s = free.pop(0)
-                self.cache = self._write(self.cache, c1,
-                                         jnp.int32(i), jnp.int32(s))
+                self.cache = self.ex.write_slot(self.cache, handle, i, s)
                 r.out.append(int(tok0[i]))
                 r.first_token_t = t1  # prefill emits the first token
                 if r.submit_t is not None:
@@ -402,8 +393,8 @@ class LMServer:
             if cow:
                 src, dst = mapping[-1], pages.pop(0)
                 mapping[-1] = dst
-                self.cache = self._copy_page(self.cache, jnp.int32(src),
-                                             jnp.int32(dst))
+                self.cache = self.ex.copy_page(self.cache, jnp.int32(src),
+                                               jnp.int32(dst))
                 m.counter("lm_pages_cow").inc()
                 self.pool.incref(matched[:-1])  # still-shared pages only
             else:
@@ -420,7 +411,7 @@ class LMServer:
             self.queue[:0] = bounced
         if plans:
             slot_ids = np.array([p[1] for p in plans], np.int32)
-            self.cache = self._table_write(
+            self.cache = self.ex.table_write(
                 self.cache, jnp.asarray(slot_ids),
                 jnp.asarray(self.table_np[slot_ids]))
             cold = [p for p in plans if p[4] == 0]
@@ -468,15 +459,13 @@ class LMServer:
             starts[i] = s0
             slot_ids[i] = s
             rows[i] = self.table_np[s]
-        fn = self._prefill_hit if history else self._prefill
         t0 = time.perf_counter()
         with self._span("prefill_batch", batch=blen, plen=lenb,
                         fill=len(plans) / blen, history=history):
-            tok0, self.cache = fn(self.params, jnp.asarray(toks),
-                                  jnp.asarray(lens), jnp.asarray(starts),
-                                  jnp.asarray(slot_ids), jnp.asarray(rows),
-                                  self.cache, self._next_key())
-            tok0 = np.asarray(tok0)
+            tok0, self.cache = self.ex.prefill_paged(
+                jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(starts),
+                jnp.asarray(slot_ids), jnp.asarray(rows), self.cache,
+                self._next_key(), history=history)
         t1 = time.perf_counter()
         self.admit_batches += 1
         m = self.metrics
@@ -519,7 +508,7 @@ class LMServer:
             self.table_np[s] = self.pool_pages
         if reclaim:
             sids = np.asarray(reclaim, np.int32)
-            self.cache = self._table_write(
+            self.cache = self.ex.table_write(
                 self.cache, jnp.asarray(sids),
                 jnp.asarray(self.table_np[sids]))
         m.gauge("lm_pool_pages_used").set(self.pool.used_pages)
@@ -540,8 +529,8 @@ class LMServer:
                 toks[s, 0] = r.out[-1]
         t0 = time.perf_counter()
         with self._span("decode_step", occupied=occupied):
-            nxt, self.cache = self._decode(self.params, jnp.asarray(toks),
-                                           self.cache, self._next_key())
+            nxt, self.cache = self.ex.decode(jnp.asarray(toks), self.cache,
+                                             self._next_key())
             nxt = np.asarray(nxt)  # the only host transfer: [S] token ids
         t1 = time.perf_counter()
         self.decode_steps += 1
@@ -587,9 +576,8 @@ class LMServer:
         t0 = time.perf_counter()
         with self._span("spec_round", occupied=occupied,
                         draft_k=self.draft_k):
-            emitted, n_emit, self.cache = self._spec(
-                self.params, jnp.asarray(toks), self.cache,
-                self._next_key())
+            emitted, n_emit, self.cache = self.ex.spec_round(
+                jnp.asarray(toks), self.cache, self._next_key())
             emitted = np.asarray(emitted)  # [S, draft_k+1] token ids
             n_emit = np.asarray(n_emit)    # [S] accepted prefix + 1
         t1 = time.perf_counter()
@@ -733,6 +721,20 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="CAM-matched prefix reuse: map shared prompt "
                          "pages instead of re-prefilling them")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="shard the resident server over a device mesh, "
+                         "e.g. '2x2' (data x model); falls back to the "
+                         "largest valid submesh when fewer devices are "
+                         "attached")
+    ap.add_argument("--prefill-devices", type=int, default=0,
+                    help="disaggregated serving: devices for the prefill "
+                         "worker pool (disjoint from decode)")
+    ap.add_argument("--decode-devices", type=int, default=0,
+                    help="disaggregated serving: devices for the resident "
+                         "decode mesh")
+    ap.add_argument("--prefill-workers", type=int, default=0,
+                    help="split the prefill devices into this many TP "
+                         "workers (default: one worker over all of them)")
     ap.add_argument("--metrics", action="store_true",
                     help="print the telemetry registry (Prometheus text) "
                          "after the run")
@@ -756,12 +758,17 @@ def main():
         mode = "serve"
         report = serving_cycle_report(params, cfg)
 
+    mesh = (make_serving_mesh(parse_mesh_spec(args.mesh))
+            if args.mesh else None)
     server = LMServer(cfg, params, slots=args.slots, max_seq=args.max_seq,
                       mode=mode, temperature=args.temperature,
                       top_k=args.top_k, seed=args.seed, paged=args.paged,
                       page_size=args.page_size, pool_pages=args.pool_pages,
                       prefix_cache=args.prefix_cache,
-                      spec_decode=args.spec_decode, draft_k=args.draft_k)
+                      spec_decode=args.spec_decode, draft_k=args.draft_k,
+                      mesh=mesh, prefill_devices=args.prefill_devices,
+                      decode_devices=args.decode_devices,
+                      prefill_workers=args.prefill_workers)
     rng = np.random.default_rng(0)
     run_and_report(
         server,

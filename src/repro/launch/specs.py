@@ -115,9 +115,9 @@ def build_cell(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
         if not cfg.ppac.enabled:  # serve_quant implies the PPAC engine
             cfg = dataclasses.replace(
                 cfg, ppac=dataclasses.replace(cfg.ppac, enabled=True))
-        # group=False: the sharding-spec tree below mirrors the init-time
-        # param structure; the grouped (wqkv/wig) fast path is a
-        # single-host serving layout
+        # group=False: the dry-run cells mirror the init-time param
+        # structure; the grouped (wqkv/wig) fast path gets its shardings
+        # from serving_param_shardings (the live server's load path)
         pshapes = jax.eval_shape(
             lambda p: convert_params_for_serving(p, cfg, group=False),
             pshapes)
@@ -204,3 +204,51 @@ def _param_shardings(mesh, rules, pshapes, paxes):
     is_ax = lambda x: x is None or (isinstance(x, tuple) and all(
         a is None or isinstance(a, str) for a in x))
     return jax.tree.map(one, paxes, pshapes, is_leaf=is_ax)
+
+
+# grouped serving containers inherit the logical axes of their first
+# member: wqkv concatenates q/k/v along the out dim (heads and kv_heads
+# both map to 'model'), wig concatenates the SwiGLU up/gate pair (both
+# 'mlp') — so member 0's annotation IS the group's annotation, with
+# fit_spec re-checking divisibility at the concatenated width.
+_GROUP_AXES_SOURCE = {"wqkv": "wq", "wig": "wi"}
+
+
+def _group_axes_like(params, axes):
+    """Mirror the runtime param tree's (wqkv/wig) grouping onto the
+    init-time logical-axes tree, so the two stay congruent for
+    ``jax.tree.map``. Keys the axes tree lacks entirely fall back to
+    replicated (None) annotations rather than raising."""
+    if not isinstance(params, dict):
+        return axes
+    out = {}
+    for k, v in params.items():
+        src = axes.get(k) if isinstance(axes, dict) else None
+        if src is None and k in _GROUP_AXES_SOURCE \
+                and isinstance(axes, dict):
+            src = axes.get(_GROUP_AXES_SOURCE[k])
+        if src is None:
+            out[k] = jax.tree.map(
+                lambda _: None, v,
+                is_leaf=lambda x: not isinstance(x, dict))
+        else:
+            out[k] = _group_axes_like(v, src)
+    return out
+
+
+def serving_param_shardings(mesh: Mesh, rules: ShardingRules, params,
+                            cfg: ModelConfig):
+    """NamedShardings for a *converted* serving param tree — the live
+    server's resident layout: grouped ``wqkv``/``wig`` containers,
+    per-projection containers, optional packed1 draft rungs, and the
+    untouched float leaves (embeddings, norms).
+
+    The init-time logical-axes annotations drive everything
+    (:data:`repro.sharding.rules.DEFAULT_RULES` maps them onto the
+    mesh); the grouped containers reuse member 0's annotation and
+    non-divisible dims fall back to replicated via ``fit_spec`` — so a
+    mesh the weights don't fit degrades to replication, never to a
+    shape error."""
+    _, paxes = lm.abstract_init(cfg)
+    paxes = _group_axes_like(params, paxes)
+    return _param_shardings(mesh, rules, params, paxes)

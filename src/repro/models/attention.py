@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..configs.base import ModelConfig
-from ..sharding.rules import constrain
+from ..sharding.rules import constrain, constrain_fitted
 from .layers import (
     dense_apply,
     dense_init,
@@ -653,6 +653,16 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
                                  rules=rules)
     attn = attn.reshape(b, s, h * hd).astype(dtype)
     y = dense_apply(p["wo"], attn, ppac=cfg.ppac, mode=mode, dtype=dtype)
+    if cache is not None and rules is not None:
+        # Pin the updated leaves to the fitted resident-cache placement:
+        # left to propagation, GSPMD pushes the projection shardings onto
+        # the outputs, the output sharding diverges from the donated
+        # input's, and strict aliasing degrades to a buffer donation
+        # (a device-local cache-sized copy every step).
+        cax = ((None, None, "kv_heads", None) if paged
+               else GQA_CACHE_AXES["k"])
+        new_cache = {kk: constrain_fitted(vv, rules, *cax)
+                     for kk, vv in new_cache.items()}
     return y, new_cache
 
 
@@ -822,4 +832,9 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, pos=None,
 
     attn = attn.reshape(b, s, h * dv).astype(dtype)
     y = dense_apply(p["wo"], attn, ppac=cfg.ppac, mode=mode, dtype=dtype)
+    if cache is not None and rules is not None:
+        # Same strict-aliasing contract as the GQA path (see gqa_apply).
+        cax = ((None, None, None) if paged else MLA_CACHE_AXES["kv_c"])
+        new_cache = {kk: constrain_fitted(vv, rules, *cax)
+                     for kk, vv in new_cache.items()}
     return y, new_cache

@@ -79,6 +79,7 @@ class LaunchRecord:
     traced: bool = False        # recorded during jit tracing (per compile)
     phase: str = ""             # speculative phase tag: 'draft' | 'verify'
     window: int = 0             # tokens covered by the launch's batch dim
+    worker: str = ""            # serving worker attribution: 'p0' | 'd0' | ''
     #   (a batched verify over k+1 drafted positions is otherwise
     #   indistinguishable from a decode step of the same shape; the
     #   window lets ledger replays split draft from verify cycles
@@ -156,6 +157,7 @@ def record_launch(mode: str, backend: str, *, batch: int, m_rows: int,
     ledger's own array config)."""
     t0 = time.perf_counter() if t_start is None else t_start
     ph, win = current_phase()
+    wk = current_worker()
     for led in _ledgers():
         rec = record_for(
             mode, backend, batch=batch, m_rows=m_rows, n_bits=n_bits,
@@ -164,6 +166,7 @@ def record_launch(mode: str, backend: str, *, batch: int, m_rows: int,
             parallel_arrays=led.parallel_arrays, t_start=t0, dur_s=dur_s,
             plan=plan, traced=traced)
         rec.phase, rec.window = ph, win
+        rec.worker = wk
         led.records.append(rec)
 
 
@@ -179,15 +182,18 @@ class phase:
             logits, cache = lm.verify(...)
     """
 
-    def __init__(self, tag: str, *, window: int = 1):
+    def __init__(self, tag: str, *, window: int = 1, worker: str = ""):
         self.tag = tag
         self.window = int(window)
+        self.worker = worker
 
     def __enter__(self):
         st = getattr(_TLS, "phases", None)
         if st is None:
             st = _TLS.phases = []
-        st.append((self.tag, self.window))
+        if not self.worker and st:
+            self.worker = st[-1][2]  # nested phases inherit the worker
+        st.append((self.tag, self.window, self.worker))
         return self
 
     def __exit__(self, *exc) -> bool:
@@ -198,7 +204,14 @@ class phase:
 def current_phase() -> Tuple[str, int]:
     """(tag, window) of the innermost open phase ('', 0 outside any)."""
     st = getattr(_TLS, "phases", None)
-    return st[-1] if st else ("", 0)
+    return st[-1][:2] if st else ("", 0)
+
+
+def current_worker() -> str:
+    """Worker tag of the innermost open phase ('' outside any — the
+    single-device server never tags workers)."""
+    st = getattr(_TLS, "phases", None)
+    return st[-1][2] if st else ""
 
 
 def note_plan(plan) -> None:
@@ -307,6 +320,20 @@ class Ledger:
             agg["cycles"] += r.cycles
             agg["tile_ops"] += r.tile_ops
             agg["energy_nj"] += r.energy_nj
+        return out
+
+    def by_worker(self) -> Dict[str, dict]:
+        """Aggregate by serving-worker tag ('' for untagged launches) —
+        the disaggregated server's per-pool cycle/energy attribution
+        (prefill workers vs the resident decoder)."""
+        out: Dict[str, dict] = {}
+        for r in self.records:
+            agg = out.setdefault(r.worker, dict(launches=0, cycles=0,
+                                                energy_nj=0.0, tokens=0))
+            agg["launches"] += 1
+            agg["cycles"] += r.cycles
+            agg["energy_nj"] += r.energy_nj
+            agg["tokens"] += r.window
         return out
 
     def by_phase(self) -> Dict[str, dict]:

@@ -13,6 +13,15 @@ percentiles are bucket-interpolated estimates.
 artifact format); ``prometheus_text()`` renders the registry in the
 Prometheus exposition format (counters, gauges, and summary-style
 quantiles for histograms).
+
+Metrics optionally carry *labels* (``registry.histogram("lm_prefill_s",
+worker="p0", role="prefill")``): each distinct label set is its own
+metric instance, keyed — and snapshotted — under the canonical
+``name{k="v",...}`` rendering, so the multi-device server attributes
+per-worker latency without disturbing the unlabeled aggregate series
+(and their snapshot keys) that single-device consumers read.
+``prometheus_text()`` escapes label values per the exposition format
+(backslash, double quote, newline).
 """
 from __future__ import annotations
 
@@ -119,52 +128,87 @@ class Histogram:
 Metric = Union[Counter, Gauge, Histogram]
 
 
+def escape_label_value(v) -> str:
+    """Prometheus exposition-format label-value escaping: backslash,
+    double quote, and newline must be escaped or a hostile/odd value
+    (a worker id with a quote, a path) corrupts the whole scrape."""
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _render_labels(labels: Dict[str, str]) -> str:
+    """Canonical ``{k="v",...}`` rendering (sorted, escaped); '' if none."""
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{escape_label_value(v)}"'
+                     for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
 class MetricsRegistry:
-    """Name -> metric map with get-or-create accessors."""
+    """Name (+ label set) -> metric map with get-or-create accessors."""
 
     def __init__(self):
         self._metrics: Dict[str, Metric] = {}
+        # key -> (bare name, labels dict) for exposition rendering
+        self._meta: Dict[str, tuple] = {}
 
-    def _get(self, name: str, cls, *args) -> Metric:
-        m = self._metrics.get(name)
+    def _get(self, name: str, cls, labels: Dict[str, str], *args) -> Metric:
+        key = name + _render_labels(labels)
+        m = self._metrics.get(key)
         if m is None:
-            m = self._metrics[name] = cls(*args)
+            m = self._metrics[key] = cls(*args)
+            self._meta[key] = (name, dict(labels))
         assert isinstance(m, cls), \
-            f"metric {name!r} already registered as {type(m).__name__}"
+            f"metric {key!r} already registered as {type(m).__name__}"
         return m
 
-    def counter(self, name: str) -> Counter:
-        return self._get(name, Counter)
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(name, Counter, labels)
 
-    def gauge(self, name: str) -> Gauge:
-        return self._get(name, Gauge)
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(name, Gauge, labels)
 
     def histogram(self, name: str,
-                  bounds: Optional[Sequence[float]] = None) -> Histogram:
-        return self._get(name, Histogram, bounds)
+                  bounds: Optional[Sequence[float]] = None,
+                  **labels) -> Histogram:
+        return self._get(name, Histogram, labels, bounds)
 
     def snapshot(self) -> dict:
-        """Plain nested dict of every metric (JSON-serializable)."""
+        """Plain nested dict of every metric (JSON-serializable).
+        Unlabeled metrics keep their bare-name keys; labeled instances
+        appear under the canonical ``name{k="v"}`` key."""
         return {name: m.snapshot() for name, m in sorted(self._metrics.items())}
 
     def prometheus_text(self) -> str:
         """Prometheus exposition-format dump (histograms as summaries)."""
         lines: List[str] = []
-        for name, m in sorted(self._metrics.items()):
+        typed = set()
+        for key, m in sorted(self._metrics.items()):
+            name, labels = self._meta.get(key, (key, {}))
             pname = re.sub(r"[^a-zA-Z0-9_:]", "_", name)
+            lab = _render_labels(labels)
             if isinstance(m, Counter):
-                lines.append(f"# TYPE {pname} counter")
-                lines.append(f"{pname} {m.value}")
+                if pname not in typed:
+                    lines.append(f"# TYPE {pname} counter")
+                    typed.add(pname)
+                lines.append(f"{pname}{lab} {m.value}")
             elif isinstance(m, Gauge):
-                lines.append(f"# TYPE {pname} gauge")
-                lines.append(f"{pname} {m.value:g}")
-                lines.append(f"{pname}_max {m.max:g}")
+                if pname not in typed:
+                    lines.append(f"# TYPE {pname} gauge")
+                    typed.add(pname)
+                lines.append(f"{pname}{lab} {m.value:g}")
+                lines.append(f"{pname}_max{lab} {m.max:g}")
             else:
-                lines.append(f"# TYPE {pname} summary")
+                if pname not in typed:
+                    lines.append(f"# TYPE {pname} summary")
+                    typed.add(pname)
                 for q in (0.5, 0.9, 0.99):
                     v = m.percentile(q * 100)
                     if v is not None:
-                        lines.append(f'{pname}{{quantile="{q:g}"}} {v:g}')
-                lines.append(f"{pname}_sum {m.total:g}")
-                lines.append(f"{pname}_count {m.count}")
+                        qlab = _render_labels(
+                            dict(labels, quantile=f"{q:g}"))
+                        lines.append(f"{pname}{qlab} {v:g}")
+                lines.append(f"{pname}_sum{lab} {m.total:g}")
+                lines.append(f"{pname}_count{lab} {m.count}")
         return "\n".join(lines) + "\n"

@@ -151,3 +151,28 @@ def constrain(x, rules: ShardingRules, *logical_axes):
         return jax.lax.with_sharding_constraint(x, rules.spec(logical_axes))
     except Exception:
         return x
+
+
+def active_mesh():
+    """The physical mesh of the enclosing ``with mesh:`` block, or None."""
+    try:
+        m = jax.interpreters.pxla.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def constrain_fitted(x, rules: ShardingRules, *logical_axes):
+    """Like :func:`constrain`, but drops mesh axes that do not divide the
+    dimension (mirrors :func:`fit_spec`). Donated buffers only alias
+    strictly when the traced output sharding matches the fitted input
+    placement, so in-place cache updates must constrain with the same
+    divisibility rule the placement used. No-op outside a mesh context."""
+    mesh = active_mesh()
+    if mesh is None or rules is None:
+        return x
+    try:
+        spec = fit_spec(mesh, rules.spec(logical_axes), tuple(x.shape))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

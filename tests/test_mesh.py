@@ -1,0 +1,98 @@
+"""Serving-mesh construction: pure submesh fitting, mesh-spec parsing,
+and the graceful fallback on a real (forced-host) 4-device runtime."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+from conftest import cpu_subproc_env
+
+from repro.launch.mesh import fit_mesh_shape, parse_mesh_spec
+
+
+def test_fit_mesh_shape_identity_when_it_fits():
+    assert fit_mesh_shape((2, 2), 4) == (2, 2)
+    assert fit_mesh_shape((1, 1), 1) == (1, 1)
+    assert fit_mesh_shape((4,), 8) == (4,)
+
+
+def test_fit_mesh_shape_halves_largest_axis():
+    # 16x16 on 4 devices: the power-of-two walk lands on 2x2
+    assert fit_mesh_shape((16, 16), 4) == (2, 2)
+    # asymmetric: the bigger axis gives first
+    assert fit_mesh_shape((8, 2), 4) == (2, 2)
+    assert fit_mesh_shape((2, 8), 4) == (2, 2)
+    # 3-axis pods shrink the same way
+    assert fit_mesh_shape((2, 16, 16), 8) == (2, 2, 2)
+
+
+def test_fit_mesh_shape_clamps_degenerate_inputs():
+    # 3 halves to 1 (the walk stays on the power-of-two lattice)
+    assert fit_mesh_shape((0, 3), 2) == (1, 1)
+    assert fit_mesh_shape((7, 1), 1) == (1, 1)
+    with pytest.raises(ValueError):
+        fit_mesh_shape((2, 2), 0)
+
+
+def test_fit_mesh_shape_axes_only_shrink():
+    # an axis the caller left at 1 must stay 1 (pure-TP and pure-DP
+    # requests keep their meaning after the fallback)
+    for shape in ((1, 8), (8, 1)):
+        fitted = fit_mesh_shape(shape, 4)
+        for orig, new in zip(shape, fitted):
+            assert new <= orig
+        assert fitted[shape.index(1)] == 1
+
+
+def test_parse_mesh_spec():
+    assert parse_mesh_spec("2x2") == (2, 2)
+    assert parse_mesh_spec("1x4") == (1, 4)
+    assert parse_mesh_spec("2X2x2") == (2, 2, 2)
+    assert parse_mesh_spec("4") == (4,)
+    for bad in ("", "2x", "ax2", "2x2x2x2", "0x2", "-1x2"):
+        with pytest.raises(ValueError):
+            parse_mesh_spec(bad)
+
+
+SUBPROC_FALLBACK = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import warnings
+    import jax
+    from repro.launch.mesh import make_serving_mesh
+
+    # exact fit: no warning, requested shape honored
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        mesh = make_serving_mesh((2, 2))
+    assert dict(mesh.shape) == {"data": 2, "model": 2}, mesh.shape
+    assert mesh.axis_names == ("data", "model")
+
+    # oversubscribed: falls back to the largest valid submesh with a
+    # warning instead of raising from inside a jitted computation
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        mesh = make_serving_mesh((8, 8))
+    assert dict(mesh.shape) == {"data": 2, "model": 2}, mesh.shape
+    assert any("largest valid submesh" in str(x.message) for x in w), \\
+        [str(x.message) for x in w]
+
+    # explicit device list narrows the pool (the disaggregated server
+    # carves prefill/decode slices this way)
+    devs = jax.devices()[2:]
+    mesh = make_serving_mesh((1, 2), devices=devs)
+    assert sorted(d.id for d in mesh.devices.ravel()) == \\
+        sorted(d.id for d in devs)
+
+    # 3-axis specs get the pod axis
+    mesh = make_serving_mesh((1, 2, 2))
+    assert mesh.axis_names == ("pod", "data", "model")
+    print("MESH_FALLBACK_OK")
+""")
+
+
+def test_serving_mesh_fallback_4dev():
+    res = subprocess.run([sys.executable, "-c", SUBPROC_FALLBACK],
+                         capture_output=True, text=True, timeout=600,
+                         env=cpu_subproc_env())
+    assert "MESH_FALLBACK_OK" in res.stdout, res.stdout + res.stderr

@@ -177,6 +177,38 @@ def test_metrics_registry_snapshot_and_percentiles():
         m.gauge("reqs")
 
 
+def test_metrics_labels_and_escaping():
+    """Per-worker labels: distinct (name, labels) pairs are distinct
+    metrics, unlabeled names keep their bare snapshot keys, and
+    exposition output escapes hostile label values (a worker id with a
+    quote must not corrupt the whole scrape)."""
+    m = MetricsRegistry()
+    m.counter("lm_worker_dispatches", worker="p0", role="prefill").inc(2)
+    m.counter("lm_worker_dispatches", worker="d0", role="disagg").inc()
+    m.counter("lm_worker_dispatches", worker="p0", role="prefill").inc()
+    m.histogram("lm_handoff_latency").record(0.002)
+    m.histogram("lm_handoff_latency", worker="p0").record(0.002)
+
+    snap = m.snapshot()
+    # canonical sorted-label keys; same labels -> same instance
+    assert snap['lm_worker_dispatches{role="prefill",worker="p0"}'] == 3
+    assert snap['lm_worker_dispatches{role="disagg",worker="d0"}'] == 1
+    # the unlabeled histogram keeps its bare-name key (back-compat)
+    assert snap["lm_handoff_latency"]["count"] == 1
+    assert snap['lm_handoff_latency{worker="p0"}']["count"] == 1
+
+    text = m.prometheus_text()
+    assert 'lm_worker_dispatches{role="prefill",worker="p0"} 3' in text
+    # one TYPE line per metric family, not per labeled instance
+    assert text.count("# TYPE lm_worker_dispatches counter") == 1
+
+    hostile = MetricsRegistry()
+    hostile.counter("c", worker='p"0\\x\n').inc()
+    line = next(l for l in hostile.prometheus_text().splitlines()
+                if l.startswith("c{"))
+    assert line == 'c{worker="p\\"0\\\\x\\n"} 1'
+
+
 def test_trace_export_valid_and_monotonic():
     """Trace output: valid JSON, named tracks, per-track monotonic ts,
     ledger launch events carrying cycles/energy args."""
