@@ -1,7 +1,7 @@
 """CI gate on the serving-benchmark JSON: the zero-repack fast path must
 actually be fast, and scan-fused generation must beat the per-step loop.
 
-Five checks over the ``serving`` rows of a ``benchmarks.run --json`` file:
+Six checks over the ``serving`` rows of a ``benchmarks.run --json`` file:
 
   1. fused <= tol * int8 — the packed containers routed through the PPAC
      engine must not lose to the plain int8 MXU fallback at smoke scale
@@ -31,6 +31,11 @@ Five checks over the ``serving`` rows of a ``benchmarks.run --json`` file:
      deterministic dispatch amortization, not acceptance luck), and that
      row's ``accept_rate`` field must BE 1.0 — anything lower means the
      verify path or the accept rule drifted from the decode path.
+  6. KV integrity: the per-page GF(2) CRC seal + every-tick scrub
+     (``--kv-crc --scrub-every 1``) may cost at most ``--crc-overhead``
+     of the un-scrubbed paged server's tok/s (``serve_crc_on`` vs
+     ``serve_crc_off``) — the integrity bill must stay off the decode
+     hot path.
 
 Rows are matched on the *typed* JSON fields (``kind`` / ``path`` /
 ``impl`` / ``batch`` / ``phase``); files from before the typed schema
@@ -66,7 +71,7 @@ def _rows(path):
 
 def check(path: str, *, tol: float = 1.6, speedup: float = 1.5,
           gen_speedup: float = 2.0, prefix_speedup: float = 2.0,
-          spec_speedup: float = 1.3) -> int:
+          spec_speedup: float = 1.3, crc_overhead: float = 0.10) -> int:
     rows = _rows(path)
 
     def find(kind, path_tag="fast"):
@@ -209,6 +214,33 @@ def check(path: str, *, tol: float = 1.6, speedup: float = 1.5,
                   f"{f.get('accept_rate')}, "
                   f"{f.get('tok_s')} tok/s)")
 
+    # integrity gate: the GF(2) CRC seal + scrub (kv_crc=True,
+    # scrub_every=1 — the paranoid setting) may cost at most
+    # ``crc_overhead`` of the un-scrubbed paged tok/s. The cost is pure
+    # host work (read sealed pages, re-tag, compare) so it should stay
+    # a small constant per tick; a blow-up means sealing moved onto the
+    # decode hot path or the scrub stopped batching its page reads.
+    crc = {f["crc"]: (us, f) for name, us, f in rows
+           if name.startswith("serve_crc_") and "crc" in f}
+    if not {"off", "on"} <= set(crc):
+        failures.append("no serve_crc_off/on rows — the CRC-overhead "
+                        "benchmark did not run")
+    else:
+        off_us, on_us = crc["off"][0], crc["on"][0]
+        overhead = 1.0 - off_us / on_us  # tok/s lost, as a fraction
+        if overhead > crc_overhead:
+            failures.append(
+                f"CRC scrub costs {overhead:.1%} of paged tok/s "
+                f"({on_us:.1f}us vs {off_us:.1f}us/token; allowed "
+                f"<= {crc_overhead:.0%})")
+        print(f"crc scrub: off {off_us:.1f}us/tok, on {on_us:.1f}us/tok "
+              f"({overhead:.1%} overhead, "
+              f"{crc['on'][1].get('pages_scrubbed')} pages scrubbed)")
+    for name, us, f in rows:
+        if name.startswith("serve_degraded_"):
+            print(f"degraded mode: {us:.1f}us/tok, {f.get('tok_s')} tok/s "
+                  f"({f.get('vs_local')}x the healthy paged server)")
+
     for f in failures:
         print(f"FAIL: {f}", file=sys.stderr)
     return 1 if failures else 0
@@ -276,6 +308,9 @@ def main(argv=None) -> int:
     ap.add_argument("--spec-speedup", type=float, default=1.3,
                     help="required speculative-round vs per-token-loop "
                          "speedup (target-rung drafter, accept rate 1.0)")
+    ap.add_argument("--crc-overhead", type=float, default=0.10,
+                    help="max fraction of paged tok/s the per-page GF(2) "
+                         "CRC seal + every-tick scrub may cost")
     ap.add_argument("--mesh-parity", action="store_true",
                     help="run ONLY the multi-device gate: serve_mesh_* "
                          "rows must be bit-identical to 1x1 and hold the "
@@ -290,7 +325,8 @@ def main(argv=None) -> int:
     return check(args.json_path, tol=args.tol, speedup=args.speedup,
                  gen_speedup=args.gen_speedup,
                  prefix_speedup=args.prefix_speedup,
-                 spec_speedup=args.spec_speedup)
+                 spec_speedup=args.spec_speedup,
+                 crc_overhead=args.crc_overhead)
 
 
 if __name__ == "__main__":

@@ -136,7 +136,92 @@ def run():
     rows.extend(_generation_rows(base, params0))
     rows.extend(_spec_rows(base, params0))
     rows.extend(_paged_prefix_rows())
+    rows.extend(_chaos_rows())
     rows.extend(_mesh_rows())
+    return rows
+
+
+# chaos/integrity sweep: CRC-scrub overhead + degraded-mode throughput
+_CHAOS_ARCH = "smollm_360m"
+_CHAOS_REQUESTS = 6
+_CHAOS_MAX_NEW = 8
+_CHAOS_SLOTS = 2
+
+
+def _chaos_rows():
+    """Integrity/recovery costs on the serving path.
+
+    ``serve_crc_off`` / ``serve_crc_on``: the same paged workload served
+    with and without the per-page GF(2) CRC seal + every-tick scrub
+    (``kv_crc=True, scrub_every=1`` — the paranoid setting; production
+    would scrub every N). The delta is the full integrity bill: sealing
+    freshly-prefilled prompt pages, re-reading + re-tagging every sealed
+    page per tick. ``benchmarks.check_serving --crc-overhead`` gates the
+    tok/s cost.
+
+    ``serve_degraded``: throughput of a disaggregated server AFTER its
+    prefill-worker pool is lost (an injected crash with a zero restart
+    budget) — every admission goes through the decode-mesh fallback
+    prefill. Informational: the CI chaos smoke gates the *behavior*
+    (no request lost, bit-identity); this row prices the mode.
+    """
+    from repro.launch.faults import FaultPlan
+    from repro.launch.serve_lm import LMServer, Request
+    from repro.obs import MetricsRegistry
+
+    cfg = load_arch(_CHAOS_ARCH).smoke()
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(9, 20)))
+               for _ in range(_CHAOS_REQUESTS)]
+
+    def serve_batch(server, rid0):
+        for i, p in enumerate(prompts):
+            server.submit(Request(rid0 + i, np.asarray(p, np.int32),
+                                  _CHAOS_MAX_NEW))
+        return server.run()
+
+    def timed(server, metrics):
+        serve_batch(server, 0)  # compile + warm
+        pre = metrics.total("lm_scrub_pages")
+        t0 = time.perf_counter()
+        done = serve_batch(server, 100)
+        dt = time.perf_counter() - t0
+        ntok = sum(len(r.out) for r in done)
+        assert len(done) == len(prompts)
+        return dt / ntok * 1e6, ntok / dt, \
+            metrics.total("lm_scrub_pages") - pre
+
+    rows, baseline = [], None
+    for tag, kw in (("off", {}),
+                    ("on", dict(kv_crc=True, scrub_every=1))):
+        metrics = MetricsRegistry()
+        server = LMServer(cfg, params, slots=_CHAOS_SLOTS, max_seq=64,
+                          paged=True, page_size=8, metrics=metrics, **kw)
+        us, tok_s, scrubbed = timed(server, metrics)
+        if tag == "off":
+            baseline = tok_s
+        rows.append((f"serve_crc_{tag}_b{_CHAOS_SLOTS}", us,
+                     dict(crc=tag, batch=_CHAOS_SLOTS,
+                          tok_s=round(tok_s, 1),
+                          pages_scrubbed=int(scrubbed),
+                          overhead=round(1.0 - tok_s / baseline, 3))))
+
+    # degraded mode: crash the only prefill worker (restart budget 0)
+    # during the warm pass; the timed pass runs fully degraded
+    metrics = MetricsRegistry()
+    server = LMServer(cfg, params, slots=_CHAOS_SLOTS, max_seq=64,
+                      paged=True, page_size=8, metrics=metrics,
+                      prefill_devices=1, decode_devices=1,
+                      prefill_workers=1, max_worker_restarts=0,
+                      max_retries=3,
+                      faults=FaultPlan.parse("crash:prefill:0:worker=p0"))
+    us, tok_s, _ = timed(server, metrics)
+    assert server.ex.degraded, "worker pool survived the injected crash"
+    rows.append((f"serve_degraded_b{_CHAOS_SLOTS}", us,
+                 dict(crc="off", batch=_CHAOS_SLOTS, degraded=1,
+                      tok_s=round(tok_s, 1),
+                      vs_local=round(tok_s / baseline, 3))))
     return rows
 
 

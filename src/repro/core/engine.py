@@ -39,10 +39,11 @@ group instead of one per projection (``serve_dense_grouped``).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..kernels.engine import ppac_matmul
 from ..obs import ledger as _flight
@@ -323,3 +324,130 @@ def serve_dense_grouped(x, container: QuantContainer, *, act_bits: int,
         outs.append(jax.lax.slice_in_dim(y, off, off + width, axis=-1))
         off += width
     return tuple(outs)
+
+
+# ---------------------------------------------------------------------------
+# Resident-container integrity: CRC tags, scrub, shadow repair
+# ---------------------------------------------------------------------------
+#
+# The PPAC premise stores the matrix *in memory* — so the serving stack
+# treats resident bitplane corruption as a first-class failure mode. Each
+# container's target planes (``wq``) get a GF(2) CRC tag at load time
+# (computed through the repo's own CRC-as-MVP ops — detection lives on
+# the memory path, per the near-memory-crypto direction in PAPERS.md);
+# a scrub pass recomputes and compares. Packed kinds with a load-time
+# int8 ``shadow`` repair in place by re-packing the planes from the
+# shadow (the same deterministic pipeline as ``pack_weight_for_serving``,
+# so the repaired container is bit-identical to the original). The draft
+# rung is deliberately untagged: a corrupted drafter only lowers the
+# speculative accept rate — the target-rung verify keeps outputs exact.
+
+def _is_container(x) -> bool:
+    return isinstance(x, QuantContainer)
+
+
+def _container_items(params):
+    """[(path_str, container)] over every QuantContainer leaf, in the
+    stable flatten order (the tag-dict key space)."""
+    leaves = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=_is_container)[0]
+    return [(jax.tree_util.keystr(kp), x) for kp, x in leaves
+            if _is_container(x)]
+
+
+def container_tag(c: QuantContainer) -> int:
+    """GF(2) CRC tag over the container's resident target planes."""
+    from ..gf2.ops import crc_tag as _crc_tag
+    return _crc_tag(np.asarray(c.wq))
+
+
+def container_tags(params) -> Dict[str, int]:
+    """path -> CRC tag for every resident container (run once at load)."""
+    return {path: container_tag(c) for path, c in _container_items(params)}
+
+
+def repack_from_shadow(c: QuantContainer) -> QuantContainer:
+    """Rebuild a packed container's target planes from its load-time int8
+    shadow — the corruption-repair path. Returns a container bit-identical
+    to the original packing; raises for kinds with no redundant resident
+    (int8/bf16 store exactly one copy)."""
+    if c.shadow is None or c.kind not in ("packed1", "packed4"):
+        raise ValueError(f"container kind {c.kind!r} "
+                         f"{'without a shadow ' if c.shadow is None else ''}"
+                         f"has no redundant resident to repair from")
+    shadow = jnp.asarray(c.shadow)
+
+    def repack2d(sh):  # one layer: shadow [in, out] -> resident planes
+        if c.kind == "packed1":
+            return pack_bits(((sh + 1) // 2).astype(jnp.uint8).T)
+        a_int = sh.T.astype(jnp.int32)
+        planes = to_bitplanes(a_int, c.bits, c.fmt)
+        if c.wq.shape[-3] == (c.bits or 0) + 1:  # resident mask plane
+            mask = jnp.ones((1,) + a_int.shape, jnp.uint8)
+            planes = jnp.concatenate([planes, mask], axis=0)
+        return pack_bits(planes)
+
+    # stacked (scan) containers carry a leading layer axis: repack each
+    # layer exactly as the vmapped load-time packer did
+    wq = (repack2d(shadow) if shadow.ndim == 2
+          else jax.vmap(repack2d)(shadow))
+    assert wq.shape == c.wq.shape and wq.dtype == c.wq.dtype, \
+        (wq.shape, c.wq.shape)
+    return c.with_children(wq, c.scale, shadow=c.shadow, dwq=c.dwq,
+                           dscale=c.dscale, dshadow=c.dshadow)
+
+
+def scrub_params(params, tags: Dict[str, int]):
+    """One integrity pass over the resident containers.
+
+    Recomputes every container's CRC tag against ``tags`` (from
+    :func:`container_tags` at load). Mismatching containers with a shadow
+    are repaired via :func:`repack_from_shadow`; shadow-less mismatches
+    are reported irreparable (the caller fails loudly rather than serving
+    wrong weights). Returns ``(params', report)`` where report maps path
+    -> 'clean' | 'repaired' | 'corrupt'.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(params,
+                                                 is_leaf=_is_container)
+    paths = iter([p for p, _ in _container_items(params)])
+    report: Dict[str, str] = {}
+    out = []
+    for leaf in leaves:
+        if not _is_container(leaf):
+            out.append(leaf)
+            continue
+        path = next(paths)
+        if container_tag(leaf) == tags.get(path):
+            report[path] = "clean"
+            out.append(leaf)
+        elif leaf.shadow is not None and leaf.kind in ("packed1", "packed4"):
+            fixed = repack_from_shadow(leaf)
+            assert container_tag(fixed) == tags.get(path), \
+                f"shadow repair of {path} did not restore the tagged planes"
+            report[path] = "repaired"
+            out.append(fixed)
+        else:
+            report[path] = "corrupt"
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out), report
+
+
+def flip_container_bit(params, *, index: int = 0, bit: int = 0):
+    """Fault injection: XOR one bit of the ``index``-th container's
+    resident planes (host round-trip — chaos-test path only)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params,
+                                                 is_leaf=_is_container)
+    ks = [i for i, x in enumerate(leaves) if _is_container(x)]
+    if not ks:
+        raise ValueError("no QuantContainer leaves to corrupt")
+    i = ks[index % len(ks)]
+    c = leaves[i]
+    wq = np.array(np.asarray(c.wq))
+    flat = np.frombuffer(wq.tobytes(), np.uint8).copy()
+    j = (bit // 8) % flat.size
+    flat[j] ^= np.uint8(1 << (bit % 8))
+    wq = np.frombuffer(flat.tobytes(), wq.dtype).reshape(wq.shape)
+    leaves[i] = c.with_children(jnp.asarray(wq), c.scale, shadow=c.shadow,
+                                dwq=c.dwq, dscale=c.dscale,
+                                dshadow=c.dshadow)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

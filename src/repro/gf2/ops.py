@@ -196,3 +196,50 @@ def crc(msgs, poly: int, deg: int, *, backend: str = "auto",
     r = crc_matrix(poly, deg, msgs.shape[1])
     return gf2_matvec(msgs, r, backend=backend, counter=counter,
                       config=config)
+
+
+# ---------------------------------------------------------------------------
+# Integrity tags over byte buffers (KV pages, resident weight planes)
+# ---------------------------------------------------------------------------
+
+CRC32_POLY = 0x04C11DB7  # IEEE 802.3 generator, low-32 coefficient bits
+
+
+def crc_tags(bufs, *, poly: int = CRC32_POLY, deg: int = 32,
+             chunk_bits: int = 256, backend: str = "auto",
+             counter: Optional[CycleCounter] = None,
+             config: Optional[PPACConfig] = None) -> np.ndarray:
+    """Integrity tags of ``B`` equal-length byte buffers as ONE batched
+    CRC-as-MVP: [B, nbytes] uint8 -> [B] uint64.
+
+    A whole KV page (kilobytes) as one CRC message would need an
+    O(msg_len^2) bit-serial matrix build; instead each buffer is split
+    into ``chunk_bits``-bit chunks (zero-padded tail), all chunks of all
+    buffers stream through one cached [deg, chunk_bits] CRC matrix in a
+    single GF(2) MVP launch, and the per-chunk remainders XOR-fold into
+    one tag per buffer. CRC is linear over GF(2), so any single flipped
+    bit perturbs exactly one chunk's remainder by a nonzero column
+    syndrome and survives the fold — single-bit (and odd-weight)
+    corruption is always detected, which is the scrub's contract.
+    """
+    bufs = np.atleast_2d(np.asarray(bufs, np.uint8))
+    b = bufs.shape[0]
+    bits = np.unpackbits(bufs, axis=1)
+    pad = (-bits.shape[1]) % chunk_bits
+    if pad:
+        bits = np.pad(bits, ((0, 0), (0, pad)))
+    chunks = bits.shape[1] // chunk_bits
+    syn = np.asarray(crc(bits.reshape(b * chunks, chunk_bits), poly, deg,
+                         backend=backend, counter=counter, config=config),
+                     np.uint8)
+    folded = np.bitwise_xor.reduce(syn.reshape(b, chunks, deg), axis=1)
+    weights = np.left_shift(np.uint64(1), np.arange(deg, dtype=np.uint64))
+    return (folded.astype(np.uint64) * weights).sum(axis=1, dtype=np.uint64)
+
+
+def crc_tag(buf, **kw) -> int:
+    """Scalar convenience: one buffer (any array/bytes) -> one int tag."""
+    arr = np.frombuffer(bytes(buf), np.uint8) if isinstance(
+        buf, (bytes, bytearray)) else np.ascontiguousarray(buf)
+    flat = np.frombuffer(arr.tobytes(), np.uint8)
+    return int(crc_tags(flat[None, :], **kw)[0])

@@ -1,0 +1,230 @@
+"""Deterministic fault injection for the LM serving stack.
+
+A :class:`FaultPlan` is a *pure schedule*: every fault is keyed by a
+dispatch counter at a named executor seam (plus an optional worker tag)
+or by a request id — never by wall-clock time — so a chaos run with the
+same plan and seed replays bit-identically. The executors in
+``launch/workers.py`` and the scheduler in ``launch/serve_lm.py`` call
+:meth:`FaultPlan.fire` at their seams; with no plan installed
+(``faults is None``, the default) the seams cost one ``is not None``
+check and the production path pays zero overhead.
+
+Seams (where ``fire`` is called):
+
+  ``prefill``  — one count per prefill dispatch (per worker for the
+                 disaggregated pool; the unified executor counts as its
+                 own worker). ``crash`` kills the worker mid-dispatch
+                 (before any device work), ``error`` raises a transient
+                 dispatch exception, ``stall`` sleeps.
+  ``handoff``  — one count per prefill->decode handoff. ``crash`` = the
+                 producing worker dies mid-handoff (after prefill, before
+                 the resident write — the scheduler must re-prefill with
+                 correct page refcounts); ``stall`` = latency spike.
+  ``decode``   — one count per fused decode/spec dispatch. ``error``
+                 raises before the launch (cache untouched -> the
+                 scheduler retries the step).
+  ``step``     — one count per scheduler tick. ``flip`` corrupts one bit
+                 of a KV page (``page=-1`` picks the lowest sealed page so
+                 the CRC scrub is armed) or, with ``param=1``, of a
+                 resident packed weight container. ``squeeze`` grabs
+                 ``pages`` pool pages for ``hold`` ticks (pool-exhaustion
+                 backpressure without real traffic).
+  ``request``  — keyed by request id, not a counter. ``deadline`` stamps
+                 ``deadline_s`` onto the request at submit.
+
+Fault kinds: ``crash`` | ``error`` | ``stall`` | ``flip`` | ``squeeze``
+| ``deadline``. All faults fire once (they are consumed), so a retried
+dispatch always makes progress.
+
+CLI spec (``--fault-plan``): either a path to a JSON file holding a list
+of fault dicts, or an inline ``;``-separated spec where each item is
+``kind:seam:at[:k=v,...]``, e.g.::
+
+    crash:prefill:0:worker=p0;flip:step:3;deadline:request:5
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+SEAMS = ("prefill", "handoff", "decode", "step", "request")
+KINDS = ("crash", "error", "stall", "flip", "squeeze", "deadline")
+
+
+class InjectedFault(RuntimeError):
+    """A transient dispatch exception injected by the plan."""
+
+
+class WorkerCrash(RuntimeError):
+    """An injected worker death; ``wid`` names the deceased."""
+
+    def __init__(self, wid: str, seam: str = ""):
+        super().__init__(f"injected crash of worker {wid!r}"
+                         + (f" at seam {seam!r}" if seam else ""))
+        self.wid = wid
+        self.seam = seam
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled fault. ``at`` counts dispatches at ``seam`` (from 0);
+    with ``worker`` set the count is per-(seam, worker), otherwise it is
+    the seam's global count. For seam ``request``, ``at`` is the rid."""
+
+    kind: str
+    seam: str
+    at: int
+    worker: str = ""
+    stall_s: float = 0.0     # stall: injected latency
+    page: int = -1           # flip: physical page (-1 = lowest sealed)
+    bit: int = 0             # flip: bit index within the page/container
+    param: int = 0           # flip: 1 = corrupt a resident weight container
+    pages: int = 0           # squeeze: pool pages to hold
+    hold: int = 1            # squeeze: scheduler ticks to hold them
+    deadline_s: float = 0.0  # deadline: stamped onto the request
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.seam not in SEAMS:
+            raise ValueError(f"unknown fault seam {self.seam!r}")
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        return {k: v for k, v in d.items()
+                if v != Fault.__dataclass_fields__[k].default}
+
+
+_NUMERIC = {"at": int, "stall_s": float, "page": int, "bit": int,
+            "param": int, "pages": int, "hold": int, "deadline_s": float}
+
+
+class FaultPlan:
+    """A consumable schedule of :class:`Fault` s with per-seam counters."""
+
+    def __init__(self, faults: List[Fault]):
+        self._pending: List[Fault] = list(faults)
+        self._counts: Dict[Tuple[str, str], int] = {}
+        self.fired: List[Fault] = []
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    # -- seam API ------------------------------------------------------------
+
+    def fire(self, seam: str, *, worker: str = "") -> List[Fault]:
+        """Advance the (seam[, worker]) dispatch counters and consume the
+        faults scheduled for this dispatch. Returns them ordered; raising
+        kinds (crash/error) are the caller's job to act on."""
+        assert seam in SEAMS, seam
+        n_global = self._counts.get((seam, ""), 0)
+        self._counts[(seam, "")] = n_global + 1
+        n_worker = None
+        if worker:
+            n_worker = self._counts.get((seam, worker), 0)
+            self._counts[(seam, worker)] = n_worker + 1
+        hits, rest = [], []
+        for f in self._pending:
+            if f.seam != seam:
+                rest.append(f)
+            elif f.worker:
+                (hits if worker == f.worker and n_worker == f.at
+                 else rest).append(f)
+            elif f.at == n_global:
+                hits.append(f)
+            else:
+                rest.append(f)
+        self._pending = rest
+        self.fired.extend(hits)
+        return hits
+
+    def raise_any(self, hits: List[Fault], *, wid: str = "w0") -> None:
+        """Standard seam epilogue: sleep the stalls, then raise the first
+        crash/error (flip/squeeze/deadline are scheduler-handled and are
+        not expected at executor seams). ``wid`` attributes a globally
+        scheduled crash to the worker actually dispatching."""
+        import time
+        for f in hits:
+            if f.kind == "stall":
+                time.sleep(f.stall_s)
+        for f in hits:
+            if f.kind == "crash":
+                raise WorkerCrash(f.worker or wid, f.seam)
+            if f.kind == "error":
+                raise InjectedFault(
+                    f"injected dispatch error at seam {f.seam!r}")
+
+    def for_request(self, rid: int) -> List[Fault]:
+        """Consume the faults keyed to request ``rid`` (seam 'request')."""
+        hits = [f for f in self._pending
+                if f.seam == "request" and f.at == rid]
+        if hits:
+            self._pending = [f for f in self._pending if f not in hits]
+            self.fired.extend(hits)
+        return hits
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def seeded(cls, seed: int, *, steps: int = 16, workers=("w0",),
+               pool_pages: int = 0, n_requests: int = 0,
+               intensity: float = 0.5) -> "FaultPlan":
+        """A randomized-but-deterministic chaos schedule: ``seed`` fully
+        determines the faults (numpy Generator, no wall clock). Used by
+        the chaos scenario runner to sweep schedules reproducibly."""
+        import numpy as np
+        rng = np.random.default_rng(seed)
+        faults: List[Fault] = []
+        n = max(1, int(round(intensity * 4)))
+        for _ in range(n):
+            roll = rng.random()
+            at = int(rng.integers(0, max(steps, 1)))
+            if roll < 0.3:
+                faults.append(Fault("error", "prefill", at))
+            elif roll < 0.5:
+                faults.append(Fault("error", "decode", at))
+            elif roll < 0.7 and pool_pages:
+                faults.append(Fault(
+                    "squeeze", "step", at,
+                    pages=int(rng.integers(1, max(pool_pages // 2, 2))),
+                    hold=int(rng.integers(1, 4))))
+            elif roll < 0.85 and n_requests:
+                faults.append(Fault(
+                    "deadline", "request",
+                    int(rng.integers(0, n_requests)), deadline_s=0.0))
+            else:
+                faults.append(Fault("stall", "handoff", at,
+                                    stall_s=float(rng.random() * 1e-3)))
+        return cls(faults)
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        """Parse the ``--fault-plan`` argument: a JSON file path or an
+        inline ``kind:seam:at[:k=v,...];...`` spec."""
+        spec = spec.strip()
+        if os.path.exists(spec):
+            with open(spec) as f:
+                return cls([Fault(**d) for d in json.load(f)])
+        if spec.startswith("["):
+            return cls([Fault(**d) for d in json.loads(spec)])
+        faults = []
+        for item in filter(None, (s.strip() for s in spec.split(";"))):
+            parts = item.split(":")
+            if len(parts) < 3:
+                raise ValueError(
+                    f"fault spec item {item!r} needs kind:seam:at")
+            kind, seam, at = parts[0], parts[1], int(parts[2])
+            kw = {}
+            for extra in parts[3:]:
+                for pair in filter(None, extra.split(",")):
+                    k, _, v = pair.partition("=")
+                    if k not in _NUMERIC and k != "worker":
+                        raise ValueError(f"unknown fault field {k!r}")
+                    kw[k] = _NUMERIC[k](v) if k in _NUMERIC else v
+            faults.append(Fault(kind, seam, at, **kw))
+        return cls(faults)
+
+    def as_dicts(self) -> List[dict]:
+        return [f.as_dict() for f in self._pending]

@@ -18,15 +18,42 @@ uninterrupted run.
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
 import signal
 import subprocess
 import sys
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 HEARTBEAT = "heartbeat_{rank}.json"
+
+
+class HeartbeatBook:
+    """In-memory heartbeat ledger: the file-based worker heartbeats below,
+    generalized to in-process serving workers (``launch/workers.py``).
+    Executors ``beat`` on every successful dispatch; a supervisor asks for
+    ``stale`` workers and treats them like crashed processes. ``now`` is
+    injectable everywhere so supervision itself stays deterministic in
+    tests (no wall-clock coupling in the fault plans)."""
+
+    def __init__(self):
+        self._last: Dict[str, float] = {}
+
+    def beat(self, wid: str, now: Optional[float] = None) -> None:
+        self._last[wid] = time.time() if now is None else now
+
+    def last(self, wid: str) -> Optional[float]:
+        return self._last.get(wid)
+
+    def stale(self, timeout: float,
+              now: Optional[float] = None) -> List[str]:
+        t = time.time() if now is None else now
+        return [w for w, hb in self._last.items() if t - hb > timeout]
+
+    def forget(self, wid: str) -> None:
+        self._last.pop(wid, None)
 
 
 def write_heartbeat(run_dir: str, rank: int, step: int):
@@ -49,21 +76,48 @@ def read_heartbeat(run_dir: str, rank: int) -> Optional[dict]:
 
 
 class Coordinator:
-    """Supervises worker processes; kills stragglers; restarts elastically."""
+    """Supervises worker processes; kills stragglers; restarts elastically.
+
+    ``clean_cmd`` (optional) is the command used for restarts instead of
+    ``worker_cmd`` — e.g. the same invocation without an injected
+    ``--kill-at`` crash, so the restarted worker runs clean.
+    """
 
     def __init__(self, run_dir: str, worker_cmd: List[str], *,
+                 clean_cmd: Optional[List[str]] = None,
                  straggler_timeout: float = 30.0, max_restarts: int = 3,
                  poll_s: float = 0.5):
         self.run_dir = run_dir
         self.worker_cmd = worker_cmd
+        self.clean_cmd = clean_cmd
         self.straggler_timeout = straggler_timeout
         self.max_restarts = max_restarts
         self.poll_s = poll_s
         self.restarts = 0
+        self.start_time = time.time()
         os.makedirs(run_dir, exist_ok=True)
+        # heartbeats left behind by a PREVIOUS run carry old `time` fields
+        # and would instantly trip the straggler detector: clear them, and
+        # `_fresh` below additionally ignores anything pre-dating this
+        # coordinator (a worker may legitimately rewrite an old file)
+        for hb in glob.glob(os.path.join(run_dir,
+                                         HEARTBEAT.format(rank="*"))):
+            try:
+                os.remove(hb)
+            except OSError:
+                pass
+
+    def _fresh(self, hb: Optional[dict]) -> Optional[dict]:
+        """Only heartbeats written during THIS run count (stale-heartbeat
+        regression guard)."""
+        if hb and hb.get("time", 0.0) >= self.start_time:
+            return hb
+        return None
 
     def _spawn(self) -> subprocess.Popen:
-        return subprocess.Popen(self.worker_cmd, cwd=os.getcwd())
+        cmd = (self.clean_cmd if self.clean_cmd is not None
+               and self.restarts > 0 else self.worker_cmd)
+        return subprocess.Popen(cmd, cwd=os.getcwd())
 
     def run(self) -> int:
         """Returns the worker's final exit code (0 = converged)."""
@@ -81,7 +135,7 @@ class Coordinator:
                       f"{self.restarts}/{self.max_restarts}", flush=True)
                 proc = self._spawn()
                 continue
-            hb = read_heartbeat(self.run_dir, 0)
+            hb = self._fresh(read_heartbeat(self.run_dir, 0))
             if hb and time.time() - hb["time"] > self.straggler_timeout:
                 if self.restarts >= self.max_restarts:
                     proc.kill()
@@ -149,24 +203,13 @@ def main():
     cmd = [sys.executable, "-m", "repro.launch.ft", "--worker",
            "--run-dir", args.run_dir, "--ckpt-dir", args.ckpt_dir,
            "--arch", args.arch, "--steps", str(args.steps),
-           "--ckpt-every", str(args.ckpt_every),
-           "--kill-at", str(args.kill_at)]
-    coord = Coordinator(args.run_dir, cmd,
-                        straggler_timeout=args.straggler_timeout)
+           "--ckpt-every", str(args.ckpt_every)]
     # after the first (injected) crash the restarted worker must not crash
-    # again: drop the kill flag for restarts
-    orig_spawn = coord._spawn
-    state = {"first": True}
-
-    def spawn_once():
-        if state["first"]:
-            state["first"] = False
-            return orig_spawn()
-        clean = [c for i, c in enumerate(cmd)
-                 if not (c == "--kill-at" or (i > 0 and cmd[i - 1] == "--kill-at"))]
-        return subprocess.Popen(clean, cwd=os.getcwd())
-
-    coord._spawn = spawn_once
+    # again: restarts run the clean command without the kill flag
+    coord = Coordinator(args.run_dir,
+                        cmd + ["--kill-at", str(args.kill_at)],
+                        clean_cmd=cmd,
+                        straggler_timeout=args.straggler_timeout)
     rc = coord.run()
     print(f"[ft] finished rc={rc} restarts={coord.restarts}")
     sys.exit(rc)

@@ -62,6 +62,28 @@ def parse_mesh_spec(spec: str) -> Tuple[int, ...]:
     return shape
 
 
+def carve_devices(prefill: int, decode: int,
+                  devices=None) -> Tuple[list, list]:
+    """Split the attached devices into disjoint prefill/decode pools.
+
+    The first ``prefill`` devices feed the worker pool, the next
+    ``decode`` the resident decode mesh. When the box is too small the
+    pools overlap round-robin (with a warning) instead of raising — the
+    handoff path still runs, it just moves bytes between colocated
+    buffers. Shared by :class:`repro.launch.workers.DisaggExecutor` and
+    its degraded-mode rebuilds, so a restarted worker always lands on the
+    same carve."""
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if prefill + decode > len(devs):
+        warnings.warn(
+            f"disaggregated serving wants {prefill}+{decode} devices but "
+            f"only {len(devs)} are attached; pools will overlap",
+            stacklevel=2)
+    pdevs = [devs[i % len(devs)] for i in range(prefill)]
+    ddevs = [devs[(prefill + i) % len(devs)] for i in range(decode)]
+    return pdevs, ddevs
+
+
 def make_serving_mesh(shape: Sequence[int] = (1, 1), *, devices=None):
     """Serving mesh over ``('data', 'model')`` (or ``('pod', 'data',
     'model')`` for 3 axes), clamped to the attached devices.

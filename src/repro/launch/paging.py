@@ -12,11 +12,17 @@ conservation law tests pin down:
 Allocation is O(n) off a free deque; freeing is refcount-driven
 (``decref`` returns the pages that actually went free so the caller can
 evict their prefix-index registrations and reset table rows).
+
+Integrity bookkeeping (``--kv-crc``): a fully-written prompt page can be
+*sealed* with a GF(2) CRC tag (computed by the scheduler's scrub pass via
+``gf2.ops.crc_tags``); a page whose recomputed tag mismatches is
+*quarantined* — it never returns to the free list, shrinking ``capacity``
+but guaranteeing the corrupted frame is never re-issued.
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -29,6 +35,8 @@ class PagePool:
         self.pages = pages
         self.refcount = np.zeros(pages, np.int32)
         self._free = deque(range(pages))
+        self._sealed: Dict[int, int] = {}   # page -> CRC tag
+        self._dead: set = set()             # quarantined: never freed again
 
     @property
     def free_pages(self) -> int:
@@ -37,6 +45,20 @@ class PagePool:
     @property
     def used_pages(self) -> int:
         return self.pages - len(self._free)
+
+    @property
+    def dead_pages(self) -> int:
+        """Quarantined page count (in or out of service)."""
+        return len(self._dead)
+
+    @property
+    def capacity(self) -> int:
+        """Pages that can still serve traffic (total minus quarantined)."""
+        return self.pages - len(self._dead)
+
+    @property
+    def quarantined(self) -> List[int]:
+        return sorted(self._dead)
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """Take ``n`` fresh pages at refcount 1, or None if the pool
@@ -55,12 +77,41 @@ class PagePool:
             self.refcount[p] += 1
 
     def decref(self, pages: Sequence[int]) -> List[int]:
-        """Drop one reference per page; returns pages that went free."""
+        """Drop one reference per page; returns pages that went free.
+        Quarantined pages reaching refcount 0 stay OUT of the free list
+        (and are not reported freed) — a corrupted frame is retired, not
+        recycled."""
         freed = []
         for p in pages:
             assert self.refcount[p] > 0, f"decref of free page {p}"
             self.refcount[p] -= 1
             if self.refcount[p] == 0:
-                self._free.append(p)
-                freed.append(p)
+                self._sealed.pop(p, None)  # next owner reseals fresh content
+                if p not in self._dead:
+                    self._free.append(p)
+                    freed.append(p)
         return freed
+
+    # -- integrity (CRC seal / quarantine) -----------------------------------
+
+    def seal(self, page: int, tag: int) -> None:
+        """Record the CRC tag of a fully-written (immutable) page."""
+        assert self.refcount[page] > 0, f"seal of free page {page}"
+        self._sealed[page] = int(tag)
+
+    def sealed_tag(self, page: int) -> Optional[int]:
+        return self._sealed.get(page)
+
+    def is_sealed(self, page: int) -> bool:
+        return page in self._sealed
+
+    def sealed_items(self) -> Dict[int, int]:
+        """Snapshot of page -> tag for the scrub pass."""
+        return dict(self._sealed)
+
+    def quarantine(self, page: int) -> None:
+        """Retire a page from service: it keeps its current references
+        (the scheduler fails/evicts the mappings) but will never re-enter
+        the free list once they drop."""
+        self._dead.add(page)
+        self._sealed.pop(page, None)

@@ -38,10 +38,23 @@ existing pages (copy-on-write for a shared tail page) and only the
 suffix is prefilled. Prefill writes go straight through the table into
 the donated resident pools — no scratch cache, no copy step.
 
+Chaos hardening (PR 10): an optional :class:`FaultPlan` (``--fault-plan``
+/ ``--fault-seed``) injects deterministic worker crashes, dispatch
+errors, handoff stalls, KV/weight bit-flips, pool squeezes and request
+deadlines. The scheduler guarantees every submitted request reaches
+exactly ONE terminal outcome — ``completed`` | ``shed`` (deadline) |
+``failed`` (with a reason) — via bounded retry with page-refcount-correct
+unwinding, deadline load shedding, and (``--kv-crc``) a GF(2)-CRC scrub
+(``gf2/ops.crc_tags``) that tags sealed prompt pages after prefill and
+quarantines any page whose recomputed tag drifts before decode can read
+it. With no plan and no CRC flags the serving path is unchanged.
+
 CLI: PYTHONPATH=src python -m repro.launch.serve_lm --arch smollm_360m \
         --requests 12 --max-new 16 [--serve-quant --weight-bits 4] \
         [--kv-int8] [--temperature 0.8 --top-k 40] [--eos 0] \
-        [--paged --page-size 16 --pool-pages 64 --prefix-cache]
+        [--paged --page-size 16 --pool-pages 64 --prefix-cache] \
+        [--fault-plan 'crash:prefill:0:worker=p0;flip:step:3' \
+         --kv-crc --scrub-every 1 --chaos-gate]
 """
 from __future__ import annotations
 
@@ -49,8 +62,9 @@ import argparse
 import contextlib
 import dataclasses
 import json
+import sys
 import time
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +77,7 @@ from ..obs.trace import TraceBuilder, annotate
 from ..retrieval.prefix import PagePrefixIndex
 from ..serve.step import convert_params_for_serving, serving_cycle_report
 from .bucketed import bucket_for, drain_take
+from .faults import FaultPlan, InjectedFault, WorkerCrash
 from .mesh import make_serving_mesh, parse_mesh_spec
 from .paging import PagePool
 from .workers import DisaggExecutor, LocalExecutor
@@ -77,6 +92,12 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     finish_reason: Optional[str] = None
+    # terminal outcome: every submitted request resolves to exactly one
+    # of 'completed' | 'shed' | 'failed' (fail_reason says why)
+    outcome: Optional[str] = None
+    fail_reason: Optional[str] = None
+    deadline_s: Optional[float] = None  # submit-relative; None = none
+    retries: int = 0
     # telemetry timestamps (perf_counter readings, set by the server)
     submit_t: Optional[float] = None
     first_token_t: Optional[float] = None
@@ -118,7 +139,10 @@ class LMServer:
                  spec_decode: bool = False, draft_k: int = 4,
                  mesh=None, prefill_devices: int = 0,
                  decode_devices: int = 0, prefill_workers: int = 0,
-                 decode_mesh_shape=None):
+                 decode_mesh_shape=None,
+                 faults: Optional[FaultPlan] = None, max_retries: int = 1,
+                 max_worker_restarts: int = 1, kv_crc: bool = False,
+                 scrub_every: int = 0):
         assert tuple(admit_buckets) == tuple(sorted(admit_buckets))
         if prefill_buckets is None:
             # powers of two up to max_seq (any prompt that leaves room to
@@ -141,8 +165,22 @@ class LMServer:
         self.pad_prompts = cfg.family not in ("ssm", "hybrid")
         self.live: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
+        self.terminal: List[Request] = []  # shed + failed (never retired)
         self.decode_steps = 0
         self.admit_batches = 0
+        # chaos / integrity state
+        self.faults = faults
+        self.max_retries = max_retries
+        self.kv_crc = kv_crc
+        self.scrub_every = scrub_every
+        self._ticks = 0
+        self._squeezes: List[list] = []    # [ticks_left, held_pages]
+        self._pending_flips: List = []     # flips waiting for a sealed page
+        if kv_crc and not paged:
+            raise ValueError("--kv-crc seals KV pages; it needs --paged")
+        if kv_crc and cfg.sliding_window:
+            raise ValueError("--kv-crc needs a linear cache: ring pages "
+                             "are rewritten in place after sealing")
         # telemetry: always-on registry (negligible cost — a few Python
         # dict/float ops per step), optional Chrome-trace span capture
         self.metrics = metrics if metrics is not None else MetricsRegistry()
@@ -186,13 +224,15 @@ class LMServer:
                 rules=rules, temperature=temperature, top_k=top_k,
                 paged=paged, page_size=page_size, spec_decode=spec_decode,
                 draft_k=draft_k, max_seq=max_seq, cache_dtype=cache_dtype,
-                metrics=self.metrics)
+                metrics=self.metrics, faults=faults,
+                max_worker_restarts=max_worker_restarts)
         else:
             self.ex = LocalExecutor(
                 cfg, params, mode=mode, rules=rules, mesh=mesh,
                 temperature=temperature, top_k=top_k, paged=paged,
                 spec_decode=spec_decode, draft_k=draft_k, max_seq=max_seq,
-                cache_dtype=cache_dtype, metrics=self.metrics)
+                cache_dtype=cache_dtype, metrics=self.metrics,
+                faults=faults)
 
         if paged:
             self.extent = lm.paged_extent(cfg, max_seq)
@@ -220,6 +260,14 @@ class LMServer:
         # on a mesh the resident cache shards slot-parallel ('data');
         # single-device executors return it unchanged
         self.cache = self.ex.place_cache(self.cache, caxes)
+
+        # integrity baseline: CRC tags of every resident packed container
+        # (host-side dict keyed by tree path — NOT in the pytree aux, so
+        # jit caches stay unfragmented). Empty for float-mode params.
+        self._param_tags: Dict[str, int] = {}
+        if scrub_every > 0:
+            from ..core.engine import container_tags
+            self._param_tags = container_tags(self.ex.params)
 
     @property
     def params(self):
@@ -252,6 +300,10 @@ class LMServer:
             f"prompt {plen} + max_new {req.max_new} needs " \
             f"{plen + req.max_new - 1} cache rows, max_seq {self.max_seq}"
         req.submit_t = time.perf_counter()
+        if self.faults is not None:  # request-keyed faults apply at submit
+            for f in self.faults.for_request(req.rid):
+                if f.kind == "deadline":
+                    req.deadline_s = f.deadline_s
         self.metrics.counter("lm_requests_submitted").inc()
         self.queue.append(req)
 
@@ -266,6 +318,76 @@ class LMServer:
         if self.pad_prompts:
             return bucket_for(plen, self.prefill_buckets)
         return plen
+
+    # -- terminal outcomes / recovery ----------------------------------------
+
+    def _shed(self, r: Request, where: str):
+        """Deadline load shedding: the request leaves the system with the
+        terminal outcome 'shed' (never admitted, or aborted in flight)."""
+        r.done = True
+        r.outcome = "shed"
+        r.finish_reason = "deadline"
+        r.retire_t = time.perf_counter()
+        self.metrics.counter("lm_requests_shed", where=where).inc()
+        self.terminal.append(r)
+
+    def _fail(self, r: Request, reason: str):
+        """Terminal failure (retry budget exhausted, capacity,
+        corruption): the request resolves — never silently dropped."""
+        r.done = True
+        r.outcome = "failed"
+        r.fail_reason = reason
+        r.finish_reason = reason
+        r.retire_t = time.perf_counter()
+        self.metrics.counter("lm_requests_failed", reason=reason).inc()
+        self.terminal.append(r)
+
+    def _abort_slot(self, s: int):
+        """Free a live slot WITHOUT retiring its request (deadline abort,
+        corruption re-prefill): pages decref'd through the normal reclaim
+        path (quarantined pages stay dead), table row sentineled."""
+        self.live[s] = None
+        if self.paged:
+            self._reclaim_pages()
+
+    def _requeue(self, reqs: List[Request], exc: Exception):
+        """Bounded-retry requeue after an injected/real dispatch failure:
+        each request goes back to the queue FRONT in order (FIFO held);
+        past ``max_retries`` it fails terminally. A WorkerCrash first
+        routes through the executor's recovery (restart/drop/degrade)."""
+        m = self.metrics
+        if isinstance(exc, WorkerCrash):
+            verdict = self.ex.on_worker_crash(exc.wid)
+            m.counter("lm_worker_crashes", worker=exc.wid,
+                      verdict=verdict).inc()
+        keep = []
+        for r in reqs:
+            r.retries += 1
+            m.counter("lm_retries").inc()
+            if r.retries > self.max_retries:
+                self._fail(r, "prefill")
+            else:
+                keep.append(r)
+        self.queue[:0] = keep
+
+    def _expire_deadlines(self):
+        """Shed expired requests: at admission (still queued) and in
+        flight (slot aborted, pages reclaimed). FIFO order of the
+        surviving queue is untouched."""
+        now = time.perf_counter()
+
+        def expired(r):
+            return (r.deadline_s is not None and r.submit_t is not None
+                    and now - r.submit_t > r.deadline_s)
+        if any(expired(r) for r in self.queue):
+            keep = []
+            for r in self.queue:
+                (self._shed(r, "queue") if expired(r) else keep.append(r))
+            self.queue = keep
+        for s, r in enumerate(self.live):
+            if r is not None and expired(r):
+                self._abort_slot(s)
+                self._shed(r, "inflight")
 
     def _admit(self):
         """Prefill waiting prompts into free slots, in bucketed batches.
@@ -295,31 +417,50 @@ class LMServer:
                 toks[i, :len(r.prompt)] = r.prompt  # RIGHT-pad: bit-exact
                 lens[i] = len(r.prompt)
             t0 = time.perf_counter()
-            with self._span("prefill_batch", batch=blen, plen=plb,
-                            fill=len(grp) / blen):
-                tok0, handle = self.ex.prefill(jnp.asarray(toks),
-                                               jnp.asarray(lens),
-                                               self._next_key())
+            try:
+                with self._span("prefill_batch", batch=blen, plen=plb,
+                                fill=len(grp) / blen):
+                    tok0, handle = self.ex.prefill(jnp.asarray(toks),
+                                                   jnp.asarray(lens),
+                                                   self._next_key())
+            except (InjectedFault, WorkerCrash) as e:
+                # nothing resident yet: the whole group requeues (or
+                # fails past its retry budget); stop admitting this tick
+                self._requeue(grp, e)
+                break
             t1 = time.perf_counter()
             self.admit_batches += 1
             m = self.metrics
             m.counter("lm_prefill_batches").inc()
-            m.counter("lm_requests_admitted").inc(len(grp))
-            # prefill emits each request's first token: count it here so
-            # lm_tokens_generated matches sum(len(r.out)) — the decode
-            # loop only adds the per-step occupancy (decode tokens)
-            m.counter("lm_tokens_generated").inc(len(grp))
             m.histogram("lm_prefill_s").record(t1 - t0)
             m.histogram("lm_admit_fill_ratio").record(len(grp) / blen)
+            ok = 0
             for i, r in enumerate(grp):
-                s = free.pop(0)
-                self.cache = self.ex.write_slot(self.cache, handle, i, s)
+                s = free[0]
+                try:
+                    self.cache = self.ex.write_slot(self.cache, handle,
+                                                    i, s)
+                except (InjectedFault, WorkerCrash) as e:
+                    # crash mid-handoff: the resident cache is untouched
+                    # (seams fire before the donating write) — this and
+                    # every later row of the batch re-prefill
+                    self._requeue(grp[i:], e)
+                    break
+                free.pop(0)
+                ok += 1
                 r.out.append(int(tok0[i]))
                 r.first_token_t = t1  # prefill emits the first token
                 if r.submit_t is not None:
                     m.histogram("lm_queue_wait_s").record(t0 - r.submit_t)
                     m.histogram("lm_ttft_s").record(t1 - r.submit_t)
                 self.live[s] = r
+            m.counter("lm_requests_admitted").inc(ok)
+            # prefill emits each request's first token: count it here so
+            # lm_tokens_generated matches sum(len(r.out)) — the decode
+            # loop only adds the per-step occupancy (decode tokens)
+            m.counter("lm_tokens_generated").inc(ok)
+            if ok < len(grp):
+                break
 
     def _admit_paged(self, grp: List[Request], free: List[int],
                      plb: int) -> bool:
@@ -358,6 +499,11 @@ class LMServer:
                     f"request {r.rid} needs {need} pages but the pool "
                     f"holds only {self.pool.pages}; raise --pool-pages "
                     f"or lower max_new")
+            if need > self.pool.capacity:
+                # quarantined pages shrank the pool below this request's
+                # need: it can never fit — terminal, not a bounce
+                self._fail(r, "capacity")
+                continue
             nm = len(matched)
             # the suffix must re-emit from row plen-1 (whose logits pick
             # the first output token), so even a full match of every
@@ -381,7 +527,10 @@ class LMServer:
                         break
                 pages = self.pool.alloc(fresh_needed)
             if pages is None:
-                if not plans and not any(x is not None for x in self.live):
+                # a fault-injected squeeze returns its pages in a known
+                # number of ticks: bounce, don't raise
+                if (not plans and not self._squeezes
+                        and not any(x is not None for x in self.live)):
                     raise RuntimeError(
                         f"pool exhausted with no live requests to "
                         f"retire: request {r.rid} needs {fresh_needed} "
@@ -409,6 +558,7 @@ class LMServer:
             plans.append((r, s, mapping, keys, s0))
         if bounced:
             self.queue[:0] = bounced
+        done_plans, launch_failed = [], False
         if plans:
             slot_ids = np.array([p[1] for p in plans], np.int32)
             self.cache = self.ex.table_write(
@@ -416,29 +566,79 @@ class LMServer:
                 jnp.asarray(self.table_np[slot_ids]))
             cold = [p for p in plans if p[4] == 0]
             hits = [p for p in plans if p[4] > 0]
-            if cold:
-                self._launch_prefill(cold, plb, history=False)
             by_slb = {}
             for p in hits:  # suffixes re-bucket by their OWN length
                 slb = bucket_for(len(p[0].prompt) - p[4],
                                  self.prefill_buckets)
                 by_slb.setdefault(slb, []).append(p)
-            for slb in sorted(by_slb):
-                self._launch_prefill(by_slb[slb], slb, history=True)
+            groups = ([(cold, plb, False)] if cold else []) + \
+                [(by_slb[slb], slb, True) for slb in sorted(by_slb)]
+            for gi, (g, lenb, hist) in enumerate(groups):
+                try:
+                    self._launch_prefill(g, lenb, history=hist)
+                    done_plans.extend(g)
+                except (InjectedFault, WorkerCrash) as e:
+                    # failed group + every unlaunched group unwind
+                    # (exactly one decref per mapped page) and requeue in
+                    # plan order; already-launched groups stay admitted
+                    lost = [p for gg, _, _ in groups[gi:] for p in gg]
+                    self._unwind_plans(lost)
+                    self._requeue([p[0] for p in lost], e)
+                    launch_failed = True
+                    break
             if self.prefix is not None:
                 # register fresh full-prompt pages; the index holds one
                 # reference so hot prefixes outlive their creator.
                 # register() refuses duplicates (already-matched pages,
                 # COW copies whose key is resident) so no double-count.
-                for r, _, mapping, keys, _ in plans:
+                for r, _, mapping, keys, _ in done_plans:
                     for j in range(len(r.prompt) // psz):
                         if self.prefix.register(keys[j], mapping[j]):
                             self.pool.incref([mapping[j]])
+            if self.kv_crc:
+                self._seal_plans(done_plans)
             # prefill-emitted first tokens (mirrors the contiguous path)
-            m.counter("lm_tokens_generated").inc(len(plans))
+            m.counter("lm_tokens_generated").inc(len(done_plans))
         m.gauge("lm_pool_pages_used").set(self.pool.used_pages)
         m.gauge("lm_pool_pages_free").set(self.pool.free_pages)
-        return not bounced
+        return not bounced and not launch_failed
+
+    def _unwind_plans(self, plans):
+        """Roll back planned-but-unlaunched admissions after a prefill
+        failure: every page in a plan's mapping carries exactly ONE
+        reference from this admission (fresh alloc, prefix incref, or
+        COW dst), so one decref per page restores the pool, and the
+        table rows go back to the sentinel on host and device."""
+        sids = []
+        for r, s, mapping, _keys, _s0 in plans:
+            self.pool.decref(mapping)
+            self.table_np[s] = self.pool_pages
+            sids.append(s)
+        if sids:
+            ss = np.asarray(sorted(sids), np.int32)
+            self.cache = self.ex.table_write(
+                self.cache, jnp.asarray(ss),
+                jnp.asarray(self.table_np[ss]))
+
+    def _seal_plans(self, plans):
+        """Tag-and-seal every fully-prefilled prompt page of the freshly
+        admitted plans: pages wholly below plen ((j+1)*page_size <= plen)
+        are never written again (decode writes rows >= plen), so their
+        GF(2) CRC is stable until the slot's pages are reclaimed. One
+        batched ``crc_tags`` launch covers all new pages."""
+        psz = self.page_size
+        to_seal = sorted({p for r, _s, mapping, _k, _s0 in plans
+                          for j, p in enumerate(mapping)
+                          if (j + 1) * psz <= len(r.prompt)
+                          and not self.pool.is_sealed(p)})
+        if not to_seal:
+            return
+        from ..gf2.ops import crc_tags
+        bufs = self.ex.read_pages(self.cache, to_seal)
+        tags = crc_tags(bufs)
+        for p, t in zip(to_seal, tags):
+            self.pool.seal(p, int(t))
+        self.metrics.counter("lm_pages_sealed").inc(len(to_seal))
 
     def _launch_prefill(self, plans, lenb: int, *, history: bool):
         """One paged prefill launch: cold prompts (history=False) or the
@@ -485,6 +685,7 @@ class LMServer:
         """Evict a finished request from its slot and record telemetry."""
         m = self.metrics
         r.retire_t = now
+        r.outcome = "completed"
         m.counter("lm_requests_retired").inc()
         m.counter("lm_slots_evicted").inc()
         m.counter(f"lm_finish_{r.finish_reason}").inc()
@@ -528,10 +729,20 @@ class LMServer:
             if r is not None:
                 toks[s, 0] = r.out[-1]
         t0 = time.perf_counter()
-        with self._span("decode_step", occupied=occupied):
-            nxt, self.cache = self.ex.decode(jnp.asarray(toks), self.cache,
-                                             self._next_key())
-            nxt = np.asarray(nxt)  # the only host transfer: [S] token ids
+        try:
+            with self._span("decode_step", occupied=occupied):
+                nxt, self.cache = self.ex.decode(jnp.asarray(toks),
+                                                 self.cache,
+                                                 self._next_key())
+                nxt = np.asarray(nxt)  # the only host transfer: [S] ids
+        except (InjectedFault, WorkerCrash) as e:
+            # the seam fires before the donating dispatch, so the cache
+            # is intact: skip this tick and redo the step (the fault is
+            # consumed — the retry always makes progress)
+            if isinstance(e, WorkerCrash):
+                self.ex.on_worker_crash(e.wid)
+            self.metrics.counter("lm_retries").inc()
+            return []
         t1 = time.perf_counter()
         self.decode_steps += 1
         m = self.metrics
@@ -574,12 +785,18 @@ class LMServer:
             if r is not None:
                 toks[s] = r.out[-1]
         t0 = time.perf_counter()
-        with self._span("spec_round", occupied=occupied,
-                        draft_k=self.draft_k):
-            emitted, n_emit, self.cache = self.ex.spec_round(
-                jnp.asarray(toks), self.cache, self._next_key())
-            emitted = np.asarray(emitted)  # [S, draft_k+1] token ids
-            n_emit = np.asarray(n_emit)    # [S] accepted prefix + 1
+        try:
+            with self._span("spec_round", occupied=occupied,
+                            draft_k=self.draft_k):
+                emitted, n_emit, self.cache = self.ex.spec_round(
+                    jnp.asarray(toks), self.cache, self._next_key())
+                emitted = np.asarray(emitted)  # [S, draft_k+1] token ids
+                n_emit = np.asarray(n_emit)    # [S] accepted prefix + 1
+        except (InjectedFault, WorkerCrash) as e:
+            if isinstance(e, WorkerCrash):
+                self.ex.on_worker_crash(e.wid)
+            self.metrics.counter("lm_retries").inc()
+            return []
         t1 = time.perf_counter()
         self.decode_steps += 1
         m = self.metrics
@@ -614,11 +831,130 @@ class LMServer:
             self._reclaim_pages()
         return retired
 
+    # -- chaos tick: fault application + integrity scrub ---------------------
+
+    def _tick_faults(self):
+        """Apply this tick's step-seam faults: bit-flips (KV page or
+        resident weight container) and pool squeezes. Runs BEFORE the
+        scrub, so with ``scrub_every=1`` every flip is detected before
+        any decode step can read the corrupted page."""
+        m = self.metrics
+        # release expired squeezes first: a hold of 1 spans exactly one
+        # admission+step and frees on the next tick
+        keep = []
+        for sq in self._squeezes:
+            sq[0] -= 1
+            if sq[0] <= 0:
+                self.pool.decref(sq[1])
+            else:
+                keep.append(sq)
+        self._squeezes = keep
+        hits = self.faults.fire("step")
+        for f in hits:
+            if f.kind == "stall":
+                time.sleep(f.stall_s)
+        flips = self._pending_flips + [f for f in hits if f.kind == "flip"]
+        self._pending_flips = []
+        for f in flips:
+            if f.param:
+                from ..core.engine import flip_container_bit
+                self.ex.reload_params(flip_container_bit(
+                    self.ex.params, index=max(f.page, 0), bit=f.bit))
+                m.counter("lm_faults_injected", kind="param_flip").inc()
+            elif self.paged:
+                page = f.page
+                if page < 0:
+                    sealed = self.pool.sealed_items()
+                    if not sealed:  # nothing sealed yet: fire next tick
+                        self._pending_flips.append(f)
+                        continue
+                    page = min(sealed)
+                self.cache = self.ex.corrupt_page(self.cache, page, f.bit)
+                m.counter("lm_faults_injected", kind="kv_flip").inc()
+        for f in hits:
+            if f.kind == "squeeze" and self.paged:
+                k = min(f.pages, self.pool.free_pages)
+                if k > 0:
+                    self._squeezes.append([f.hold, self.pool.alloc(k)])
+                    m.counter("lm_faults_injected", kind="squeeze").inc()
+
+    def _scrub(self):
+        """Integrity scrub: recompute the GF(2) CRC of every sealed KV
+        page (one batched CRC-as-MVP launch) and of every tagged weight
+        container; quarantine drifted pages (their requests re-prefill or
+        fail with 'corruption'), repair drifted containers from their
+        quantization shadow."""
+        m = self.metrics
+        t0 = time.perf_counter()
+        if self.kv_crc:
+            sealed = self.pool.sealed_items()
+            if sealed:
+                from ..gf2.ops import crc_tags
+                pages = sorted(sealed)
+                bufs = self.ex.read_pages(self.cache, pages)
+                tags = crc_tags(bufs)
+                m.counter("lm_scrub_pages").inc(len(pages))
+                for p, t in zip(pages, tags):
+                    if int(t) != sealed[p]:
+                        self._quarantine_page(p)
+        if self._param_tags:
+            from ..core.engine import scrub_params
+            params, report = scrub_params(self.ex.params, self._param_tags)
+            for path, verdict in report.items():
+                if verdict != "clean":
+                    m.counter(f"lm_param_scrub_{verdict}").inc()
+            if any(v == "repaired" for v in report.values()):
+                self.ex.reload_params(params)
+        m.histogram("lm_scrub_s").record(time.perf_counter() - t0)
+
+    def _quarantine_page(self, p: int):
+        """A sealed page failed its CRC re-check: pull it out of
+        circulation permanently (it never re-enters the free list) and
+        recompute every request that mapped it — abort the slot, clear
+        the partial output, and re-prefill from the prompt (greedy
+        re-generation is bit-identical); past the retry budget the
+        request fails terminally with reason 'corruption'. The page is
+        also evicted from the prefix index so no future prompt can match
+        into poisoned history."""
+        m = self.metrics
+        m.counter("lm_pages_quarantined").inc()
+        if self.prefix is not None and self.prefix.evict_page(p):
+            self.pool.decref([p])  # the index's registration reference
+        self.pool.quarantine(p)
+        requeue = []
+        for s, r in enumerate(self.live):
+            if r is None or p not in self.table_np[s]:
+                continue
+            self._abort_slot(s)
+            r.out.clear()  # restart generation from the prompt
+            r.first_token_t = None
+            r.retries += 1
+            m.counter("lm_retries").inc()
+            if r.retries > self.max_retries:
+                self._fail(r, "corruption")
+            else:
+                requeue.append(r)
+        self.queue[:0] = requeue
+
+    def tick(self) -> List[Request]:
+        """One scheduler tick: faults -> scrub -> deadlines -> admission
+        -> decode step. The ordering is the scrub-before-read guarantee:
+        a bit flipped at this tick's fault stage is caught by this
+        tick's scrub (``scrub_every=1``) before the decode step can read
+        it — corrupted tokens are never emitted silently."""
+        self._ticks += 1
+        if self.faults is not None:
+            self._tick_faults()
+        if self.scrub_every and self._ticks % self.scrub_every == 0:
+            self._scrub()
+        self._expire_deadlines()
+        self._admit()
+        return self.step()
+
     def run(self) -> List[Request]:
         done = []
         while self.queue or any(r is not None for r in self.live):
-            self._admit()
-            done.extend(self.step())
+            done.extend(self.tick())
         return done
 
 
@@ -664,6 +1000,24 @@ def run_and_report(server: LMServer, requests: List[Request], *,
             line += (f", prefix hits {hit}/{tot} pages "
                      f"({hit / max(tot, 1):.0%})")
         print(line)
+    shed = server.metrics.total("lm_requests_shed")
+    failed = server.metrics.total("lm_requests_failed")
+    retries = server.metrics.counter("lm_retries").value
+    if shed or failed or retries or server.terminal:
+        reasons = sorted({r.fail_reason for r in server.terminal
+                          if r.fail_reason})
+        print(f"outcomes: {len(completed)} completed, {shed} shed, "
+              f"{failed} failed"
+              + (f" ({', '.join(reasons)})" if reasons else "")
+              + f"; {retries} retries, "
+              f"{server.metrics.total('lm_worker_restarts')} worker "
+              f"restarts"
+              + (", DEGRADED (prefill on decode mesh)"
+                 if server.metrics.gauge('lm_degraded').value else ""))
+    quar = server.metrics.total("lm_pages_quarantined")
+    if quar:
+        print(f"integrity: {quar} KV pages quarantined by CRC scrub "
+              f"({server.metrics.total('lm_scrub_pages')} page checks)")
     lat = server.metrics.histogram("lm_request_latency_s")
     ttft = server.metrics.histogram("lm_ttft_s")
     if lat.count:
@@ -683,6 +1037,56 @@ def run_and_report(server: LMServer, requests: List[Request], *,
     if show_metrics:
         print(server.metrics.prometheus_text(), end="")
     return completed
+
+
+def chaos_check(server: LMServer) -> List[str]:
+    """The chaos invariants (shared by ``--chaos-gate`` and the test
+    suite). Returns human-readable violations; empty = all held.
+
+      1. no request lost: submitted == completed + shed + failed, and
+         nothing is still queued or resident;
+      2. page-pool refcount conservation: every remaining reference is a
+         live slot mapping, a prefix registration, or an injected
+         squeeze hold — nothing leaked, nothing double-freed;
+      3. every injected KV bit-flip was caught by the CRC scrub (each
+         flip quarantines the page it corrupted — schedule flips on
+         distinct scrub intervals).
+    """
+    m = server.metrics
+    problems: List[str] = []
+    submitted = m.counter("lm_requests_submitted").value
+    retired = m.counter("lm_requests_retired").value
+    shed = m.total("lm_requests_shed")
+    failed = m.total("lm_requests_failed")
+    if submitted != retired + shed + failed:
+        problems.append(
+            f"request conservation: {submitted} submitted != "
+            f"{retired} completed + {shed} shed + {failed} failed")
+    if server.queue or any(r is not None for r in server.live):
+        problems.append("requests still queued/resident after run")
+    for r in server.terminal:
+        if r.outcome not in ("shed", "failed"):
+            problems.append(
+                f"terminal request {r.rid} has outcome {r.outcome!r}")
+    if server.paged:
+        refs = int(server.pool.refcount.sum())
+        mapped = int(sum((server.table_np[s] < server.pool_pages).sum()
+                         for s, r in enumerate(server.live)
+                         if r is not None))
+        registered = (server.prefix.registered_pages
+                      if server.prefix is not None else 0)
+        held = sum(len(sq[1]) for sq in server._squeezes)
+        if refs != mapped + registered + held:
+            problems.append(
+                f"pool conservation: {refs} refs != {mapped} slot "
+                f"mappings + {registered} prefix registrations + "
+                f"{held} squeeze holds")
+    flips = m.counter("lm_faults_injected", kind="kv_flip").value
+    quar = m.counter("lm_pages_quarantined").value
+    if server.kv_crc and quar < flips:
+        problems.append(f"{flips} KV bit-flips injected but only {quar} "
+                        f"pages quarantined by the scrub")
+    return problems
 
 
 def main():
@@ -740,6 +1144,31 @@ def main():
                          "after the run")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the metrics snapshot as JSON")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="inject deterministic faults: a JSON file, an "
+                         "inline JSON list, or 'kind:seam:at[:k=v,...];...'"
+                         " (see launch/faults.py)")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="seeded random chaos schedule instead of an "
+                         "explicit --fault-plan")
+    ap.add_argument("--max-retries", type=int, default=1,
+                    help="per-request retry budget before terminal "
+                         "failure")
+    ap.add_argument("--max-worker-restarts", type=int, default=1,
+                    help="rebuilds per dead prefill worker before it is "
+                         "dropped (empty pool => degraded mode)")
+    ap.add_argument("--kv-crc", action="store_true",
+                    help="GF(2)-CRC-tag sealed prompt pages (paged only); "
+                         "the scrub quarantines drifted pages")
+    ap.add_argument("--scrub-every", type=int, default=0,
+                    help="scrub sealed pages + weight containers every N "
+                         "scheduler ticks (0 = off; 1 guarantees flips "
+                         "are caught before any decode reads them)")
+    ap.add_argument("--chaos-gate", action="store_true",
+                    help="exit nonzero unless every request reached one "
+                         "terminal outcome, the page pool conserved "
+                         "refcounts, and every injected KV flip was "
+                         "caught by the scrub")
     args = ap.parse_args()
 
     cfg = load_arch(args.arch).smoke()
@@ -758,6 +1187,13 @@ def main():
         mode = "serve"
         report = serving_cycle_report(params, cfg)
 
+    faults = None
+    if args.fault_plan:
+        faults = FaultPlan.parse(args.fault_plan)
+    elif args.fault_seed is not None:
+        faults = FaultPlan.seeded(args.fault_seed,
+                                  n_requests=args.requests)
+
     mesh = (make_serving_mesh(parse_mesh_spec(args.mesh))
             if args.mesh else None)
     server = LMServer(cfg, params, slots=args.slots, max_seq=args.max_seq,
@@ -768,7 +1204,10 @@ def main():
                       spec_decode=args.spec_decode, draft_k=args.draft_k,
                       mesh=mesh, prefill_devices=args.prefill_devices,
                       decode_devices=args.decode_devices,
-                      prefill_workers=args.prefill_workers)
+                      prefill_workers=args.prefill_workers,
+                      faults=faults, max_retries=args.max_retries,
+                      max_worker_restarts=args.max_worker_restarts,
+                      kv_crc=args.kv_crc, scrub_every=args.scrub_every)
     rng = np.random.default_rng(0)
     run_and_report(
         server,
@@ -780,6 +1219,14 @@ def main():
         with open(args.metrics_out, "w") as f:
             json.dump(server.metrics.snapshot(), f, indent=1)
         print(f"wrote metrics snapshot to {args.metrics_out}")
+    if args.chaos_gate:
+        problems = chaos_check(server)
+        if problems:
+            for p in problems:
+                print(f"CHAOS GATE FAILED: {p}")
+            sys.exit(1)
+        print("chaos gate passed: no request lost, pool conserved, "
+              "all injected flips detected")
 
 
 if __name__ == "__main__":

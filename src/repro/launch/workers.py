@@ -28,12 +28,21 @@ Worker attribution rides along: every executor dispatch is wrapped in a
 executors record per-worker labeled series (``lm_worker_dispatches``,
 ``lm_prefill_s{worker=...}``, ``lm_handoff_latency``) next to the
 scheduler's unlabeled aggregates.
+
+Chaos hardening (PR 10): every executor accepts an optional
+:class:`repro.launch.faults.FaultPlan` and calls ``fire`` at its seams
+(prefill dispatch, handoff, decode dispatch) — with no plan the seams
+cost one ``is not None`` check. A :class:`WorkerCrash` escaping a seam
+is the scheduler's signal to retry/requeue; ``DisaggExecutor.
+on_worker_crash`` owns the pool-side recovery (bounded restart, drop,
+and graceful degradation to decode-mesh prefill when the pool is gone),
+with in-process heartbeat supervision via ``launch/ft.py``'s
+:class:`HeartbeatBook`.
 """
 from __future__ import annotations
 
 import contextlib
 import time
-import warnings
 from typing import List, Optional
 
 import jax
@@ -52,7 +61,9 @@ from ..serve.step import (
     make_speculative_decode_step,
 )
 from ..sharding.rules import default_rules, fitted_shardings
-from .mesh import make_serving_mesh
+from .faults import FaultPlan, WorkerCrash  # noqa: F401  (re-exported)
+from .ft import HeartbeatBook
+from .mesh import carve_devices, make_serving_mesh
 from .specs import serving_param_shardings
 
 
@@ -85,10 +96,13 @@ class _DecodeSide:
     def __init__(self, cfg: ModelConfig, params, *, mode: str, rules,
                  mesh, temperature: float, top_k: int, paged: bool,
                  spec_decode: bool, draft_k: int,
-                 metrics: Optional[MetricsRegistry], worker: str):
+                 metrics: Optional[MetricsRegistry], worker: str,
+                 faults: Optional[FaultPlan] = None):
         self.cfg, self.mode, self.mesh = cfg, mode, mesh
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.worker = worker
+        self.faults = faults
+        self.temperature, self.top_k = temperature, top_k
         if mesh is not None:
             rules = (rules if rules is not None
                      else default_rules()).for_mesh(mesh)
@@ -164,9 +178,19 @@ class _DecodeSide:
             sh = fitted_shardings(self.mesh, self.rules, axes, cache)
             return jax.device_put(cache, sh)
 
+    def _fire(self, seam: str, wid: Optional[str] = None) -> None:
+        """Fault seam: consume + act on this dispatch's scheduled faults.
+        Always fires BEFORE the jitted (donating) call so an injected
+        raise leaves the caller's cache pytree untouched and a retry is
+        clean."""
+        if self.faults is not None:
+            w = wid if wid is not None else self.worker
+            self.faults.raise_any(self.faults.fire(seam, worker=w), wid=w)
+
     # -- decode-side entry points (scheduler-facing) -------------------------
 
     def decode(self, toks, cache, key):
+        self._fire("decode")
         t0 = time.perf_counter()
         with self._ctx(), self._tag():
             out = self._decode(self.params, toks, cache, key)
@@ -174,6 +198,7 @@ class _DecodeSide:
         return out
 
     def spec_round(self, toks, cache, key):
+        self._fire("decode")
         t0 = time.perf_counter()
         with self._ctx(), self._tag():
             out = self._spec(self.params, toks, cache, key)
@@ -195,6 +220,60 @@ class _DecodeSide:
         m.histogram(f"lm_{kind}_worker_s", worker=self.worker,
                     role=self.role).record(time.perf_counter() - t0)
 
+    # -- integrity / recovery hooks (scheduler-facing) -----------------------
+
+    def read_pages(self, cache, page_ids) -> np.ndarray:
+        """Host byte image ``[P, nbytes]`` of the given physical pages,
+        concatenated across every pool leaf (layers then dense_layers, in
+        tree-leaf order) — the unit the KV CRC scrub tags and re-checks.
+        Deterministic: leaf order and dtype byte layout are fixed by the
+        cache pytree."""
+        ids = [int(p) for p in page_ids]
+        idx = jnp.asarray(ids, jnp.int32)
+        per_page: List[List[bytes]] = [[] for _ in ids]
+        for grp in ("layers", "dense_layers"):
+            if grp not in cache:
+                continue
+            for leaf in jax.tree.leaves(cache[grp]):
+                rows = np.asarray(jnp.take(leaf, idx, axis=1))
+                rows = np.moveaxis(rows, 1, 0)  # [P, n_layers, ...]
+                for i in range(len(ids)):
+                    per_page[i].append(rows[i].tobytes())
+        blobs = [b"".join(parts) for parts in per_page]
+        if not blobs:
+            return np.zeros((0, 0), np.uint8)
+        return np.frombuffer(b"".join(blobs),
+                             np.uint8).reshape(len(ids), -1)
+
+    def corrupt_page(self, cache, page: int, bit: int):
+        """Flip one bit of physical page ``page`` in the first pool leaf
+        (host round-trip) — the chaos injector's KV bit-flip. Returns the
+        updated cache; the page's stored CRC tag no longer matches."""
+        grp = "layers" if "layers" in cache else "dense_layers"
+        leaves, treedef = jax.tree.flatten(cache[grp])
+        leaf = leaves[0]
+        block = np.asarray(leaf[:, page])
+        raw = np.frombuffer(block.tobytes(), np.uint8).copy()
+        raw[(bit // 8) % len(raw)] ^= np.uint8(1 << (bit % 8))
+        fixed = np.frombuffer(raw.tobytes(),
+                              block.dtype).reshape(block.shape)
+        leaves[0] = leaf.at[:, page].set(jnp.asarray(fixed))
+        out = dict(cache)
+        out[grp] = jax.tree.unflatten(treedef, leaves)
+        return out
+
+    def reload_params(self, params) -> None:
+        """Swap in (repaired) resident weights — the scrub path after a
+        shadow repack. Re-places onto the mesh when sharded."""
+        if self.mesh is not None:
+            params = _place_params(self.mesh, self.rules, params, self.cfg)
+        self.params = params
+
+    def on_worker_crash(self, wid: str) -> str:
+        """Recovery verdict for a crashed worker. The unified executor
+        has no pool to lose — a crash is always retryable in place."""
+        return "retry"
+
 
 class LocalExecutor(_DecodeSide):
     """Unified executor: prefill + decode share one device (or one
@@ -209,11 +288,11 @@ class LocalExecutor(_DecodeSide):
                  spec_decode: bool = False, draft_k: int = 4,
                  max_seq: int = 128, cache_dtype=None,
                  metrics: Optional[MetricsRegistry] = None,
-                 worker: str = "w0"):
+                 worker: str = "w0", faults: Optional[FaultPlan] = None):
         super().__init__(cfg, params, mode=mode, rules=rules, mesh=mesh,
                          temperature=temperature, top_k=top_k, paged=paged,
                          spec_decode=spec_decode, draft_k=draft_k,
-                         metrics=metrics, worker=worker)
+                         metrics=metrics, worker=worker, faults=faults)
         self.max_seq = max_seq
         del cache_dtype  # resident cache dtype is the scheduler's concern
         # compiles once per (batch-bucket, length-bucket) pair
@@ -229,6 +308,7 @@ class LocalExecutor(_DecodeSide):
         (first tokens [B] np, scratch handle for ``write_slot``).
         The scratch cache uses the config's native KV dtype (matching
         the single-executor server); ``write_slot`` casts at the copy."""
+        self._fire("prefill")
         blen = int(toks.shape[0])
         t0 = time.perf_counter()
         with self._ctx(), self._tag():
@@ -247,6 +327,7 @@ class LocalExecutor(_DecodeSide):
                       *, history: bool):
         """Paged prefill straight through the block table into the
         resident pools (cold prompts or prefix-hit suffixes)."""
+        self._fire("prefill")
         fn = self._prefill_hit if history else self._prefill
         t0 = time.perf_counter()
         with self._ctx(), self._tag():
@@ -265,10 +346,15 @@ class PrefillWorker:
     def __init__(self, wid: str, cfg: ModelConfig, params, devices, *,
                  mode: str, rules, temperature: float, top_k: int,
                  paged: bool, page_size: int, max_seq: int, cache_dtype,
-                 metrics: MetricsRegistry):
+                 metrics: MetricsRegistry,
+                 faults: Optional[FaultPlan] = None,
+                 hb: Optional[HeartbeatBook] = None):
         self.wid, self.cfg, self.max_seq = wid, cfg, max_seq
         self.paged, self.page_size = paged, page_size
         self.metrics = metrics
+        self.faults = faults
+        self.hb = hb
+        self.devices = list(devices)  # restart recipe: same carve slice
         self._ckw = {} if cache_dtype is None else {"dtype": cache_dtype}
         self.mesh = make_serving_mesh((1, len(devices)), devices=devices)
         self.rules = (rules if rules is not None
@@ -288,8 +374,14 @@ class PrefillWorker:
             return jax.tree.map(leaf, c)
         self._extract_row = jax.jit(extract_row)
 
+    def _fire(self, seam: str) -> None:
+        if self.faults is not None:
+            self.faults.raise_any(self.faults.fire(seam, worker=self.wid),
+                                  wid=self.wid)
+
     def prefill(self, toks, lens, key):
         """Contiguous prefill on this worker's devices."""
+        self._fire("prefill")
         blen = int(toks.shape[0])
         t0 = time.perf_counter()
         with self.mesh, _flight.phase("", window=0, worker=self.wid):
@@ -305,6 +397,7 @@ class PrefillWorker:
         identity block table, so the decode side can adopt exactly the
         pages each admitted request touched. Dead batch rows keep the
         slot sentinel (their pos scatter drops)."""
+        self._fire("prefill")
         blen = int(toks.shape[0])
         pool = blen * n_pages
         table = np.arange(pool, dtype=np.int32).reshape(blen, n_pages)
@@ -341,6 +434,8 @@ class PrefillWorker:
                   role="prefill", kind="prefill").inc()
         m.histogram("lm_prefill_worker_s", worker=self.wid,
                     role="prefill").record(time.perf_counter() - t0)
+        if self.hb is not None:  # heartbeat per successful dispatch
+            self.hb.beat(self.wid)
 
 
 class DisaggExecutor(_DecodeSide):
@@ -357,7 +452,17 @@ class DisaggExecutor(_DecodeSide):
 
     Unsupported combinations raise at construction: prefix-cache reuse
     needs prefill to read the *resident* pools' history, which is
-    exactly the coupling disaggregation removes."""
+    exactly the coupling disaggregation removes (degraded mode, where
+    prefill runs on the decode mesh anyway, lifts the restriction).
+
+    Recovery: a :class:`WorkerCrash` at a prefill/handoff seam routes
+    through :meth:`on_worker_crash` — the dead worker is rebuilt on its
+    own device slice up to ``max_worker_restarts`` times, then dropped
+    from the pool; when the last worker is gone the executor *degrades*
+    instead of failing: prefill falls back to the decode mesh
+    (``LocalExecutor`` layout, lazily compiled), so the server keeps
+    serving at reduced throughput. :meth:`check_stragglers` applies the
+    same verdicts to workers whose heartbeats go silent."""
 
     role = "disagg"
 
@@ -368,25 +473,30 @@ class DisaggExecutor(_DecodeSide):
                  top_k: int = 0, paged: bool = False, page_size: int = 16,
                  spec_decode: bool = False, draft_k: int = 4,
                  max_seq: int = 128, cache_dtype=None,
-                 metrics: Optional[MetricsRegistry] = None):
-        devs = list(jax.devices())
-        need = prefill_devices + decode_devices
-        if need > len(devs):
-            warnings.warn(
-                f"disaggregated serving wants {prefill_devices}+"
-                f"{decode_devices} devices but only {len(devs)} are "
-                f"attached; pools will overlap", stacklevel=2)
-        pdevs = [devs[i % len(devs)] for i in range(prefill_devices)]
-        ddevs = [devs[(prefill_devices + i) % len(devs)]
-                 for i in range(decode_devices)]
+                 metrics: Optional[MetricsRegistry] = None,
+                 faults: Optional[FaultPlan] = None,
+                 max_worker_restarts: int = 1):
+        pdevs, ddevs = carve_devices(prefill_devices, decode_devices)
         dshape = tuple(decode_mesh_shape or (len(ddevs), 1))
         mesh = make_serving_mesh(dshape, devices=ddevs)
         super().__init__(cfg, params, mode=mode, rules=rules, mesh=mesh,
                          temperature=temperature, top_k=top_k, paged=paged,
                          spec_decode=spec_decode, draft_k=draft_k,
-                         metrics=metrics, worker="d0")
+                         metrics=metrics, worker="d0", faults=faults)
         self.max_seq = max_seq
         self.page_size = page_size
+        self.max_worker_restarts = max_worker_restarts
+        self.degraded = False
+        self.hb = HeartbeatBook()
+        self._restarts: dict = {}
+        self._fb: dict = {}  # degraded-mode prefill fns, built on demand
+        # worker rebuild recipe: the ORIGINAL (pre-placement) params plus
+        # the construction kwargs — self.params is already mesh-placed
+        self._init_params = params
+        self._worker_kw = dict(mode=mode, rules=rules,
+                               temperature=temperature, top_k=top_k,
+                               paged=paged, page_size=page_size,
+                               max_seq=max_seq, cache_dtype=cache_dtype)
 
         nw = prefill_workers or 1
         if len(pdevs) % nw:
@@ -394,11 +504,7 @@ class DisaggExecutor(_DecodeSide):
                              f"into {nw} workers")
         per = len(pdevs) // nw
         self.pool: List[PrefillWorker] = [
-            PrefillWorker(f"p{i}", cfg, params, pdevs[i * per:(i + 1) * per],
-                          mode=mode, rules=rules, temperature=temperature,
-                          top_k=top_k, paged=paged, page_size=page_size,
-                          max_seq=max_seq, cache_dtype=cache_dtype,
-                          metrics=self.metrics)
+            self._mk_worker(f"p{i}", pdevs[i * per:(i + 1) * per])
             for i in range(nw)]
         self._rr = 0
 
@@ -424,22 +530,94 @@ class DisaggExecutor(_DecodeSide):
                 return out
             self._adopt = jax.jit(adopt, donate_argnums=(0,))
 
-    def _next_worker(self) -> PrefillWorker:
+    def _mk_worker(self, wid: str, devices) -> PrefillWorker:
+        return PrefillWorker(wid, self.cfg, self._init_params, devices,
+                             metrics=self.metrics, faults=self.faults,
+                             hb=self.hb, **self._worker_kw)
+
+    def _next_worker(self) -> Optional[PrefillWorker]:
+        if not self.pool:  # degraded: prefill falls back to decode mesh
+            return None
         w = self.pool[self._rr % len(self.pool)]
         self._rr += 1
         return w
+
+    # -- recovery ------------------------------------------------------------
+
+    def on_worker_crash(self, wid: str) -> str:
+        """Recovery verdict for a dead prefill worker: rebuild it on its
+        own device slice (``'restarted'``, bounded by
+        ``max_worker_restarts``), then drop it (``'dropped'``); losing
+        the last worker flips the executor into degraded decode-mesh
+        prefill (``'degraded'``). The scheduler re-prefills whatever the
+        deceased had in flight either way."""
+        self.hb.forget(wid)
+        idx = next((i for i, w in enumerate(self.pool) if w.wid == wid),
+                   None)
+        if idx is None:  # already dropped (or decode-side attribution)
+            return "degraded" if self.degraded else "retry"
+        n = self._restarts.get(wid, 0)
+        if n < self.max_worker_restarts:
+            self._restarts[wid] = n + 1
+            self.pool[idx] = self._mk_worker(wid, self.pool[idx].devices)
+            self.metrics.counter("lm_worker_restarts", worker=wid).inc()
+            return "restarted"
+        self.pool.pop(idx)
+        if self.pool:
+            self.metrics.counter("lm_worker_drops", worker=wid).inc()
+            return "dropped"
+        self.degraded = True
+        self.metrics.gauge("lm_degraded").set(1.0)
+        return "degraded"
+
+    def check_stragglers(self, timeout: float, now=None) -> List[str]:
+        """Heartbeat supervision (``HeartbeatBook``): a worker silent for
+        ``timeout`` seconds is treated exactly like a crash. Returns the
+        ``wid:verdict`` actions taken (empty = everyone healthy)."""
+        return [f"{wid}:{self.on_worker_crash(wid)}"
+                for wid in self.hb.stale(timeout, now)]
+
+    def _fallback_prefill(self, *, paged: bool, history: bool = False):
+        """Degraded-mode prefill entry point on the decode mesh, compiled
+        on first use (the happy path never pays for it)."""
+        k = (paged, history)
+        fn = self._fb.get(k)
+        if fn is None:
+            fn = self._fb[k] = make_prefill_select_step(
+                self.cfg, self.rules, self.mode,
+                temperature=self.temperature, top_k=self.top_k,
+                paged=paged, history=history)
+        return fn
 
     # -- contiguous path -----------------------------------------------------
 
     def prefill(self, toks, lens, key):
         w = self._next_worker()
+        if w is None:  # degraded: prefill locally on the decode mesh
+            self._fire("prefill")
+            blen = int(toks.shape[0])
+            t0 = time.perf_counter()
+            with self._ctx(), self._tag():
+                c1, _ = lm.init_cache(self.cfg, blen, self.max_seq)
+                tok0, c1 = self._fallback_prefill(paged=False)(
+                    self.params, toks, lens, c1, key)
+                tok0 = np.asarray(tok0)
+            self._account("prefill", t0)
+            return tok0, _PrefillHandle(None, c1)
         tok0, c1 = w.prefill(toks, lens, key)
         return tok0, _PrefillHandle(w, c1)
 
     def write_slot(self, cache, handle: _PrefillHandle, row, slot):
         """The contiguous handoff: extract one finished sequence row on
         the prefill worker, ``jax.device_put`` it onto the decode mesh,
-        scatter it into the donated resident cache."""
+        scatter it into the donated resident cache. Degraded-mode
+        handles (no worker) are already on our mesh — plain local
+        write, no handoff."""
+        if handle.worker is None:
+            with self._ctx():
+                return self._write(cache, handle.cache, jnp.int32(row),
+                                   jnp.int32(slot))
+        self._fire("handoff", wid=handle.worker.wid)
         t0 = time.perf_counter()
         row_cache = handle.worker.extract_row(handle.cache, row)
         moved = _replicate_on(self.mesh, row_cache)
@@ -457,11 +635,21 @@ class DisaggExecutor(_DecodeSide):
         scratch pool on a prefill worker, move the touched pages to the
         decode mesh, and adopt them at the scheduler's physical page ids
         through the resident block table."""
+        w = self._next_worker()
+        if w is None:  # degraded: straight through the resident table
+            self._fire("prefill")
+            fn = self._fallback_prefill(paged=True, history=history)
+            t0 = time.perf_counter()
+            with self._ctx(), self._tag():
+                tok0, cache = fn(self.params, toks, lens, starts,
+                                 slot_ids, rows, cache, key)
+                tok0 = np.asarray(tok0)
+            self._account("prefill", t0)
+            return tok0, cache
         if history:
             raise RuntimeError(
                 "prefix-cache suffix prefill reads resident pool history; "
                 "it cannot run on a disaggregated prefill worker")
-        w = self._next_worker()
         rows_np = np.asarray(rows)
         slots_np = np.asarray(slot_ids)
         blen, n_pages = rows_np.shape
@@ -469,6 +657,10 @@ class DisaggExecutor(_DecodeSide):
         slot_live = slots_np < cache["table"].shape[0]
         tok0, scratch = w.prefill_paged(np.asarray(toks), np.asarray(lens),
                                         slot_live, n_pages, key)
+        # the handoff seam fires after the scratch prefill but BEFORE the
+        # donating adopt: an injected mid-handoff crash leaves the
+        # resident cache valid, and the scheduler re-prefills.
+        self._fire("handoff", wid=w.wid)
 
         t0 = time.perf_counter()
         # fixed-width id vectors (compiled once per batch bucket): row i's

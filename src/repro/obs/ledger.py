@@ -80,6 +80,7 @@ class LaunchRecord:
     phase: str = ""             # speculative phase tag: 'draft' | 'verify'
     window: int = 0             # tokens covered by the launch's batch dim
     worker: str = ""            # serving worker attribution: 'p0' | 'd0' | ''
+    retry: bool = False         # launch belongs to a re-prefill cycle
     #   (a batched verify over k+1 drafted positions is otherwise
     #   indistinguishable from a decode step of the same shape; the
     #   window lets ledger replays split draft from verify cycles
@@ -158,6 +159,7 @@ def record_launch(mode: str, backend: str, *, batch: int, m_rows: int,
     t0 = time.perf_counter() if t_start is None else t_start
     ph, win = current_phase()
     wk = current_worker()
+    rt = current_retry()
     for led in _ledgers():
         rec = record_for(
             mode, backend, batch=batch, m_rows=m_rows, n_bits=n_bits,
@@ -167,6 +169,7 @@ def record_launch(mode: str, backend: str, *, batch: int, m_rows: int,
             plan=plan, traced=traced)
         rec.phase, rec.window = ph, win
         rec.worker = wk
+        rec.retry = rt
         led.records.append(rec)
 
 
@@ -182,18 +185,24 @@ class phase:
             logits, cache = lm.verify(...)
     """
 
-    def __init__(self, tag: str, *, window: int = 1, worker: str = ""):
+    def __init__(self, tag: str, *, window: int = 1, worker: str = "",
+                 retry: bool = False):
         self.tag = tag
         self.window = int(window)
         self.worker = worker
+        self.retry = bool(retry)
 
     def __enter__(self):
         st = getattr(_TLS, "phases", None)
         if st is None:
             st = _TLS.phases = []
-        if not self.worker and st:
-            self.worker = st[-1][2]  # nested phases inherit the worker
-        st.append((self.tag, self.window, self.worker))
+        if st:
+            if not self.worker:
+                self.worker = st[-1][2]  # nested phases inherit the worker
+            # retry propagates down: the scheduler opens the retry phase,
+            # the executor nests its worker phase inside it
+            self.retry = self.retry or st[-1][3]
+        st.append((self.tag, self.window, self.worker, self.retry))
         return self
 
     def __exit__(self, *exc) -> bool:
@@ -212,6 +221,12 @@ def current_worker() -> str:
     single-device server never tags workers)."""
     st = getattr(_TLS, "phases", None)
     return st[-1][2] if st else ""
+
+
+def current_retry() -> bool:
+    """True while a retry-tagged phase is open (re-prefill cycles)."""
+    st = getattr(_TLS, "phases", None)
+    return st[-1][3] if st else False
 
 
 def note_plan(plan) -> None:
@@ -348,6 +363,19 @@ class Ledger:
             agg["cycles"] += r.cycles
             agg["energy_nj"] += r.energy_nj
             agg["tokens"] += r.window
+        return out
+
+    def by_retry(self) -> Dict[bool, dict]:
+        """Aggregate by retry flag — splits first-attempt prefill/decode
+        cycles from re-prefill cycles after a worker crash, so the cost
+        of recovery is separable in recorded traces."""
+        out: Dict[bool, dict] = {}
+        for r in self.records:
+            agg = out.setdefault(r.retry, dict(launches=0, cycles=0,
+                                               energy_nj=0.0))
+            agg["launches"] += 1
+            agg["cycles"] += r.cycles
+            agg["energy_nj"] += r.energy_nj
         return out
 
     def summary(self) -> dict:

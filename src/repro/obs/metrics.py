@@ -180,6 +180,15 @@ class MetricsRegistry:
         appear under the canonical ``name{k="v"}`` key."""
         return {name: m.snapshot() for name, m in sorted(self._metrics.items())}
 
+    def total(self, name: str) -> int:
+        """Sum a counter family across every label set (bare + labeled) —
+        e.g. ``total("lm_requests_failed")`` over all ``reason=`` labels,
+        the conservation-law side the chaos gate checks. Zero if the
+        family was never touched."""
+        return sum(m.value for key, m in self._metrics.items()
+                   if isinstance(m, Counter)
+                   and self._meta.get(key, (key, {}))[0] == name)
+
     def prometheus_text(self) -> str:
         """Prometheus exposition-format dump (histograms as summaries)."""
         lines: List[str] = []

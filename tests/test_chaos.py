@@ -1,0 +1,384 @@
+"""Chaos-hardened serving: deterministic fault plans, recovery, and
+GF(2) integrity on the LM data path.
+
+The invariants under test (``serve_lm.chaos_check``):
+  * no request lost — submitted == completed + shed + failed,
+  * page-pool refcount conservation through crashes/retries/quarantine,
+  * greedy outputs of COMPLETED requests bit-identical to a fault-free
+    run (retries restart from the prompt; greedy decoding is pure),
+  * every injected KV bit-flip is caught by the CRC scrub before a
+    decode step can read it (never silently emits corrupted tokens).
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import load_arch
+from repro.gf2.ops import crc_tag, crc_tags
+from repro.launch.faults import (
+    Fault,
+    FaultPlan,
+    InjectedFault,
+    WorkerCrash,
+)
+from repro.launch.ft import HeartbeatBook
+from repro.launch.paging import PagePool
+from repro.launch.serve_lm import LMServer, Request, chaos_check
+from repro.models import lm
+
+ARCH = "smollm_360m"
+
+
+# -- FaultPlan: pure-schedule semantics (no jax) -----------------------------
+
+
+def test_fault_plan_fires_at_global_count():
+    p = FaultPlan([Fault("error", "prefill", 2)])
+    assert p.fire("prefill") == []
+    assert p.fire("prefill") == []
+    hits = p.fire("prefill")
+    assert [f.kind for f in hits] == ["error"]
+    assert p.fire("prefill") == []  # consumed: fires exactly once
+    assert len(p) == 0
+
+
+def test_fault_plan_per_worker_count_is_independent():
+    p = FaultPlan([Fault("crash", "prefill", 1, worker="p1")])
+    # global dispatches on other workers do not advance p1's counter
+    assert p.fire("prefill", worker="p0") == []
+    assert p.fire("prefill", worker="p1") == []
+    assert p.fire("prefill", worker="p0") == []
+    hits = p.fire("prefill", worker="p1")  # p1's second dispatch
+    assert [f.worker for f in hits] == ["p1"]
+
+
+def test_fault_plan_raise_any():
+    p = FaultPlan([Fault("crash", "handoff", 0, worker="p0"),
+                   Fault("error", "decode", 0)])
+    with pytest.raises(WorkerCrash) as ei:
+        p.raise_any(p.fire("handoff", worker="p0"))
+    assert ei.value.wid == "p0" and ei.value.seam == "handoff"
+    with pytest.raises(InjectedFault):
+        p.raise_any(p.fire("decode"))
+    # a global crash attributes to the dispatching worker
+    p2 = FaultPlan([Fault("crash", "prefill", 0)])
+    with pytest.raises(WorkerCrash) as ei:
+        p2.raise_any(p2.fire("prefill", worker="p3"), wid="p3")
+    assert ei.value.wid == "p3"
+
+
+def test_fault_plan_for_request():
+    p = FaultPlan([Fault("deadline", "request", 7, deadline_s=0.25)])
+    assert p.for_request(3) == []
+    hits = p.for_request(7)
+    assert hits[0].deadline_s == 0.25
+    assert p.for_request(7) == []  # consumed
+
+
+def test_fault_plan_parse_dsl_and_json(tmp_path):
+    spec = "crash:prefill:0:worker=p0;flip:step:3:page=2,bit=5;" \
+           "deadline:request:1:deadline_s=0.5"
+    p = FaultPlan.parse(spec)
+    kinds = sorted(f["kind"] for f in p.as_dicts())
+    assert kinds == ["crash", "deadline", "flip"]
+    flip = next(f for f in p.as_dicts() if f["kind"] == "flip")
+    assert flip["page"] == 2 and flip["bit"] == 5
+    # JSON file round-trip through as_dicts
+    path = tmp_path / "plan.json"
+    path.write_text(json.dumps(p.as_dicts()))
+    p2 = FaultPlan.parse(str(path))
+    assert p2.as_dicts() == p.as_dicts()
+    with pytest.raises(ValueError):
+        FaultPlan.parse("flip:step")  # needs kind:seam:at
+    with pytest.raises(ValueError):
+        FaultPlan.parse("flip:step:0:bogus=1")
+
+
+def test_fault_plan_seeded_is_deterministic():
+    a = FaultPlan.seeded(13, steps=12, pool_pages=16, n_requests=8)
+    b = FaultPlan.seeded(13, steps=12, pool_pages=16, n_requests=8)
+    assert a.as_dicts() == b.as_dicts()
+    assert len(a) >= 1
+    assert a.as_dicts() != FaultPlan.seeded(14, steps=12, pool_pages=16,
+                                            n_requests=8).as_dicts()
+
+
+# -- PagePool: seal / quarantine ---------------------------------------------
+
+
+def test_pool_seal_lifecycle():
+    pool = PagePool(4)
+    pages = pool.alloc(2)
+    pool.seal(pages[0], 0xABCD)
+    assert pool.is_sealed(pages[0]) and not pool.is_sealed(pages[1])
+    assert pool.sealed_tag(pages[0]) == 0xABCD
+    assert pool.sealed_items() == {pages[0]: 0xABCD}
+    pool.decref([pages[0]])  # refcount hits 0: seal pops with the page
+    assert not pool.is_sealed(pages[0])
+    assert pool.free_pages == 3
+
+
+def test_pool_quarantine_never_returns_to_free_list():
+    pool = PagePool(4)
+    pages = pool.alloc(4)
+    assert pool.free_pages == 0
+    pool.quarantine(pages[1])
+    assert pool.capacity == 3 and pool.quarantined == [pages[1]]
+    pool.decref(pages)  # dead page is NOT appended to the free list
+    assert pool.free_pages == 3
+    got = pool.alloc(3)
+    assert got is not None and pages[1] not in got
+    assert pool.alloc(1) is None  # capacity shrank for good
+
+
+# -- GF(2) CRC tags ----------------------------------------------------------
+
+
+def test_crc_tags_detect_single_bit_flips():
+    rng = np.random.default_rng(0)
+    buf = rng.integers(0, 256, 97, dtype=np.uint8)  # odd len: pad path
+    base = crc_tag(buf)
+    for bit in (0, 7, 400, 97 * 8 - 1):  # first, mid-chunk, last
+        bad = buf.copy()
+        bad[bit // 8] ^= np.uint8(1 << (bit % 8))
+        assert crc_tag(bad) != base, f"bit {bit} undetected"
+
+
+def test_crc_tags_batch_matches_scalar():
+    rng = np.random.default_rng(1)
+    bufs = rng.integers(0, 256, (5, 64), dtype=np.uint8)
+    tags = crc_tags(bufs)
+    assert tags.shape == (5,)
+    for i in range(5):
+        assert int(tags[i]) == crc_tag(bufs[i])
+    # equal buffers get equal tags, and tags are content- not row-keyed
+    dup = np.vstack([bufs[0], bufs[0]])
+    t2 = crc_tags(dup)
+    assert int(t2[0]) == int(t2[1]) == int(tags[0])
+
+
+# -- HeartbeatBook -----------------------------------------------------------
+
+
+def test_heartbeat_book_stale_and_forget():
+    hb = HeartbeatBook()
+    hb.beat("p0", now=100.0)
+    hb.beat("p1", now=104.0)
+    assert hb.last("p0") == 100.0
+    assert hb.stale(3.0, now=105.0) == ["p0"]
+    assert hb.stale(10.0, now=105.0) == []
+    hb.forget("p0")
+    assert hb.stale(0.5, now=110.0) == ["p1"]
+    assert hb.last("p0") is None
+
+
+# -- server chaos scenarios --------------------------------------------------
+
+
+def _mk(seed=0, n=4, plen_lo=9, plen_hi=20, max_new=6):
+    rng = np.random.default_rng(seed)
+    cfg = load_arch(ARCH).smoke()
+    return cfg, [Request(i, rng.integers(0, cfg.vocab,
+                                         int(rng.integers(plen_lo, plen_hi))),
+                         max_new) for i in range(n)]
+
+
+def _serve(cfg, params, reqs, **kw):
+    srv = LMServer(cfg, params, slots=2, max_seq=64, paged=True,
+                   page_size=8, **kw)
+    for r in reqs:
+        srv.submit(r)
+    done = srv.run()
+    return srv, done
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Params plus the fault-free greedy reference outputs."""
+    cfg, reqs = _mk()
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    srv, done = _serve(cfg, params, reqs)
+    assert len(done) == len(reqs)
+    return cfg, params, {r.rid: list(r.out) for r in done}
+
+
+def test_chaos_run_preserves_invariants_and_outputs(served):
+    """A multi-fault schedule (dispatch error, pool squeeze, deadline,
+    KV bit-flip) completes with every invariant intact and every
+    COMPLETED request's greedy output bit-identical to fault-free."""
+    cfg, params, ref = served
+    _, reqs = _mk()
+    faults = FaultPlan.parse(
+        "error:prefill:1;squeeze:step:2:pages=6,hold=2;"
+        "deadline:request:3;flip:step:4:bit=9")
+    srv, done = _serve(cfg, params, reqs, faults=faults, max_retries=3,
+                       kv_crc=True, scrub_every=1)
+    assert chaos_check(srv) == []
+    assert len(faults) == 0, "every scheduled fault fired"
+    outcomes = {r.rid: r.outcome for r in reqs}
+    assert outcomes[3] == "shed"  # the deadline fault
+    assert all(o in ("completed", "shed", "failed")
+               for o in outcomes.values())
+    for r in done:  # bit-identity of completed requests
+        assert list(r.out) == ref[r.rid], f"rid {r.rid} diverged"
+    assert srv.metrics.counter("lm_retries").value >= 1
+
+
+def test_kv_bit_flip_is_quarantined_and_recomputed(served):
+    """An injected KV-page flip is detected by the GF(2) scrub BEFORE any
+    decode reads it: the page is quarantined (permanently out of the
+    pool), the mapped request re-prefills, and its final output is
+    bit-identical — corrupted tokens are never emitted."""
+    cfg, params, ref = served
+    _, reqs = _mk()
+    faults = FaultPlan.parse("flip:step:2:bit=3")
+    srv, done = _serve(cfg, params, reqs, faults=faults, max_retries=3,
+                       kv_crc=True, scrub_every=1)
+    assert chaos_check(srv) == []
+    assert srv.metrics.counter("lm_pages_quarantined").value == 1
+    assert srv.pool.capacity == srv.pool.pages - 1
+    assert len(done) == len(reqs)  # everyone completed despite the flip
+    for r in done:
+        assert list(r.out) == ref[r.rid]
+
+
+def test_deadline_sheds_before_admission(served):
+    cfg, params, _ = served
+    _, reqs = _mk()
+    faults = FaultPlan([Fault("deadline", "request", i) for i in (0, 2)])
+    srv, done = _serve(cfg, params, reqs, faults=faults)
+    assert chaos_check(srv) == []
+    assert {r.rid for r in srv.terminal} == {0, 2}
+    assert all(r.outcome == "shed" and not r.out for r in srv.terminal)
+    assert {r.rid for r in done} == {1, 3}
+
+
+def test_retry_budget_exhaustion_fails_terminally(served):
+    """Three back-to-back prefill errors against max_retries=2: the
+    victim fails with a reason instead of looping or vanishing."""
+    cfg, params, _ = served
+    _, reqs = _mk(n=1)
+    faults = FaultPlan([Fault("error", "prefill", i) for i in range(3)])
+    srv, done = _serve(cfg, params, reqs, faults=faults, max_retries=2)
+    assert done == []
+    assert reqs[0].outcome == "failed"
+    assert reqs[0].fail_reason == "prefill"
+    assert reqs[0].retries == 3
+    assert chaos_check(srv) == []
+
+
+def test_decode_error_retries_in_place(served):
+    cfg, params, ref = served
+    _, reqs = _mk()
+    faults = FaultPlan([Fault("error", "decode", 1)])
+    srv, done = _serve(cfg, params, reqs, faults=faults)
+    assert chaos_check(srv) == []
+    assert len(done) == len(reqs)
+    for r in done:
+        assert list(r.out) == ref[r.rid]
+    assert srv.metrics.counter("lm_retries").value == 1
+
+
+def test_prefix_cache_survives_quarantine():
+    """Corrupting a REGISTERED prefix page evicts it from the index, so
+    later identical prompts re-prefill instead of matching poisoned
+    history; refcount conservation holds throughout."""
+    cfg = load_arch(ARCH).smoke()
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    prompt = np.arange(1, 18, dtype=np.int32) % cfg.vocab  # 17 toks, 2 pages
+    reqs = [Request(i, prompt.copy(), 5) for i in range(3)]
+    faults = FaultPlan.parse("flip:step:3:bit=1")
+    srv = LMServer(cfg, params, slots=1, max_seq=64, paged=True,
+                   page_size=8, prefix_cache=True, faults=faults,
+                   max_retries=3, kv_crc=True, scrub_every=1)
+    for r in reqs:
+        srv.submit(r)
+    done = srv.run()
+    assert chaos_check(srv) == []
+    assert srv.metrics.counter("lm_pages_quarantined").value >= 1
+    assert len(done) == 3
+    outs = [list(r.out) for r in done]
+    assert outs[0] == outs[1] == outs[2]  # identical prompts, greedy
+
+
+@pytest.mark.slow
+def test_disagg_crash_restart_then_degrade(monkeypatch):
+    """The acceptance scenario: a prefill worker dies mid-stream twice —
+    first crash rebuilds it (lm_worker_restarts), second drops it and the
+    empty pool flips the executor into degraded decode-mesh prefill
+    (lm_degraded) — and every request still completes."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    from conftest import cpu_subproc_env
+    prog = textwrap.dedent("""
+        import warnings; warnings.filterwarnings("ignore")
+        import jax, numpy as np
+        from repro.configs import load_arch
+        from repro.models import lm
+        from repro.launch.serve_lm import LMServer, Request, chaos_check
+        from repro.launch.faults import FaultPlan
+        cfg = load_arch("smollm_360m").smoke()
+        params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+        faults = FaultPlan.parse(
+            "crash:prefill:0:worker=p0;crash:handoff:0:worker=p0")
+        srv = LMServer(cfg, params, slots=2, max_seq=64, paged=True,
+                       page_size=8, prefill_devices=2, decode_devices=2,
+                       prefill_workers=1, faults=faults, max_retries=3,
+                       max_worker_restarts=1)
+        rng = np.random.default_rng(0)
+        reqs = [Request(i, rng.integers(0, cfg.vocab,
+                                        int(rng.integers(9, 20))), 4)
+                for i in range(3)]
+        for r in reqs: srv.submit(r)
+        done = srv.run()
+        assert chaos_check(srv) == [], chaos_check(srv)
+        assert len(done) == 3, [r.outcome for r in reqs]
+        assert srv.metrics.total("lm_worker_restarts") == 1
+        assert srv.metrics.gauge("lm_degraded").value == 1.0
+        assert srv.ex.degraded and srv.ex.pool == []
+        print("DISAGG_CHAOS_OK")
+    """)
+    env = dict(cpu_subproc_env(),
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "DISAGG_CHAOS_OK" in out.stdout
+
+
+# -- weight-container integrity ----------------------------------------------
+
+
+@pytest.mark.slow
+def test_param_flip_repaired_from_shadow():
+    """A bit-flip in a resident packed container is caught by the scrub
+    and repaired by repacking from the quantization shadow — decoding
+    continues with the original weights (bit-identical outputs)."""
+    from repro.serve.step import convert_params_for_serving
+    cfg = load_arch(ARCH).smoke()
+    cfg = dataclasses.replace(
+        cfg, dtype="float32",
+        ppac=dataclasses.replace(cfg.ppac, enabled=True, weight_bits=4,
+                                 act_bits=8, min_features=32))
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    params = convert_params_for_serving(params, cfg, store_shadow=True)
+    _, reqs = _mk(n=2)
+    ref_srv, ref_done = _serve(cfg, params, reqs, mode="serve")
+    ref = {r.rid: list(r.out) for r in ref_done}
+
+    _, reqs = _mk(n=2)
+    faults = FaultPlan([Fault("flip", "step", 2, param=1, bit=17)])
+    srv, done = _serve(cfg, params, reqs, mode="serve", faults=faults,
+                       max_retries=2, scrub_every=1)
+    assert chaos_check(srv) == []
+    assert srv.metrics.counter("lm_param_scrub_repaired").value >= 1
+    assert len(done) == 2
+    for r in done:
+        assert list(r.out) == ref[r.rid]

@@ -1,0 +1,90 @@
+"""Fault-tolerant training harness (launch/ft.py): heartbeat files,
+stale-heartbeat supervision, elastic crash recovery."""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from conftest import cpu_subproc_env
+from repro.launch.ft import (
+    HEARTBEAT,
+    Coordinator,
+    read_heartbeat,
+    write_heartbeat,
+)
+
+
+def test_heartbeat_round_trip(tmp_path):
+    run_dir = str(tmp_path)
+    assert read_heartbeat(run_dir, 0) is None
+    write_heartbeat(run_dir, 0, step=7)
+    hb = read_heartbeat(run_dir, 0)
+    assert hb["step"] == 7
+    assert abs(hb["time"] - time.time()) < 5.0
+    # atomic replace: no .tmp residue, rewrite wins
+    assert not os.path.exists(
+        os.path.join(run_dir, HEARTBEAT.format(rank=0)) + ".tmp")
+    write_heartbeat(run_dir, 0, step=8)
+    assert read_heartbeat(run_dir, 0)["step"] == 8
+    # a torn/corrupt file reads as None, not an exception
+    with open(os.path.join(run_dir, HEARTBEAT.format(rank=1)), "w") as f:
+        f.write("{not json")
+    assert read_heartbeat(run_dir, 1) is None
+
+
+def test_coordinator_ignores_stale_heartbeats(tmp_path):
+    """Regression: heartbeats left by a PREVIOUS run must not trip the
+    straggler detector of a new coordinator — they are cleared at
+    construction and ``_fresh`` rejects anything pre-dating start."""
+    run_dir = str(tmp_path)
+    # a plausible-but-old heartbeat from a prior run
+    path = os.path.join(run_dir, HEARTBEAT.format(rank=0))
+    with open(path, "w") as f:
+        json.dump({"step": 12, "time": time.time() - 3600.0}, f)
+    coord = Coordinator(run_dir, ["true"], straggler_timeout=0.1)
+    assert not os.path.exists(path), "stale heartbeat file not cleared"
+    # even if a file with an old timestamp reappears, _fresh rejects it
+    assert coord._fresh({"step": 12, "time": coord.start_time - 1.0}) is None
+    assert coord._fresh(None) is None
+    fresh = {"step": 13, "time": coord.start_time + 1.0}
+    assert coord._fresh(fresh) == fresh
+
+
+def test_coordinator_restarts_use_clean_cmd(tmp_path):
+    """First spawn runs worker_cmd (with the injected crash); every
+    restart runs clean_cmd so the crash is not re-injected."""
+    coord = Coordinator(str(tmp_path), ["crashy"], clean_cmd=["clean"])
+    seen = []
+    import repro.launch.ft as ft
+    orig = ft.subprocess.Popen
+    try:
+        ft.subprocess.Popen = lambda cmd, **kw: seen.append(cmd)
+        coord._spawn()
+        coord.restarts = 1
+        coord._spawn()
+        coord.clean_cmd = None
+        coord._spawn()
+    finally:
+        ft.subprocess.Popen = orig
+    assert seen == [["crashy"], ["clean"], ["crashy"]]
+
+
+@pytest.mark.slow
+def test_crash_restart_converges(tmp_path):
+    """End-to-end recovery demo: the worker SIGKILLs itself mid-run, the
+    coordinator restarts it clean from the latest checkpoint, and the job
+    finishes rc=0 after exactly one restart."""
+    run_dir = str(tmp_path / "run")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.ft", "--run-dir", run_dir,
+         "--steps", "12", "--ckpt-every", "4", "--kill-at", "7",
+         "--straggler-timeout", "120"],
+        env=cpu_subproc_env(), capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-2000:])
+    assert "injected crash at step 7" in out.stdout
+    assert "restart 1/" in out.stdout
+    assert "finished rc=0 restarts=1" in out.stdout
